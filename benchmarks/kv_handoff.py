@@ -1,0 +1,77 @@
+"""KV handoff: zero-copy pointers vs cross-pod copy — the paper's core
+claim, quantified at TPU-pod scale.
+
+In-pod (CXL analogue):   RPC payload = block table = 8 B/page.
+Cross-pod (RDMA analogue): gather + wire + scatter of the pages
+                           themselves (scope_copy kernel).
+
+Reported per assigned arch at decode_32k geometry: bytes avoided per
+request handoff and the measured CPU-side copy cost (the wire copy the
+zero-copy path never pays). Collective-level numbers for the production
+mesh come from the dry-run artifacts (§Dry-run, multipod).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.configs import ARCH_IDS, get_config
+
+
+def bench() -> List[Tuple[str, float, str]]:
+    rows = []
+    page_tokens = 64
+    seq = 32768
+    for arch in ("yi-9b", "gemma3-12b", "qwen3-moe-30b-a3b", "mamba2-1.3b"):
+        cfg = get_config(arch)
+        n_pages = seq // page_tokens
+        if cfg.family == "ssm":
+            # state handoff: conv tails + SSD state, O(1) in context length!
+            state_bytes = (
+                cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * 4
+                + (cfg.ssm_conv - 1)
+                * (cfg.d_inner + 2 * cfg.ssm_state) * 2) * cfg.num_layers
+            ptr_bytes = 8 * cfg.num_layers
+            rows.append((f"handoff_{arch}", float(ptr_bytes),
+                         f"state={state_bytes/1e6:.2f}MB vs "
+                         f"{ptr_bytes}B ptrs (O(1) in ctx!)"))
+            continue
+        kv_layers = cfg.num_layers
+        if cfg.attn_layer_period:
+            kv_layers = cfg.num_layers // cfg.attn_layer_period
+        kv_bytes = (2 * kv_layers * seq * cfg.num_kv_heads
+                    * cfg.head_dim * 2)
+        ptr_bytes = 8 * n_pages
+        rows.append((f"handoff_{arch}", float(ptr_bytes),
+                     f"kv={kv_bytes/1e6:.1f}MB vs {ptr_bytes}B ptrs "
+                     f"({kv_bytes/ptr_bytes:,.0f}x)"))
+
+    # measured copy cost of the fallback path at small scale
+    import dataclasses
+
+    import jax
+
+    from repro.core.orchestrator import Orchestrator
+    from repro.serving.kv_pool import (
+        PagedKVPool,
+        PoolConfig,
+        transfer_pages_cross_pod,
+    )
+
+    cfg = dataclasses.replace(
+        get_config("yi-9b"), num_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=1024)
+    orch = Orchestrator()
+    pc = PoolConfig(num_pages=64, page_tokens=16, max_pages_per_seq=16)
+    a = PagedKVPool(orch, cfg, pc, owner_pid=1)
+    b = PagedKVPool(orch, cfg, pc, owner_pid=2)
+    pages = list(range(8, 16))
+    t0 = time.perf_counter()
+    n = 20
+    for _ in range(n):
+        moved = transfer_pages_cross_pod(a, b, pages, pages, backend="ref")
+    dt = (time.perf_counter() - t0) / n * 1e6
+    rows.append(("handoff_fallback_copy_8pages", dt,
+                 f"{moved:,}B moved vs {8*len(pages)}B ptrs"))
+    return rows

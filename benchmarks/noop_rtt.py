@@ -1,0 +1,100 @@
+"""No-op RPC round-trip latency + throughput — paper Table 1a.
+
+Rows mirror the paper's columns:
+  rpcool               zero-copy channel (CXL analogue, in-pod)
+  rpcool_secure        + seal + cached sandbox
+  rpcool_fallback      two-node DSM transport (RDMA analogue, §4.7)
+  serial               serialize+copy+deserialize (gRPC/Thrift analogue)
+
+Latency uses the inline (two-core emulation) path — CPython thread
+handoff would otherwise dominate and measure the OS, not the framework.
+Throughput uses the threaded listen loop with a pipelined window, which
+is how the paper measures theirs.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core import Orchestrator, RPC
+from repro.core import serial
+from repro.core.fallback import FallbackConnection
+
+
+def _rtt(fn, n: int, warmup: int = 200) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench(n: int = 20_000) -> List[Tuple[str, float, str]]:
+    rows = []
+    orch = Orchestrator()
+    ch = RPC(orch, pid=1).open("noop")
+    ch.add(1, lambda ctx, a: 0)
+    conn = RPC(orch, pid=2).connect("noop")
+
+    # -- rpcool (CXL-mode) -------------------------------------------------
+    rtt = _rtt(lambda: conn.call_inline(1), n)
+    rows.append(("noop_rtt_rpcool", rtt, "zero-copy"))
+
+    # -- rpcool secure (seal + cached sandbox) -------------------------------
+    pool = conn.scope_pool(1)
+    scope = pool.pop()
+    arg = scope.write_bytes(b"x" * 64, pid=conn.client_pid)
+
+    def secure_call():
+        conn.call_inline(1, arg, scope=scope, sealed=True, sandboxed=True)
+
+    rtt_s = _rtt(secure_call, n // 4)
+    rows.append(("noop_rtt_rpcool_secure", rtt_s, "seal+sandbox"))
+
+    # -- fallback (RDMA-mode) -------------------------------------------------
+    fb = FallbackConnection(num_pages=64, link_latency_us=3.0)
+    fb.add(1, lambda ctx, a: int(bytes(ctx.read(a, 8))[0]))  # server READS
+    fsc = fb.create_scope(4096)
+    farg = fb.new_bytes(b"x" * 64)
+
+    def fb_call():
+        fb.client.write(farg, b"y" * 8, pid=fb.client_pid)  # dirty the page
+        fb.call(1, farg, scope=fsc)  # server read faults it back over
+
+    rtt_f = _rtt(fb_call, n // 10)
+    rows.append(("noop_rtt_fallback", rtt_f,
+                 f"page ping-pong, {fb.link.page_faults} faults"))
+
+    # -- serializing baseline --------------------------------------------------
+    ser = serial.SerialChannel()
+    ser.add(1, lambda obj: 0)
+    th = ser.listen_in_thread()
+    payload = {"op": "noop", "data": list(range(16))}
+    try:
+        rtt_g = _rtt(lambda: ser.call(1, payload), n // 10)
+    finally:
+        ser.stop()
+        th.join(timeout=1)
+    rows.append(("noop_rtt_serial", rtt_g, "encode+copy+decode"))
+
+    # -- throughput (threaded, pipelined window) ---------------------------
+    th_listen = ch.listen_in_thread()
+    try:
+        W, M = 64, 30_000
+        toks = []
+        t0 = time.perf_counter()
+        for _ in range(M):
+            toks.append(conn.call_async(1))
+            if len(toks) >= W:
+                conn.wait(toks.pop(0))
+        for t in toks:
+            conn.wait(t)
+        dt = time.perf_counter() - t0
+    finally:
+        ch.stop()
+        th_listen.join(timeout=2)
+    rows.append(("noop_throughput_rpcool", dt / M * 1e6,
+                 f"{M/dt/1000:.1f} K req/s"))
+    return rows

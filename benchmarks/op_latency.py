@@ -1,0 +1,150 @@
+"""RPCool operation latencies — paper Table 1b.
+
+Rows reproduce the table's sections:
+  channel ops       create / destroy / connect
+  sandbox ops       cached enter+exit (1 page, 1024 pages), multi-sandbox,
+                    uncached (32 regions through 14 keys)
+  seal/release      standard vs batched, 1 page and 1024 pages
+  memcpy            1 page / 1024 pages + the seal-vs-memcpy crossover
+
+The heap attaches an eager device mirror so every permission epoch pays
+the real TLB-shootdown analogue (a device push) — this is what batching
+amortizes, exactly as in §5.3.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import Orchestrator, RPC, SandboxManager, Scope, SealManager, SharedHeap
+
+
+def _t(fn, n: int, warmup: int = 20) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench() -> List[Tuple[str, float, str]]:
+    rows = []
+
+    # -- channel ops ------------------------------------------------------
+    orch = Orchestrator()
+    i = [0]
+
+    def create_destroy():
+        ch = RPC(orch, pid=1).open(f"ch{i[0]}")
+        i[0] += 1
+        ch.destroy()
+
+    rows.append(("channel_create_destroy", _t(create_destroy, 200),
+                 "open+register+teardown"))
+
+    ch = RPC(orch, pid=1).open("connbench")
+
+    def connect():
+        conn = ch.accept(client_pid=2)
+        conn.close()
+
+    rows.append(("channel_connect", _t(connect, 200), "heap map + lease"))
+
+    # -- sandbox ops ------------------------------------------------------
+    heap = SharedHeap(1, 8192)
+    sm = SandboxManager(heap)
+    p1 = heap.alloc_pages(1)
+    p1k = heap.alloc_pages(1024)
+
+    with sm.enter(p1, 1):
+        pass  # warm the cache slot
+
+    rows.append(("sandbox_cached_enter_exit_1p",
+                 _t(lambda: _enter_exit(sm, p1, 1), 5000),
+                 "PKRU-swap analogue"))
+    with sm.enter(p1k, 1024):
+        pass
+    rows.append(("sandbox_cached_enter_exit_1024p",
+                 _t(lambda: _enter_exit(sm, p1k, 1024), 5000),
+                 "size-independent"))
+
+    # 8 distinct cached regions, no key reassignment
+    pages8 = [heap.alloc_pages(1) for _ in range(8)]
+    for p in pages8:
+        with sm.enter(p, 1):
+            pass
+
+    def multi8():
+        for p in pages8:
+            _enter_exit(sm, p, 1)
+
+    rows.append(("sandbox_cached_multi8_per_box", _t(multi8, 500) / 8,
+                 "8 boxes, all cached"))
+
+    # 32 regions cycling through 14 keys → constant reassignment
+    pages32 = [heap.alloc_pages(1) for _ in range(32)]
+
+    def uncached():
+        for p in pages32:
+            _enter_exit(sm, p, 1)
+
+    rows.append(("sandbox_uncached_per_box", _t(uncached, 30) / 32,
+                 "key reassignment (mprotect-class)"))
+
+    # -- seal / release -----------------------------------------------------
+    heap2 = SharedHeap(2, 8192)
+    heap2.attach_device_perm(eager=True)   # TLB-shootdown analogue ON
+    sm2 = SealManager(heap2, capacity=8192, batch_threshold=256)
+    s1 = Scope(heap2, heap2.alloc_pages(1, 1), 1, owner=1)
+    s1k = Scope(heap2, heap2.alloc_pages(1024, 1), 1024, owner=1)
+
+    def seal_std(scope):
+        idx = sm2.seal(scope, holder=1)
+        sm2.mark_complete(idx)
+        sm2.release(idx, holder=1)
+
+    def seal_batch(scope):
+        idx = sm2.seal(scope, holder=1)
+        sm2.mark_complete(idx)
+        sm2.release_batched(idx, holder=1)
+
+    t_std_1 = _t(lambda: seal_std(s1), 1500)
+    rows.append(("seal_std_release_1p", t_std_1, "2 epochs/op"))
+    rows.append(("seal_std_release_1024p", _t(lambda: seal_std(s1k), 1500),
+                 "page-count independent"))
+    t_b1 = _t(lambda: seal_batch(s1), 1500)
+    sm2.flush()
+    rows.append(("seal_batch_release_1p", t_b1, "~1 epoch/op amortized"))
+    t_b1k = _t(lambda: seal_batch(s1k), 1500)
+    sm2.flush()
+    rows.append(("seal_batch_release_1024p", t_b1k, ""))
+
+    # -- memcpy vs seal+sandbox crossover ----------------------------------
+    src = np.random.default_rng(0).integers(
+        0, 255, 1024 * 4096, dtype=np.uint8)
+    dst = np.empty_like(src)
+
+    def memcpy(pages):
+        dst[: pages * 4096] = src[: pages * 4096]
+
+    t_m1 = _t(lambda: memcpy(1), 3000)
+    t_m1k = _t(lambda: memcpy(1024), 300)
+    rows.append(("memcpy_1p", t_m1, "4 KiB"))
+    rows.append(("memcpy_1024p", t_m1k, "4 MiB"))
+
+    # crossover: smallest page count where seal+sandbox beats memcpy
+    t_secure = t_std_1 + _t(lambda: _enter_exit(sm, p1, 1), 3000)
+    t_per_page = max(1e-3, (t_m1k - t_m1) / 1023)
+    crossover = max(1, int(np.ceil((t_secure - t_m1) / t_per_page)) + 1)
+    rows.append(("seal_vs_memcpy_crossover_pages", float(crossover),
+                 f"secure={t_secure:.1f}us; paper crossover=2p"))
+    return rows
+
+
+def _enter_exit(sm, page, count):
+    with sm.enter(page, count):
+        pass

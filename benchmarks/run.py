@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Roofline terms come from the
+dry-run artifacts (see repro.roofline.analysis / EXPERIMENTS.md) — this
+harness measures the host-side RPCool control plane for real.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    suites = []
+    from . import cooldb, kv_handoff, microservices, noop_rtt, op_latency, ycsb_kv
+
+    suites = [
+        ("noop_rtt (Table 1a)", noop_rtt.bench),
+        ("op_latency (Table 1b)", op_latency.bench),
+        ("cooldb (Fig. 11)", cooldb.bench),
+        ("ycsb_kv (Figs. 9/10)", ycsb_kv.bench),
+        ("microservices (Figs. 12/13)", microservices.bench),
+        ("kv_handoff (pod-scale)", kv_handoff.bench),
+    ]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, fn in suites:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived}")
+        print(f"# {title} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""YCSB over an RPCool-backed KV store — paper Figs. 9/10 (§6.3).
+
+A memcached-shaped store (no SCAN for the memcached variant, per the
+paper's note) served over (a) RPCool zero-copy channels and (b) the
+serializing transport (UNIX-socket/TCP analogue). Workload mixes follow
+YCSB A–F; values are small non-pointer-rich blobs, so like the paper's
+memcached integration the store uses plain copies (memcpy beats
+seal+sandbox below the crossover) — the win measured here is the
+transport, exactly as in Fig. 9.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import Orchestrator, RPC, create_scope
+from repro.core import serial
+
+# YCSB mixes: (read, update, insert, rmw, scan)
+WORKLOADS = {
+    "A": (0.50, 0.50, 0.00, 0.00, 0.00),
+    "B": (0.95, 0.05, 0.00, 0.00, 0.00),
+    "C": (1.00, 0.00, 0.00, 0.00, 0.00),
+    "D": (0.95, 0.00, 0.05, 0.00, 0.00),
+    "E": (0.00, 0.00, 0.05, 0.00, 0.95),  # scan — mongodb variant only
+    "F": (0.50, 0.00, 0.00, 0.50, 0.00),
+}
+
+FN_GET, FN_PUT, FN_SCAN = 1, 2, 3
+
+
+class RpcoolKV:
+    """Server-side store; values live in the channel's shared heap."""
+
+    def __init__(self, heap_pages: int = 1 << 14):
+        self.orch = Orchestrator()
+        self.ch = RPC(self.orch, pid=1).open("kv", heap_pages=heap_pages)
+        self.conn = RPC(self.orch, pid=2).connect("kv")
+        self.store: Dict[int, bytes] = {}
+        self.keys: List[int] = []
+        self.ch.add(FN_GET, self._get)
+        self.ch.add(FN_PUT, self._put)
+        self.ch.add(FN_SCAN, self._scan)
+        self.scope = self.conn.create_scope(1 << 16)
+
+    def _get(self, ctx, arg):
+        key = int(arg)  # small scalars ride in the descriptor
+        v = self.store.get(key)
+        return 1 if v is not None else 0
+
+    def _put(self, ctx, arg):
+        raw = bytes(ctx.read(arg, 8 + 100))
+        key = int.from_bytes(raw[:8], "little")
+        self.store[key] = raw[8:]
+        if key not in self.store:
+            self.keys.append(key)
+        return 1
+
+    def _scan(self, ctx, arg):
+        key = int(arg)
+        n = 0
+        for k in sorted(self.store)[:50]:
+            n += len(self.store[k])
+        return n
+
+    def op(self, kind: str, key: int, value: bytes = b"") -> None:
+        if kind == "read":
+            self.conn.call_inline(FN_GET, key)
+        elif kind in ("update", "insert"):
+            self.scope.reset()
+            a = self.scope.write_bytes(key.to_bytes(8, "little") + value,
+                                       pid=2)
+            self.conn.call_inline(FN_PUT, a)
+        elif kind == "rmw":
+            self.conn.call_inline(FN_GET, key)
+            self.scope.reset()
+            a = self.scope.write_bytes(key.to_bytes(8, "little") + value,
+                                       pid=2)
+            self.conn.call_inline(FN_PUT, a)
+        else:  # scan
+            self.conn.call_inline(FN_SCAN, key)
+
+
+class SerialKV:
+    def __init__(self):
+        self.ch = serial.SerialChannel()
+        self.store: Dict[int, bytes] = {}
+        self.ch.add(FN_GET, lambda o: self.store.get(o["k"], b""))
+        self.ch.add(FN_PUT,
+                    lambda o: self.store.__setitem__(o["k"], o["v"]) or 1)
+        self.ch.add(FN_SCAN, lambda o: sum(
+            len(v) for k, v in sorted(self.store.items())[:50]))
+        self.th = self.ch.listen_in_thread()
+
+    def op(self, kind: str, key: int, value: bytes = b"") -> None:
+        if kind == "read":
+            self.ch.call(FN_GET, {"k": key})
+        elif kind in ("update", "insert"):
+            self.ch.call(FN_PUT, {"k": key, "v": value})
+        elif kind == "rmw":
+            self.ch.call(FN_GET, {"k": key})
+            self.ch.call(FN_PUT, {"k": key, "v": value})
+        else:
+            self.ch.call(FN_SCAN, {"k": key})
+
+    def close(self):
+        self.ch.stop()
+        self.th.join(timeout=1)
+
+
+def _run(store, workload: str, n_keys: int, n_ops: int,
+         rng: np.random.Generator, scan_ok: bool) -> float:
+    value = bytes(100)
+    for k in range(n_keys):   # load phase
+        store.op("insert", k, value)
+    r, u, ins, rmw, sc = WORKLOADS[workload]
+    if sc and not scan_ok:
+        return float("nan")
+    kinds = rng.choice(
+        ["read", "update", "insert", "rmw", "scan"],
+        p=[r, u, ins, rmw, sc], size=n_ops)
+    keys = rng.zipf(1.2, n_ops) % n_keys
+    t0 = time.perf_counter()
+    for kind, key in zip(kinds, keys):
+        store.op(str(kind), int(key), value)
+    return time.perf_counter() - t0
+
+
+def bench(n_keys: int = 1000, n_ops: int = 5000
+          ) -> List[Tuple[str, float, str]]:
+    rows = []
+    for wl in ("A", "B", "C", "F", "E"):
+        rng = np.random.default_rng(1)
+        kv = RpcoolKV()
+        dt = _run(kv, wl, n_keys, n_ops, rng, scan_ok=True)
+        rows.append((f"ycsb_{wl}_rpcool", dt / n_ops * 1e6,
+                     f"{n_ops/dt/1000:.1f} K ops/s"))
+
+        rng = np.random.default_rng(1)
+        sk = SerialKV()
+        try:
+            dt_s = _run(sk, wl, n_keys, n_ops, rng, scan_ok=True)
+        finally:
+            sk.close()
+        rows.append((f"ycsb_{wl}_serial", dt_s / n_ops * 1e6,
+                     f"speedup={dt_s/dt:.2f}x"))
+    return rows

@@ -1,0 +1,82 @@
+"""Quickstart: the RPCool core API in five minutes.
+
+Mirrors the paper's Fig. 6 ping-pong, then shows what the paper is
+actually about: sending a *pointer-rich document* as an RPC argument with
+zero serialization, sealed against sender tampering and processed inside
+a sandbox.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+from repro.core import (
+    Orchestrator,
+    RPC,
+    RpcError,
+    SealedPageError,
+)
+from repro.core import containers as C
+
+
+def main() -> None:
+    orch = Orchestrator()
+
+    # ---- server (Fig. 6 left) -------------------------------------------
+    server = RPC(orch, pid=100)
+    channel = server.open("mychannel")
+
+    def process_fn(ctx, arg):
+        doc = C.to_python(ctx, (C.T_MAP, arg))   # pointer chase, no parse
+        assert doc["op"] == "ping"
+        return doc["n"] + 1
+
+    channel.add(100, process_fn)
+
+    # ---- client (Fig. 6 right) ------------------------------------------
+    client = RPC(orch, pid=200)
+    conn = client.connect("mychannel")
+
+    scope = conn.create_scope(4096)
+    root = C.build_doc(scope, {"op": "ping", "n": 41,
+                               "payload": list(range(32))})
+
+    # zero-copy RPC: the argument is a pointer into shared memory
+    ret = conn.call_inline(100, root, scope=scope, sealed=True,
+                           sandboxed=True)
+    print(f"sealed+sandboxed RPC returned {ret}")
+
+    # while sealed, the sender cannot tamper with in-flight args (§4.5):
+    scope2 = conn.create_scope(4096)
+    root2 = C.build_doc(scope2, {"op": "ping", "n": 1})
+    idx = conn.seals.seal(scope2, holder=conn.client_pid)
+    try:
+        conn.heap.write(root2, b"tamper", pid=conn.client_pid)
+    except SealedPageError as e:
+        print(f"sender tamper blocked: {e}")
+    conn.seals.mark_complete(idx)
+    conn.seals.release(idx, holder=conn.client_pid)
+
+    # a wild pointer is trapped by the sandbox, not the server (§4.4):
+    def evil_fn(ctx, arg):
+        from repro.core import addr as ga
+        return C.read_str(ctx, ga.pack(77, 0, 0))  # another heap!
+
+    channel.add(101, evil_fn)
+    try:
+        conn.call_inline(101, root, scope=scope, sandboxed=True)
+    except RpcError as e:
+        print(f"wild pointer → RPC error status {e.status} (E_SANDBOX)")
+
+    # throughput, RPCool-style: pipelined no-ops
+    channel.add(1, lambda ctx, a: 0)
+    N = 20_000
+    t0 = time.perf_counter()
+    for _ in range(N):
+        conn.call_inline(1)
+    dt = time.perf_counter() - t0
+    print(f"no-op RTT {dt/N*1e6:.2f} µs  ({N/dt/1000:.0f}K req/s inline)")
+
+
+if __name__ == "__main__":
+    main()

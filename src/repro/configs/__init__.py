@@ -1,0 +1,57 @@
+"""Assigned architecture configs (``--arch <id>``) + smoke variants.
+
+Each module defines ``CONFIG`` (the exact published config) and
+``smoke()`` (a reduced same-family variant for CPU tests). The registry
+maps arch ids to modules.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from ..models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "mamba2_1p3b",
+    "qwen2_vl_7b",
+    "gemma3_12b",
+    "yi_9b",
+    "yi_6b",
+    "olmo_1b",
+    "qwen3_moe_30b_a3b",
+    "granite_moe_1b_a400m",
+    "whisper_base",
+    "jamba_v01_52b",
+]
+
+# public --arch aliases (hyphenated, as assigned)
+ALIASES: Dict[str, str] = {
+    "mamba2-1.3b": "mamba2_1p3b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "gemma3-12b": "gemma3_12b",
+    "yi-9b": "yi_9b",
+    "yi-6b": "yi_6b",
+    "olmo-1b": "olmo_1b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "whisper-base": "whisper_base",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+}
+
+
+def _module(arch: str):
+    key = ALIASES.get(arch, arch).replace("-", "_").replace(".", "p")
+    return importlib.import_module(f"repro.configs.{key}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

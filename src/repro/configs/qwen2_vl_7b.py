@@ -1,0 +1,41 @@
+"""qwen2-vl-7b backbone — M-RoPE, GQA [arXiv:2409.12191].
+
+28 layers, d_model 3584, 28 heads (GQA kv=4, head_dim 128), d_ff 18944,
+vocab 152064. Modality frontend is a STUB: input_specs provides M-RoPE
+position triples (3,B,S); patch embeddings arrive as ordinary tokens of
+the backbone. Full attention ⇒ long_500k skipped.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    rope_kind="mrope",
+    rope_theta=1e6,
+    mrope_sections=(16, 24, 24),
+    attn_bias=True,
+    norm_kind="rmsnorm",
+    norm_eps=1e-6,
+    mlp_kind="swiglu",
+    tie_embeddings=False,
+    max_seq_len=32768,
+    sub_quadratic=False,
+)
+
+
+def smoke() -> ModelConfig:
+    from dataclasses import replace
+
+    return replace(
+        CONFIG, name="qwen2vl-smoke", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128,
+        mrope_sections=(2, 3, 3),
+    )

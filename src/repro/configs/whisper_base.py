@@ -1,0 +1,42 @@
+"""whisper-base backbone — encoder-decoder [arXiv:2212.04356].
+
+6 encoder + 6 decoder layers, d_model 512, 8 heads (MHA kv=8, head_dim
+64), d_ff 2048, vocab 51865. The conv frontend is a STUB: input_specs
+provides precomputed frame embeddings (B, 1500, 512); sinusoidal
+positions, parametric LayerNorm, GELU MLP. Decoder cross-attention KV is
+computed once at prefill and sealed for the generation (the RPCool
+immutable-memory pattern). Full attention ⇒ long_500k skipped.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,       # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    rope_kind="none",   # whisper uses absolute positions (sinusoid here)
+    norm_kind="layernorm",
+    norm_eps=1e-5,
+    mlp_kind="gelu",
+    encoder_layers=6,
+    encoder_seq=1500,
+    tie_embeddings=True,
+    max_seq_len=32768,  # shape-table driven; real whisper caps at 448
+    sub_quadratic=False,
+)
+
+
+def smoke() -> ModelConfig:
+    from dataclasses import replace
+
+    return replace(
+        CONFIG, name="whisper-smoke", num_layers=2, encoder_layers=2,
+        d_model=64, num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+        vocab_size=128, encoder_seq=32,
+    )

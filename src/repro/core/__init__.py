@@ -1,0 +1,61 @@
+"""RPCool core — the paper's contribution as a composable library.
+
+Layers (bottom-up):
+  addr        globally-unique packed addresses (orchestrator-assigned VAs)
+  heap        SharedHeap: paged shared memory + permissions + epochs
+  scope       contiguous page ranges bounding one RPC's arguments
+  seal        Fig. 8 seal()/release() protocol + batched release
+  sandbox     MPK-analogue pointer confinement, 14 cached sandboxes
+  containers  heap-resident pointer-rich objects (Boost.Interprocess analogue)
+  channel     channels/connections/RPC rings + §5.8 busy-wait policy
+  orchestrator leases, quotas, registry, failure GC
+  fallback    two-node software-coherent DSM (RDMA/DCN analogue)
+  serial      serializing baseline transport (gRPC analogue, benchmarks)
+"""
+
+from . import addr
+from .errors import (
+    AllocationError,
+    ChannelError,
+    InvalidPointer,
+    LeaseExpired,
+    OwnershipMiss,
+    QuotaExceeded,
+    RPCoolError,
+    SandboxViolation,
+    SealedPageError,
+    SealViolation,
+)
+from .heap import PERM_SEALED, SharedHeap
+from .scope import Scope, ScopePool, create_scope
+from .seal import SealManager, S_COMPLETE, S_RELEASED, S_SEALED
+from .sandbox import MAX_CACHED, Sandbox, SandboxManager
+from .orchestrator import Lease, Orchestrator
+from .channel import (
+    BusyWaitPolicy,
+    Channel,
+    Connection,
+    RPC,
+    RpcError,
+    ServerCtx,
+    F_SANDBOXED,
+    F_SEALED,
+)
+from .fallback import DSMLink, DSMNode, FallbackConnection
+from . import containers, serial
+
+__all__ = [
+    "addr",
+    "AllocationError", "ChannelError", "InvalidPointer", "LeaseExpired",
+    "OwnershipMiss", "QuotaExceeded", "RPCoolError", "SandboxViolation",
+    "SealedPageError", "SealViolation",
+    "PERM_SEALED", "SharedHeap",
+    "Scope", "ScopePool", "create_scope",
+    "SealManager", "S_COMPLETE", "S_RELEASED", "S_SEALED",
+    "MAX_CACHED", "Sandbox", "SandboxManager",
+    "Lease", "Orchestrator",
+    "BusyWaitPolicy", "Channel", "Connection", "RPC", "RpcError",
+    "ServerCtx", "F_SANDBOXED", "F_SEALED",
+    "DSMLink", "DSMNode", "FallbackConnection",
+    "containers", "serial",
+]

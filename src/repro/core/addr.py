@@ -1,0 +1,100 @@
+"""Global address space for RPCool heaps.
+
+The paper's orchestrator assigns every heap a cluster-unique virtual address
+so that native pointers stored inside one process remain valid inside any
+other process that maps the heap (§4.1 "Shared memory heaps").
+
+On TPU we do not have raw virtual addresses; the analogue is a packed 64-bit
+integer ``GlobalAddr``::
+
+    [ heap_id : 16 | page : 24 | offset : 24 ]
+
+* ``heap_id`` is assigned by the orchestrator and unique per cluster.
+* ``page`` indexes the heap's fixed-size page array (device pool rows or the
+  host byte-buffer stripes).
+* ``offset`` is a byte offset within the page.
+
+Because the pool layout is identical on every host in a pod (same compiled
+program, same mesh), a ``GlobalAddr`` minted by one process dereferences to
+the same object on every other process — exactly the property CXL-unique VAs
+buy the paper.
+
+``NULL`` is all-ones, never a valid address (heap_id 0xFFFF is reserved).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+HEAP_BITS = 16
+PAGE_BITS = 24
+OFF_BITS = 24
+
+MAX_HEAPS = (1 << HEAP_BITS) - 1  # top id reserved for NULL
+MAX_PAGES = 1 << PAGE_BITS
+MAX_OFFSET = 1 << OFF_BITS
+
+NULL = (1 << (HEAP_BITS + PAGE_BITS + OFF_BITS)) - 1
+
+
+class Addr(NamedTuple):
+    heap_id: int
+    page: int
+    offset: int
+
+    def pack(self) -> int:
+        return pack(self.heap_id, self.page, self.offset)
+
+
+def pack(heap_id: int, page: int, offset: int = 0) -> int:
+    if not (0 <= heap_id < MAX_HEAPS):
+        raise ValueError(f"heap_id out of range: {heap_id}")
+    if not (0 <= page < MAX_PAGES):
+        raise ValueError(f"page out of range: {page}")
+    if not (0 <= offset < MAX_OFFSET):
+        raise ValueError(f"offset out of range: {offset}")
+    return (heap_id << (PAGE_BITS + OFF_BITS)) | (page << OFF_BITS) | offset
+
+
+def unpack(addr: int) -> Addr:
+    if addr == NULL:
+        raise ValueError("dereference of NULL GlobalAddr")
+    return Addr(
+        heap_id=(addr >> (PAGE_BITS + OFF_BITS)) & ((1 << HEAP_BITS) - 1),
+        page=(addr >> OFF_BITS) & ((1 << PAGE_BITS) - 1),
+        offset=addr & ((1 << OFF_BITS) - 1),
+    )
+
+
+def is_null(addr: int) -> bool:
+    return addr == NULL
+
+
+def heap_of(addr: int) -> int:
+    return (addr >> (PAGE_BITS + OFF_BITS)) & ((1 << HEAP_BITS) - 1)
+
+
+def page_of(addr: int) -> int:
+    return (addr >> OFF_BITS) & ((1 << PAGE_BITS) - 1)
+
+
+def offset_of(addr: int) -> int:
+    return addr & ((1 << OFF_BITS) - 1)
+
+
+def add(addr: int, nbytes: int, page_size: int) -> int:
+    """Pointer arithmetic within a heap: advance ``addr`` by ``nbytes``.
+
+    Carries across page boundaries assuming pages are contiguous in the
+    heap's linear byte space (true for scopes, which are contiguous page
+    ranges — §5.1).
+    """
+    a = unpack(addr)
+    linear = a.page * page_size + a.offset + nbytes
+    return pack(a.heap_id, linear // page_size, linear % page_size)
+
+
+def linear(addr: int, page_size: int) -> int:
+    """Byte offset of ``addr`` within its heap's linear byte space."""
+    a = unpack(addr)
+    return a.page * page_size + a.offset

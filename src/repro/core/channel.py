@@ -1,0 +1,486 @@
+"""Channels, connections, and the RPC data path (§4.2, Fig. 6).
+
+A server ``open``s a channel (registered with the orchestrator under a
+hierarchical name); clients ``connect`` and receive a ``Connection`` whose
+shared-memory heap holds both the RPC argument objects *and* the request
+descriptor ring. An RPC is: client writes a descriptor (fn id, GlobalAddr
+of the args, seal index, flags) into the ring and the server — polling
+under the §5.8 adaptive busy-wait policy — dereferences the pointer
+directly. **No argument bytes ever move**; that is the paper's entire
+point.
+
+The ring slots live in heap bytes (so the fallback transport can migrate
+them like any page) but are accessed through raw views: rings are
+daemon-owned and never sealed, so the checked load/store path would only
+add cost without adding safety — same reasoning as the paper running the
+descriptor buffer outside the seal machinery.
+
+Threading model: one client per connection (the paper's model — each
+client gets its own connection+ring); the server may serve many
+connections from one listen loop.
+"""
+
+from __future__ import annotations
+
+import struct
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from . import addr as gaddr
+from .errors import ChannelError, SandboxViolation, SealViolation
+from .heap import SharedHeap
+from .orchestrator import Orchestrator
+from .sandbox import SandboxManager
+from .scope import Scope, ScopePool, create_scope
+from .seal import SealManager
+
+# request-ring slot: seq, fn, flags, arg, seal_idx, ret, state, status,
+# scope_start, scope_count (the receiver sandboxes exactly the scope the
+# sender used — §5.2)
+_REQ_FMT = "<QIIQQQIIII"
+_REQ_SIZE = struct.calcsize(_REQ_FMT)
+
+# slot states
+R_EMPTY = 0
+R_REQ = 1
+R_DONE = 2
+R_ERR = 3
+
+# flags
+F_SEALED = 1 << 0
+F_SANDBOXED = 1 << 1
+
+# RPC status codes
+OK = 0
+E_UNSEALED = 1      # receiver demanded a seal, region was not sealed
+E_SANDBOX = 2       # sandbox violation while processing (SIGSEGV→error)
+E_NOFUNC = 3
+E_EXCEPTION = 4
+
+
+class BusyWaitPolicy:
+    """§5.8 adaptive busy-wait: no sleep below 25% load, 5µs between 25–50%,
+    150µs above 50%. "Load" is approximated by the poll duty cycle over a
+    sliding window. A fixed sleep can be forced for the Fig. 13 sweep."""
+
+    def __init__(self, fixed_sleep_us: Optional[float] = None,
+                 window: int = 256):
+        self.fixed = fixed_sleep_us
+        self.window = window
+        self._hits = 0
+        self._polls = 0
+
+    def record(self, found_work: bool) -> None:
+        self._polls += 1
+        if found_work:
+            self._hits += 1
+        if self._polls >= self.window:
+            self._hits //= 2
+            self._polls //= 2
+
+    def sleep(self) -> None:
+        if self.fixed is not None:
+            # time.sleep(0) is a bare GIL yield — the CPython stand-in for
+            # "no sleep, keep spinning" (a hardware spin would starve the
+            # other thread of the interpreter lock entirely).
+            time.sleep(self.fixed * 1e-6 if self.fixed > 0 else 0)
+            return
+        load = self._hits / max(1, self._polls)
+        if load < 0.25:
+            time.sleep(0)  # spin, but yield the GIL
+            return
+        time.sleep(5e-6 if load < 0.5 else 150e-6)
+
+
+class _Ring:
+    """SPSC descriptor ring in heap bytes."""
+
+    def __init__(self, heap: SharedHeap, capacity: int = 256):
+        self.heap = heap
+        self.capacity = capacity
+        self.head = 1  # next slot the server will serve (seq starts at 1)
+        nbytes = capacity * _REQ_SIZE
+        pages = (nbytes + heap.page_size - 1) // heap.page_size
+        self.start_page = heap.alloc_pages(pages, owner=0)
+        base = self.start_page * heap.page_size
+        # raw view — daemon-owned, never sealed (see module docstring)
+        self.view = heap.buf[base : base + nbytes]
+
+    def pack(self, slot: int, *fields) -> None:
+        off = slot * _REQ_SIZE
+        self.view[off : off + _REQ_SIZE] = memoryview(
+            struct.pack(_REQ_FMT, *fields)
+        )
+
+    def unpack(self, slot: int) -> Tuple:
+        off = slot * _REQ_SIZE
+        return struct.unpack(_REQ_FMT, self.view[off : off + _REQ_SIZE])
+
+    def state(self, slot: int) -> int:
+        # state is the 7th field; offset 40 within the 48-byte slot
+        off = slot * _REQ_SIZE + 40
+        return int(self.view[off]) | (int(self.view[off + 1]) << 8)
+
+    def set_state_status(self, slot: int, state: int, status: int) -> None:
+        off = slot * _REQ_SIZE + 40
+        self.view[off : off + 8] = memoryview(struct.pack("<II", state, status))
+
+    def set_ret(self, slot: int, ret: int) -> None:
+        off = slot * _REQ_SIZE + 32
+        self.view[off : off + 8] = memoryview(struct.pack("<Q", ret))
+
+
+class RpcError(ChannelError):
+    def __init__(self, status: int):
+        super().__init__(f"RPC failed with status {status}")
+        self.status = status
+
+
+class Connection:
+    """One client's connection: heap + ring + seal/sandbox managers."""
+
+    def __init__(self, channel: "Channel", heap: SharedHeap, client_pid: int,
+                 ring_capacity: int = 256):
+        self.channel = channel
+        self.heap = heap
+        self.client_pid = client_pid
+        self.ring = _Ring(heap, ring_capacity)
+        self.seals = SealManager(heap)
+        self.sandboxes = SandboxManager(heap)
+        self._next_seq = 1
+        self._scope_pool: Optional[ScopePool] = None
+        self.closed = False
+        self.last_seal_idx = 0  # seal idx of the most recent sealed call
+        # round-trip stats
+        self.n_calls = 0
+
+    # -- client-side object construction --------------------------------
+    def create_scope(self, size_bytes: int) -> Scope:
+        return create_scope(self.heap, size_bytes, owner=self.client_pid)
+
+    def scope_pool(self, scope_pages: int = 1) -> ScopePool:
+        if self._scope_pool is None or \
+                self._scope_pool.scope_pages != scope_pages:
+            self._scope_pool = ScopePool(self.heap, scope_pages,
+                                         owner=self.client_pid,
+                                         seals=self.seals)
+        return self._scope_pool
+
+    def new_bytes(self, data: bytes, scope: Optional[Scope] = None) -> int:
+        """``conn->new_<T>(...)`` — allocate an object in the heap/scope."""
+        if scope is None:
+            scope = self.create_scope(len(data) or 1)
+        return scope.write_bytes(data, pid=self.client_pid)
+
+    # -- the RPC itself ---------------------------------------------------
+    def call(
+        self,
+        fn_id: int,
+        arg_addr: int = gaddr.NULL,
+        scope: Optional[Scope] = None,
+        sealed: bool = False,
+        sandboxed: bool = False,
+        batch_release: bool = False,
+        timeout: float = 10.0,
+        spin_sleep_us: float = 0.0,
+    ) -> int:
+        """``conn->call<T>(fn_id, arg)``. Returns the ret GlobalAddr/value.
+
+        ``sealed``: seal the scope for the flight of the RPC (§4.5).
+        ``sandboxed``: ask the server to process inside a sandbox (§4.4).
+        ``batch_release``: defer the seal release to the scope-pool batch
+        (§5.3) rather than releasing on return.
+        """
+        slot, seal_idx = self._post(fn_id, arg_addr, scope, sealed, sandboxed)
+        # spin for the response (client side of §5.8); time.sleep(0) is the
+        # CPython GIL-yield stand-in for a hardware pause-loop.
+        deadline = time.monotonic() + timeout
+        while True:
+            st = self.ring.state(slot)
+            if st in (R_DONE, R_ERR):
+                break
+            if time.monotonic() > deadline:
+                raise ChannelError(f"RPC {fn_id} timed out")
+            time.sleep(spin_sleep_us * 1e-6 if spin_sleep_us else 0)
+        return self._complete(slot, sealed, seal_idx, batch_release)
+
+    def call_inline(self, fn_id: int, arg_addr: int = gaddr.NULL,
+                    scope: Optional[Scope] = None, sealed: bool = False,
+                    sandboxed: bool = False,
+                    batch_release: bool = False) -> int:
+        """Same data path as ``call`` but the server half runs on this
+        thread immediately after the descriptor is posted — the two-core
+        zero-scheduling-noise configuration used for RTT microbenchmarks
+        (a dedicated server core picks the descriptor up instantly; CPython
+        threads would add GIL handoff latency that the hardware does not
+        have)."""
+        slot, seal_idx = self._post(fn_id, arg_addr, scope, sealed, sandboxed)
+        self.channel._process(self, slot)
+        self.ring.head += 1
+        return self._complete(slot, sealed, seal_idx, batch_release)
+
+    def call_async(self, fn_id: int, arg_addr: int = gaddr.NULL,
+                   scope: Optional[Scope] = None, sealed: bool = False,
+                   sandboxed: bool = False) -> Tuple[int, int]:
+        """Post without waiting; returns a (slot, seal_idx) token. Multiple
+        RPCs may be in flight on one connection (per-thread MPK permissions
+        make this safe in the paper, §5.2)."""
+        return self._post(fn_id, arg_addr, scope, sealed, sandboxed)
+
+    def wait(self, token: Tuple[int, int], sealed: bool = False,
+             batch_release: bool = False, timeout: float = 10.0) -> int:
+        slot, seal_idx = token
+        deadline = time.monotonic() + timeout
+        while self.ring.state(slot) not in (R_DONE, R_ERR):
+            if time.monotonic() > deadline:
+                raise ChannelError("RPC timed out")
+            time.sleep(0)
+        return self._complete(slot, sealed, seal_idx, batch_release)
+
+    # -- data-path halves ---------------------------------------------------
+    def _post(self, fn_id, arg_addr, scope, sealed, sandboxed):
+        if self.closed:
+            raise ChannelError("call on closed connection")
+        seq = self._next_seq
+        self._next_seq += 1
+        slot = seq % self.ring.capacity
+        if self.ring.state(slot) == R_REQ:
+            raise ChannelError("ring overflow: too many in-flight RPCs")
+
+        flags = 0
+        seal_idx = 0
+        sc_start = sc_count = 0
+        if scope is not None:
+            sc_start, sc_count = scope.page_range()
+        if sealed:
+            if scope is None:
+                raise SealViolation("sealed call requires a scope (§4.5)")
+            seal_idx = self.seals.seal(scope, holder=self.client_pid)
+            self.last_seal_idx = seal_idx
+            flags |= F_SEALED
+        if sandboxed:
+            flags |= F_SANDBOXED
+
+        self.ring.pack(slot, seq, fn_id, flags, arg_addr, seal_idx,
+                       0, R_REQ, OK, sc_start, sc_count)
+        self.channel._notify()
+        return slot, seal_idx
+
+    def _complete(self, slot, sealed, seal_idx, batch_release):
+        (seq_, fn_, flags_, arg_, seal_, ret, state, status,
+         _scs, _scc) = self.ring.unpack(slot)
+        self.ring.set_state_status(slot, R_EMPTY, OK)
+        self.n_calls += 1
+
+        if sealed:
+            if batch_release:
+                self.seals.release_batched(seal_idx, holder=self.client_pid)
+            else:
+                self.seals.release(seal_idx, holder=self.client_pid)
+
+        if state == R_ERR:
+            raise RpcError(status)
+        return ret
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        if not self.closed:
+            self.closed = True
+            self.channel._drop_connection(self)
+
+
+class Channel:
+    """A named RPC endpoint. ``Channel.open`` ≈ binding a port (§4.2)."""
+
+    def __init__(self, orch: Orchestrator, name: str, server_pid: int,
+                 heap_pages: int = 4096, page_size: int = 4096,
+                 shared_heap: bool = False):
+        self.orch = orch
+        self.name = name
+        self.server_pid = server_pid
+        self.heap_pages = heap_pages
+        self.page_size = page_size
+        self.shared_heap = shared_heap  # Fig. 4b channel-wide heap
+        self._shared: Optional[SharedHeap] = None
+        self.functions: Dict[int, Callable[["ServerCtx", int], int]] = {}
+        self.connections: List[Connection] = []
+        self._event = threading.Event()
+        self._stop = threading.Event()
+        orch.register_channel(name, self)
+
+    # -- server API (Fig. 6 left) -------------------------------------------
+    def add(self, fn_id: int, fn: Callable[["ServerCtx", int], int]) -> None:
+        self.functions[fn_id] = fn
+
+    def accept(self, client_pid: int, ring_capacity: int = 256) -> Connection:
+        """Create the connection object for a connecting client."""
+        if self.shared_heap:
+            if self._shared is None:
+                self._shared = self.orch.create_heap(
+                    self.heap_pages, self.page_size,
+                    name=f"{self.name}/shared")
+                self.orch.map_heap(self.server_pid, self._shared)
+            heap = self._shared
+        else:
+            heap = self.orch.create_heap(
+                self.heap_pages, self.page_size,
+                name=f"{self.name}/conn{len(self.connections)}")
+            self.orch.map_heap(self.server_pid, heap)
+        self.orch.map_heap(client_pid, heap)
+        conn = Connection(self, heap, client_pid)
+        self.connections.append(conn)
+        return conn
+
+    def _drop_connection(self, conn: Connection) -> None:
+        if conn in self.connections:
+            self.connections.remove(conn)
+            self.orch.unmap_heap(conn.client_pid, conn.heap.heap_id)
+            if not self.shared_heap:
+                self.orch.unmap_heap(self.server_pid, conn.heap.heap_id)
+
+    def _notify(self) -> None:
+        self._event.set()
+
+    # -- serve loop ------------------------------------------------------------
+    def serve_once(self) -> int:
+        """Poll every connection ring once; process pending RPCs inline.
+        Rings are SPSC and clients claim slots in seq order, so the server
+        only inspects each ring's head. Returns the number of RPCs served."""
+        served = 0
+        for conn in list(self.connections):
+            ring = conn.ring
+            while ring.state(ring.head % ring.capacity) == R_REQ:
+                self._process(conn, ring.head % ring.capacity)
+                ring.head += 1
+                served += 1
+        return served
+
+    def listen(self, policy: Optional[BusyWaitPolicy] = None,
+               stop: Optional[threading.Event] = None) -> None:
+        """``conn->listen()`` — busy-wait loop with §5.8 adaptive sleep."""
+        policy = policy or BusyWaitPolicy()
+        stop = stop or self._stop
+        while not stop.is_set():
+            n = self.serve_once()
+            policy.record(n > 0)
+            if n == 0:
+                policy.sleep()
+
+    def listen_in_thread(self, policy: Optional[BusyWaitPolicy] = None
+                         ) -> threading.Thread:
+        self._stop.clear()
+        t = threading.Thread(target=self.listen, args=(policy,), daemon=True)
+        t.start()
+        return t
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def destroy(self) -> None:
+        self.stop()
+        for conn in list(self.connections):
+            conn.close()
+        self.orch.unregister_channel(self.name)
+
+    # -- request processing (receiver half of Fig. 8) ---------------------------
+    def _process(self, conn: Connection, slot: int) -> None:
+        (seq, fn_id, flags, arg, seal_idx, _ret, _st, _status,
+         sc_start, sc_count) = conn.ring.unpack(slot)
+
+        fn = self.functions.get(fn_id)
+        if fn is None:
+            conn.ring.set_state_status(slot, R_ERR, E_NOFUNC)
+            return
+
+        # Fig. 8 step 4: verify the seal before touching the arguments.
+        if flags & F_SEALED:
+            if not conn.seals.is_sealed(seal_idx):
+                conn.ring.set_state_status(slot, R_ERR, E_UNSEALED)
+                return
+
+        ctx = ServerCtx(self, conn, flags)
+        try:
+            if flags & F_SANDBOXED and not gaddr.is_null(arg):
+                if sc_count:
+                    start, count = sc_start, sc_count
+                else:
+                    # no scope advertised: sandbox the argument's extent
+                    start, count = self._arg_scope(conn, arg)
+                with conn.sandboxes.enter(start, count) as sb:
+                    ctx.sandbox = sb
+                    ret = fn(ctx, arg)
+            else:
+                ret = fn(ctx, arg)
+            status, state = OK, R_DONE
+        except SandboxViolation:
+            # the SIGSEGV→error-reply path (§4.4)
+            ret, status, state = 0, E_SANDBOX, R_ERR
+        except Exception:
+            ret, status, state = 0, E_EXCEPTION, R_ERR
+
+        # Fig. 8 step 6: mark complete before replying.
+        if flags & F_SEALED:
+            try:
+                conn.seals.mark_complete(seal_idx)
+            except SealViolation:
+                pass
+        conn.ring.set_ret(slot, ret)
+        conn.ring.set_state_status(slot, state, status)
+
+    @staticmethod
+    def _arg_scope(conn: Connection, arg: int,
+                   max_pages: int = 64) -> Tuple[int, int]:
+        """Best-effort scope bounds for an argument address: the contiguous
+        USED extent around its page (scopes are contiguous allocations),
+        bounded to ``max_pages`` each way."""
+        page = gaddr.page_of(arg)
+        heap = conn.heap
+        lo = page
+        while lo > 0 and page - lo < max_pages and \
+                heap.state[lo - 1] == 1 and \
+                heap.owner[lo - 1] == heap.owner[page]:
+            lo -= 1
+        hi = page + 1
+        while hi < heap.num_pages and hi - page < max_pages and \
+                heap.state[hi] == 1 and \
+                heap.owner[hi] == heap.owner[page]:
+            hi += 1
+        return lo, hi - lo
+
+
+class ServerCtx:
+    """What an RPC handler sees: checked access to the connection heap."""
+
+    def __init__(self, channel: Channel, conn: Connection, flags: int):
+        self.channel = channel
+        self.conn = conn
+        self.flags = flags
+        self.sandbox = None  # set when sandboxed
+
+    def read(self, a: int, nbytes: int):
+        if self.sandbox is not None:
+            return self.sandbox.read(a, nbytes)
+        return self.conn.heap.read(a, nbytes)
+
+    def heap(self) -> SharedHeap:
+        return self.conn.heap
+
+
+class RPC:
+    """Top-level API mirroring Fig. 6."""
+
+    def __init__(self, orch: Orchestrator, pid: int):
+        self.orch = orch
+        self.pid = pid
+        self._channel: Optional[Channel] = None
+
+    # server: rpc.open("mychannel"); rpc.add(100, fn); rpc.accept(); listen()
+    def open(self, name: str, **kw) -> Channel:
+        self._channel = Channel(self.orch, name, self.pid, **kw)
+        return self._channel
+
+    # client: rpc.connect("mychannel")
+    def connect(self, name: str, **kw) -> Connection:
+        ch = self.orch.lookup_channel(name)
+        return ch.accept(self.pid, **kw)

@@ -1,0 +1,59 @@
+"""RPCool error taxonomy.
+
+Each error corresponds to a failure path in the paper:
+
+* ``SealedPageError``    — sender writes an in-flight (sealed) page (§4.5).
+* ``SealViolation``      — receiver proceeds on an unsealed region or the
+                           sender releases an incomplete RPC (Fig. 8 step 8).
+* ``SandboxViolation``   — dereference outside the sandbox; the SIGSEGV that
+                           librpcool converts into an RPC error (§5.2).
+* ``InvalidPointer``     — wild/invalid GlobalAddr (bad heap, freed page).
+* ``QuotaExceeded``      — mapping a heap past the administrator quota (§5.4).
+* ``LeaseExpired``       — operating on a heap whose lease lapsed (§4.6).
+* ``ChannelError``       — connection/channel protocol misuse.
+* ``OwnershipMiss``      — fallback-transport access to a page this node does
+                           not currently own (§5.6 page-fault analogue); the
+                           transport catches it and migrates the page.
+"""
+
+
+class RPCoolError(Exception):
+    """Base class for all RPCool errors."""
+
+
+class SealedPageError(RPCoolError):
+    pass
+
+
+class SealViolation(RPCoolError):
+    pass
+
+
+class SandboxViolation(RPCoolError):
+    pass
+
+
+class InvalidPointer(RPCoolError):
+    pass
+
+
+class QuotaExceeded(RPCoolError):
+    pass
+
+
+class LeaseExpired(RPCoolError):
+    pass
+
+
+class ChannelError(RPCoolError):
+    pass
+
+
+class OwnershipMiss(RPCoolError):
+    def __init__(self, page: int, msg: str = ""):
+        super().__init__(msg or f"page {page} not owned by this node")
+        self.page = page
+
+
+class AllocationError(RPCoolError):
+    pass

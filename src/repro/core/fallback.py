@@ -1,0 +1,234 @@
+"""RDMA/DCN fallback transport — §4.7, §5.6.
+
+When the two endpoints of a connection do not share a coherence domain
+(different racks in the paper; different TPU pods here), RPCool replaces
+hardware coherence with a minimalist two-node software-coherent shared
+memory: every page is *exclusively owned* by one node. A load/store to a
+page the node does not own faults, fetches the page from the peer, flips
+ownership, and re-executes — the peer must request it back to touch it
+again. This deliberately avoids full DSM synchronization (ArgoDSM-class
+cost) because RPC traffic is strongly phase-alternating.
+
+On TPU the "page fetch" is a gather of pool pages + a `pod`-axis
+``ppermute`` + a scatter (see ``kernels/scope_copy`` and
+``serving/kv_pool.transfer_cross_pod``). Here the host-side protocol is
+implemented for real: two heap replicas, an ownership bitmap, byte copies,
+and an optional modeled one-way link latency (defaults to 3 µs ≈ one
+direct-attached RDMA hop; the paper's CX-5 no-op RTT is 17 µs). All
+counters are exposed so benchmarks can report bytes moved and fault
+counts.
+
+The programmer-facing API is identical to the CXL path (§5.6 "all other
+programmer-facing interfaces are identical") — ``FallbackConnection.call``
+mirrors ``Connection.call`` including seals and sandboxes; only one
+server and one client per link, per the paper's limitation.
+"""
+
+from __future__ import annotations
+
+import struct
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import addr as gaddr
+from .errors import ChannelError, OwnershipMiss, SandboxViolation, SealViolation
+from .heap import SharedHeap
+from .sandbox import SandboxManager
+from .scope import Scope, create_scope
+from .seal import SealManager
+
+OWNER_CLIENT = 0
+OWNER_SERVER = 1
+
+
+class DSMLink:
+    """The wire between the two replicas + the ownership table."""
+
+    def __init__(self, num_pages: int, page_size: int = 4096,
+                 link_latency_us: float = 3.0, heap_id: int = 1):
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.link_latency_us = link_latency_us
+        # one replica per node — same heap_id: it is ONE logical heap
+        self.replica = [
+            SharedHeap(heap_id, num_pages, page_size, name="dsm/client"),
+            SharedHeap(heap_id, num_pages, page_size, name="dsm/server"),
+        ]
+        # allocator state must be common (one logical heap): client's heap
+        # object is the source of truth for allocation; mirror page states.
+        self.owner = np.full(num_pages, OWNER_CLIENT, dtype=np.uint8)
+        # stats
+        self.bytes_moved = 0
+        self.page_faults = 0
+        self.msgs = 0
+
+    def _wire(self, nbytes: int) -> None:
+        self.bytes_moved += nbytes
+        if self.link_latency_us:
+            time.sleep(self.link_latency_us * 1e-6)
+
+    def send_msg(self, nbytes: int) -> None:
+        """An explicit message (RPC descriptor / completion) on the wire."""
+        self.msgs += 1
+        self._wire(nbytes)
+
+    def migrate(self, pages: List[int], to: int) -> int:
+        """Fetch ``pages`` to node ``to`` (§5.6 page-fault service path).
+
+        Returns the number of pages actually moved.
+        """
+        need = [p for p in pages if self.owner[p] != to]
+        if not need:
+            return 0
+        src = self.replica[1 - to].buf
+        dst = self.replica[to].buf
+        ps = self.page_size
+        for p in need:
+            lo = p * ps
+            dst[lo : lo + ps] = src[lo : lo + ps]
+        self.owner[np.asarray(need)] = to
+        self.page_faults += 1          # one fault services the whole range
+        self._wire(len(need) * ps)     # bulk fetch on the wire
+        return len(need)
+
+    def sync_meta(self, to: int) -> None:
+        """Propagate allocator/perm metadata (tiny control message)."""
+        src, dst = self.replica[1 - to], self.replica[to]
+        dst.state[:] = src.state
+        dst.owner[:] = src.owner
+        dst.perm[:] = src.perm
+        dst.seal_holder[:] = src.seal_holder
+
+
+class DSMNode:
+    """One endpoint's view of the logical heap: checked, faulting access."""
+
+    def __init__(self, link: DSMLink, node_id: int):
+        self.link = link
+        self.node_id = node_id
+        self.heap = link.replica[node_id]
+        self.page_size = link.page_size
+
+    def _fault_in(self, a: int, nbytes: int) -> None:
+        lin = gaddr.linear(a, self.page_size)
+        p0, p1 = lin // self.page_size, (lin + nbytes - 1) // self.page_size
+        pages = [p for p in range(p0, p1 + 1)
+                 if self.link.owner[p] != self.node_id]
+        if pages:
+            self.link.migrate(pages, to=self.node_id)
+
+    def read(self, a: int, nbytes: int) -> np.ndarray:
+        self._fault_in(a, nbytes)
+        return self.heap.read(a, nbytes)
+
+    def write(self, a: int, data: bytes, pid: int = 0) -> None:
+        self._fault_in(a, len(data))
+        self.heap.write(a, data, pid=pid)
+
+    def owns(self, page: int) -> bool:
+        return self.link.owner[page] == self.node_id
+
+
+class FallbackConnection:
+    """Two-node RPC over the DSM link. API mirrors ``Connection``."""
+
+    def __init__(self, num_pages: int = 4096, page_size: int = 4096,
+                 link_latency_us: float = 3.0, client_pid: int = 1,
+                 server_pid: int = 2):
+        self.link = DSMLink(num_pages, page_size, link_latency_us)
+        self.client = DSMNode(self.link, OWNER_CLIENT)
+        self.server = DSMNode(self.link, OWNER_SERVER)
+        self.client_pid = client_pid
+        self.server_pid = server_pid
+        # allocation + seals happen against the client replica (the single
+        # allocator of this 1:1 link) and metadata is mirrored on demand.
+        self.seals = SealManager(self.client.heap)
+        self.sandboxes = SandboxManager(self.server.heap)
+        self.functions: Dict[int, Callable[["FallbackServerCtx", int], int]] = {}
+        self.n_calls = 0
+
+    # -- client-side API (identical shape to Connection) -----------------
+    def create_scope(self, size_bytes: int) -> Scope:
+        return create_scope(self.client.heap, size_bytes,
+                            owner=self.client_pid)
+
+    def new_bytes(self, data: bytes, scope: Optional[Scope] = None) -> int:
+        if scope is None:
+            scope = self.create_scope(len(data) or 1)
+        # client writes fault pages back to the client side if needed
+        a = scope.alloc(len(data))
+        self.client.write(a, data, pid=self.client_pid)
+        return a
+
+    def add(self, fn_id: int, fn) -> None:
+        self.functions[fn_id] = fn
+
+    def call(self, fn_id: int, arg_addr: int = gaddr.NULL,
+             scope: Optional[Scope] = None, sealed: bool = False,
+             sandboxed: bool = False) -> int:
+        seal_idx = 0
+        if sealed:
+            if scope is None:
+                raise SealViolation("sealed call requires a scope")
+            seal_idx = self.seals.seal(scope, holder=self.client_pid)
+        # descriptor goes over the wire (48B message)
+        self.link.send_msg(48)
+        self.link.sync_meta(to=OWNER_SERVER)
+
+        fn = self.functions.get(fn_id)
+        if fn is None:
+            raise ChannelError(f"no function {fn_id}")
+
+        ctx = FallbackServerCtx(self)
+        if sealed and not self.seals.is_sealed(seal_idx):
+            raise SealViolation("receiver found region unsealed")
+        try:
+            if sandboxed and not gaddr.is_null(arg_addr) and scope is not None:
+                start, count = scope.page_range()
+                # server must own the pages before sandboxing them
+                self.link.migrate(list(range(start, start + count)),
+                                  to=OWNER_SERVER)
+                with self.sandboxes.enter(start, count) as sb:
+                    ctx.sandbox = sb
+                    ret = fn(ctx, arg_addr)
+            else:
+                ret = fn(ctx, arg_addr)
+        finally:
+            if sealed:
+                self.seals.mark_complete(seal_idx)
+        # completion message back
+        self.link.send_msg(48)
+        if sealed:
+            self.seals.release(seal_idx, holder=self.client_pid)
+        self.n_calls += 1
+        return ret
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "bytes_moved": self.link.bytes_moved,
+            "page_faults": self.link.page_faults,
+            "msgs": self.link.msgs,
+            "calls": self.n_calls,
+        }
+
+
+class FallbackServerCtx:
+    """Server view: reads fault pages across the link (§5.6)."""
+
+    def __init__(self, conn: FallbackConnection):
+        self.conn = conn
+        self.sandbox = None
+
+    def read(self, a: int, nbytes: int):
+        if self.sandbox is not None:
+            self.sandbox.check(a, nbytes)
+        return self.conn.server.read(a, nbytes)
+
+    def heap(self) -> SharedHeap:
+        return self.conn.server.heap
+
+    @property
+    def page_size(self) -> int:
+        return self.conn.server.page_size

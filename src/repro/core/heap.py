@@ -1,0 +1,310 @@
+"""SharedHeap — the RPCool shared-memory heap (§4.1, §5.1).
+
+A heap is a fixed array of fixed-size pages. On real hardware this is a CXL
+memory region mapped at an orchestrator-assigned, cluster-unique address; on
+a TPU pod it is a resident device pool (e.g. the paged KV cache) whose page
+layout is identical on every host, plus this host-side byte mirror used for
+pointer-rich object storage (containers, document stores, RPC descriptors).
+
+Page metadata kept per page:
+
+* ``state``      FREE / USED
+* ``owner``      connection id of the allocator (0 == unowned/daemon)
+* ``perm``       permission word: bit SEALED ⇒ read-only for the sealing
+                 process (the paper's PTE write-protect), bit NOACCESS ⇒
+                 unmapped for everyone but the daemon.
+* ``key``        MPK protection-key analogue assigned by the sandbox manager.
+
+Permission changes bump ``perm_epoch`` — the analogue of a TLB shootdown.
+Batched seal release (§5.3) exists precisely to amortize these bumps, and
+the benchmark harness measures that amortization for real.
+
+The allocator is a first-fit extent allocator over pages: scopes (§5.1)
+require *contiguous* page ranges, so a bump/bitmap allocator is not enough.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import addr as gaddr
+from .errors import (
+    AllocationError,
+    InvalidPointer,
+    SealedPageError,
+)
+
+# page state
+FREE = 0
+USED = 1
+
+# permission bits
+PERM_SEALED = 1 << 0   # write-protected for the sealing (sender) process
+PERM_NOACCESS = 1 << 1  # unmapped (daemon-only)
+
+DEFAULT_PAGE_SIZE = 4096
+
+
+@dataclass
+class Extent:
+    start: int
+    count: int
+
+    @property
+    def end(self) -> int:
+        return self.start + self.count
+
+
+class SharedHeap:
+    """A shared-memory heap with page-granular permissions."""
+
+    def __init__(
+        self,
+        heap_id: int,
+        num_pages: int,
+        page_size: int = DEFAULT_PAGE_SIZE,
+        name: str = "",
+    ):
+        if num_pages <= 0 or num_pages > gaddr.MAX_PAGES:
+            raise ValueError(f"num_pages out of range: {num_pages}")
+        self.heap_id = heap_id
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.name = name or f"heap{heap_id}"
+
+        # The byte space. One contiguous buffer == the CXL region.
+        self.buf = np.zeros(num_pages * page_size, dtype=np.uint8)
+
+        self.state = np.full(num_pages, FREE, dtype=np.uint8)
+        self.owner = np.zeros(num_pages, dtype=np.int32)
+        self.perm = np.zeros(num_pages, dtype=np.uint8)
+        # Which process a seal protects against (the sender); 0 = none.
+        self.seal_holder = np.zeros(num_pages, dtype=np.int64)
+        self.key = np.zeros(num_pages, dtype=np.int16)  # MPK key per page
+
+        # TLB-shootdown analogue: every permission flip visible to other
+        # threads/devices costs an epoch bump + (if attached) a device sync.
+        self.perm_epoch = 0
+
+        self._free: List[Extent] = [Extent(0, num_pages)]
+        self._lock = threading.RLock()
+
+        # Optional device mirror of the permission word (consumed by
+        # sandboxed kernels). Lazily attached by serving/kv_pool.
+        # When ``eager`` the mirror is re-pushed on every epoch bump —
+        # that push IS the TLB-shootdown analogue, and batched release
+        # exists to amortize it (§5.3).
+        self._device_perm = None
+        self._device_dirty = False
+        self._eager_sync = False
+
+    # ------------------------------------------------------------------
+    # allocation
+    # ------------------------------------------------------------------
+    def alloc_pages(self, count: int, owner: int = 0) -> int:
+        """First-fit contiguous allocation. Returns the starting page."""
+        if count <= 0:
+            raise AllocationError(f"bad page count {count}")
+        with self._lock:
+            for i, ext in enumerate(self._free):
+                if ext.count >= count:
+                    start = ext.start
+                    if ext.count == count:
+                        self._free.pop(i)
+                    else:
+                        ext.start += count
+                        ext.count -= count
+                    self.state[start : start + count] = USED
+                    self.owner[start : start + count] = owner
+                    self.perm[start : start + count] = 0
+                    self.seal_holder[start : start + count] = 0
+                    return start
+            raise AllocationError(
+                f"{self.name}: cannot allocate {count} contiguous pages "
+                f"({self.free_pages()} free, fragmented)"
+            )
+
+    def free_extent(self, start: int, count: int) -> None:
+        with self._lock:
+            if np.any(self.state[start : start + count] == FREE):
+                raise InvalidPointer(
+                    f"double free of pages [{start},{start + count}) in {self.name}"
+                )
+            self.state[start : start + count] = FREE
+            self.owner[start : start + count] = 0
+            self.perm[start : start + count] = 0
+            self.seal_holder[start : start + count] = 0
+            self._insert_free(Extent(start, count))
+
+    def _insert_free(self, ext: Extent) -> None:
+        # keep the free list sorted + coalesced
+        free = self._free
+        lo, hi = 0, len(free)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if free[mid].start < ext.start:
+                lo = mid + 1
+            else:
+                hi = mid
+        free.insert(lo, ext)
+        # coalesce with neighbours
+        if lo + 1 < len(free) and free[lo].end == free[lo + 1].start:
+            free[lo].count += free[lo + 1].count
+            free.pop(lo + 1)
+        if lo > 0 and free[lo - 1].end == free[lo].start:
+            free[lo - 1].count += free[lo].count
+            free.pop(lo)
+
+    def free_pages(self) -> int:
+        return int(sum(e.count for e in self._free))
+
+    def used_pages(self) -> int:
+        return self.num_pages - self.free_pages()
+
+    def used_bytes(self) -> int:
+        return self.used_pages() * self.page_size
+
+    # ------------------------------------------------------------------
+    # permissions (seal substrate — SealManager drives this)
+    # ------------------------------------------------------------------
+    def protect_range(self, start: int, count: int, holder: int) -> None:
+        """Write-protect pages for ``holder`` (the sender). One epoch bump."""
+        with self._lock:
+            sl = slice(start, start + count)
+            if np.any(self.state[sl] == FREE):
+                raise InvalidPointer("sealing unallocated pages")
+            self.perm[sl] |= PERM_SEALED
+            self.seal_holder[sl] = holder
+            self._bump_epoch()
+
+    def unprotect_range(self, start: int, count: int) -> None:
+        with self._lock:
+            sl = slice(start, start + count)
+            self.perm[sl] &= ~np.uint8(PERM_SEALED)
+            self.seal_holder[sl] = 0
+            self._bump_epoch()
+
+    def unprotect_ranges(self, ranges: List[Tuple[int, int]]) -> None:
+        """Batched release — MANY ranges, ONE epoch bump (§5.3)."""
+        with self._lock:
+            for start, count in ranges:
+                sl = slice(start, start + count)
+                self.perm[sl] &= ~np.uint8(PERM_SEALED)
+                self.seal_holder[sl] = 0
+            self._bump_epoch()
+
+    def _bump_epoch(self) -> None:
+        self.perm_epoch += 1
+        self._device_dirty = True
+        if self._eager_sync:
+            self._sync_device()
+
+    # ------------------------------------------------------------------
+    # byte access (checked loads/stores — what MMU+MPK do in hardware)
+    # ------------------------------------------------------------------
+    def _check_addr(self, a: int, nbytes: int) -> Tuple[int, int]:
+        if gaddr.is_null(a):
+            raise InvalidPointer("NULL dereference")
+        if gaddr.heap_of(a) != self.heap_id:
+            raise InvalidPointer(
+                f"addr heap {gaddr.heap_of(a)} != {self.heap_id} ({self.name})"
+            )
+        off = gaddr.linear(a, self.page_size)
+        if off + nbytes > self.num_pages * self.page_size:
+            raise InvalidPointer(f"addr+{nbytes} past end of {self.name}")
+        return off, off + nbytes
+
+    def write(self, a: int, data: bytes | np.ndarray, pid: int = 0) -> None:
+        lo, hi = self._check_addr(a, len(data))
+        p0, p1 = lo // self.page_size, (hi - 1) // self.page_size + 1
+        if p1 - p0 == 1:  # hot path: single-page access, scalar checks
+            if self.state[p0] == FREE:
+                raise InvalidPointer(f"write to freed page in {self.name}")
+            if pid and (self.perm[p0] & PERM_SEALED) and \
+                    self.seal_holder[p0] == pid:
+                raise SealedPageError(
+                    f"pid {pid} writing sealed page in {self.name} "
+                    f"(RPC in flight — §4.5)"
+                )
+        else:
+            sl = slice(p0, p1)
+            if np.any(self.state[sl] == FREE):
+                raise InvalidPointer(f"write to freed page in {self.name}")
+            if pid and np.any(
+                (self.perm[sl] & PERM_SEALED != 0)
+                & (self.seal_holder[sl] == pid)
+            ):
+                raise SealedPageError(
+                    f"pid {pid} writing sealed page in {self.name} "
+                    f"(RPC in flight — §4.5)"
+                )
+        self.buf[lo:hi] = np.frombuffer(bytes(data), dtype=np.uint8)
+
+    def read(self, a: int, nbytes: int) -> np.ndarray:
+        lo, hi = self._check_addr(a, nbytes)
+        p0, p1 = lo // self.page_size, (hi - 1) // self.page_size + 1
+        if p1 - p0 == 1:
+            if self.state[p0] == FREE:
+                raise InvalidPointer(f"read of freed page in {self.name}")
+        elif np.any(self.state[p0:p1] == FREE):
+            raise InvalidPointer(f"read of freed page in {self.name}")
+        return self.buf[lo:hi]
+
+    def write_fast(self, a: int, data: bytes) -> None:
+        """Unchecked-permissions write for freshly-allocated private
+        scopes (builder hot path): bounds only — never use on pages that
+        may be sealed or foreign (the checked ``write`` is the default)."""
+        lo = gaddr.linear(a, self.page_size)
+        hi = lo + len(data)
+        if hi > self.num_pages * self.page_size:
+            raise InvalidPointer(f"write past end of {self.name}")
+        self.buf[lo:hi] = np.frombuffer(data, dtype=np.uint8)
+
+    def addr_of_page(self, page: int, offset: int = 0) -> int:
+        return gaddr.pack(self.heap_id, page, offset)
+
+    # ------------------------------------------------------------------
+    # device mirror (perm bits consumed by sandboxed Pallas kernels)
+    # ------------------------------------------------------------------
+    def attach_device_perm(self, eager: bool = False) -> None:
+        """Mirror the perm word on device. ``eager`` re-pushes the mirror on
+        every epoch bump — the physical cost a seal release pays (the TLB
+        shootdown / key-reassignment analogue) and what batched release
+        amortizes."""
+        self._eager_sync = eager
+        self._sync_device()
+
+    def _sync_device(self) -> None:
+        import jax  # lazy: core stays importable without jax
+        import jax.numpy as jnp
+
+        self._device_perm = jax.block_until_ready(jnp.asarray(self.perm))
+        self._device_dirty = False
+
+    def device_perm(self):
+        if self._device_perm is None or self._device_dirty:
+            self._sync_device()
+        return self._device_perm
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        return {
+            "heap_id": self.heap_id,
+            "pages": self.num_pages,
+            "page_size": self.page_size,
+            "used_pages": self.used_pages(),
+            "free_pages": self.free_pages(),
+            "sealed_pages": int((self.perm & PERM_SEALED != 0).sum()),
+            "perm_epoch": self.perm_epoch,
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover
+        s = self.stats()
+        return (
+            f"<SharedHeap {self.name} pages={s['used_pages']}/{s['pages']} "
+            f"sealed={s['sealed_pages']} epoch={s['perm_epoch']}>"
+        )

@@ -1,0 +1,165 @@
+"""Global orchestrator — leases, quotas, registry, failure GC (§4.6, §5.4).
+
+The orchestrator is the cluster-level control plane: it assigns heap ids
+(hence globally-unique address spaces), registers channels under
+hierarchical names, tracks which process has which heap mapped via
+*leases*, enforces per-process shared-memory *quotas*, and garbage-collects
+orphaned heaps when every lease on them has lapsed.
+
+Time is injected (``clock``) so tests and benchmarks can drive lease expiry
+deterministically; production uses ``time.monotonic``.
+
+Failure model reproduced from Fig. 5:
+  (a) server crash → its leases lapse → orchestrator notifies connected
+      clients; the heap survives while any client still holds a lease and
+      is reclaimed when the last lease closes.
+  (b) client hoarding heaps from dead servers → quota forces it to return
+      heaps before mapping new ones.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+from .errors import ChannelError, LeaseExpired, QuotaExceeded
+from .heap import SharedHeap
+
+DEFAULT_LEASE_TTL = 5.0  # seconds; librpcool auto-renews at ttl/2
+
+
+@dataclass
+class Lease:
+    pid: int
+    heap_id: int
+    expires: float
+    live: bool = True
+
+
+class Orchestrator:
+    def __init__(self, clock: Optional[Callable[[], float]] = None,
+                 lease_ttl: float = DEFAULT_LEASE_TTL):
+        self.clock = clock or time.monotonic
+        self.lease_ttl = lease_ttl
+
+        self._next_heap_id = 1
+        self.heaps: Dict[int, SharedHeap] = {}
+        self.channels: Dict[str, object] = {}  # name -> Channel
+        self._leases: Dict[Tuple[int, int], Lease] = {}  # (pid, heap) -> lease
+        self._quota: Dict[int, int] = {}  # pid -> max mapped bytes
+        self._mapped: Dict[int, Set[int]] = {}  # pid -> heap ids
+        self._failure_cbs: List[Callable[[int, int], None]] = []
+        # stats
+        self.reclaimed_heaps = 0
+        self.expired_leases = 0
+
+    # -- heap lifecycle ------------------------------------------------------
+    def create_heap(self, num_pages: int, page_size: int = 4096,
+                    name: str = "") -> SharedHeap:
+        hid = self._next_heap_id
+        self._next_heap_id += 1
+        heap = SharedHeap(hid, num_pages, page_size, name=name)
+        self.heaps[hid] = heap
+        return heap
+
+    def map_heap(self, pid: int, heap: SharedHeap) -> Lease:
+        """Map a heap into a process — checks quota, grants a lease."""
+        quota = self._quota.get(pid)
+        mapped = self._mapped.setdefault(pid, set())
+        if quota is not None:
+            projected = sum(
+                self.heaps[h].num_pages * self.heaps[h].page_size
+                for h in mapped | {heap.heap_id}
+                if h in self.heaps
+            )
+            if projected > quota:
+                raise QuotaExceeded(
+                    f"pid {pid}: mapping heap {heap.heap_id} "
+                    f"({projected}B) exceeds quota {quota}B; "
+                    "close existing channels first (§5.4)"
+                )
+        lease = Lease(pid, heap.heap_id, self.clock() + self.lease_ttl)
+        self._leases[(pid, heap.heap_id)] = lease
+        mapped.add(heap.heap_id)
+        return lease
+
+    def unmap_heap(self, pid: int, heap_id: int) -> None:
+        self._leases.pop((pid, heap_id), None)
+        self._mapped.get(pid, set()).discard(heap_id)
+        self._maybe_reclaim(heap_id)
+
+    def renew(self, pid: int) -> int:
+        """librpcool's periodic lease renewal for every heap of ``pid``."""
+        now = self.clock()
+        n = 0
+        for (p, h), lease in self._leases.items():
+            if p == pid and lease.live:
+                lease.expires = now + self.lease_ttl
+                n += 1
+        return n
+
+    def set_quota(self, pid: int, max_bytes: int) -> None:
+        self._quota[pid] = max_bytes
+
+    def mapped_bytes(self, pid: int) -> int:
+        return sum(
+            self.heaps[h].num_pages * self.heaps[h].page_size
+            for h in self._mapped.get(pid, set())
+            if h in self.heaps
+        )
+
+    # -- failure handling ------------------------------------------------------
+    def on_failure(self, cb: Callable[[int, int], None]) -> None:
+        """cb(pid, heap_id) fired when a lease expires."""
+        self._failure_cbs.append(cb)
+
+    def tick(self) -> List[Tuple[int, int]]:
+        """Expire lapsed leases, notify peers, GC orphaned heaps.
+
+        Returns the list of (pid, heap_id) leases that expired this tick.
+        """
+        now = self.clock()
+        expired = []
+        for key, lease in list(self._leases.items()):
+            if lease.live and lease.expires < now:
+                lease.live = False
+                expired.append(key)
+        for pid, heap_id in expired:
+            self.expired_leases += 1
+            del self._leases[(pid, heap_id)]
+            self._mapped.get(pid, set()).discard(heap_id)
+            for cb in self._failure_cbs:
+                cb(pid, heap_id)
+            self._maybe_reclaim(heap_id)
+        return expired
+
+    def _maybe_reclaim(self, heap_id: int) -> None:
+        if heap_id not in self.heaps:
+            return
+        if any(h == heap_id and l.live for (_, h), l in self._leases.items()):
+            return
+        # Last process accessing the heap is gone → reclaim (§5.4).
+        del self.heaps[heap_id]
+        self.reclaimed_heaps += 1
+
+    def live_leases(self, heap_id: Optional[int] = None) -> int:
+        return sum(
+            1 for (_, h), l in self._leases.items()
+            if l.live and (heap_id is None or h == heap_id)
+        )
+
+    # -- channel registry ------------------------------------------------------
+    def register_channel(self, name: str, channel: object) -> None:
+        if name in self.channels:
+            raise ChannelError(f"channel {name!r} already registered")
+        self.channels[name] = channel
+
+    def lookup_channel(self, name: str) -> object:
+        try:
+            return self.channels[name]
+        except KeyError:
+            raise ChannelError(f"no such channel {name!r}")
+
+    def unregister_channel(self, name: str) -> None:
+        self.channels.pop(name, None)

@@ -1,0 +1,32 @@
+"""Costing mode: unroll every scan so XLA cost analysis is exact.
+
+``compiled.cost_analysis()`` (and any HLO-text pass) counts a while-loop
+body ONCE, not ×trip-count — so the scan-over-blocks models would
+under-report FLOPs/bytes/collective-bytes by ~num_layers. Under
+``costing_mode()`` the model code unrolls its scans (block stack, SSD
+chunk recurrence) and de-chunks its streaming loops (attention q-chunks,
+MoE token groups), producing a semantically identical module whose cost
+analysis is exact. The dry-run compiles BOTH variants: the rolled one for
+real memory_analysis + compile-health, the unrolled one for §Roofline
+numbers.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_costing = contextvars.ContextVar("costing_mode", default=False)
+
+
+@contextlib.contextmanager
+def costing_mode(enabled: bool = True):
+    tok = _costing.set(enabled)
+    try:
+        yield
+    finally:
+        _costing.reset(tok)
+
+
+def is_costing() -> bool:
+    return _costing.get()

@@ -1,0 +1,137 @@
+"""Chunked causal flash attention (GQA / sliding window / softcap) —
+Pallas TPU kernel for 32k-token prefill.
+
+Grid: (B·Hkv, Sq/BQ, Skv/BK), kv innermost so the online-softmax scratch
+carries across KV blocks for a fixed query block. Causal + window
+structure is exploited two ways:
+  * blocks entirely above the diagonal (kv_start > q_end) are skipped via
+    ``pl.when`` (no MXU work issued);
+  * blocks entirely below the window (q_start - kv_end ≥ window) likewise.
+
+Block sizes default to (BQ, BK) = (512, 512): q/k/v tiles are
+512 × q_per_kv·D ≤ 512·8·256·2B = 2 MiB — three operands + fp32 scratch
+fit VMEM with double buffering. All matmul dims are multiples of 128 (MXU
+aligned) for every assigned config (head_dim ∈ {64, 128, 256}).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
+            *, bq: int, bk: int, q_per_kv: int, head_dim: int,
+            window: int, softcap: float, num_kv_blocks: int, seq: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qb * bq
+    kv_start = kb * bk
+
+    # structural skip: fully masked blocks do no work
+    above_diag = kv_start > q_start + bq - 1
+    below_window = (window > 0) & (q_start - (kv_start + bk - 1) >= window)
+
+    @pl.when(jnp.logical_not(above_diag | below_window))
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)   # (BQ, qpk, D)
+        k = k_ref[0].astype(jnp.float32)   # (BK, D)
+        v = v_ref[0].astype(jnp.float32)   # (BK, D)
+
+        s = jnp.einsum("qpd,kd->pqk", q, k) / math.sqrt(head_dim)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+
+        q_pos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (1, bq, bk), 1)
+        k_pos = kv_start + jax.lax.broadcasted_iota(
+            jnp.int32, (1, bq, bk), 2)
+        mask = (q_pos >= k_pos) & (k_pos < seq) & (q_pos < seq)
+        if window:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + jnp.einsum(
+            "pqk,kd->pqd", p, v)
+        m_ref[...] = m_new
+
+    @pl.when(kb == num_kv_blocks - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        out = acc_ref[...] / safe[..., None]          # (qpk, BQ, D)
+        out_ref[0] = out.swapaxes(0, 1).astype(out_ref.dtype)
+
+
+def flash_prefill_pallas(q, k, v, *, window: int = 0, softcap: float = 0.0,
+                         bq: int = 512, bk: int = 512,
+                         interpret: bool = False):
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D). Causal. Returns (B,S,Hq,D)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    qpk = Hq // Hkv
+
+    bq = min(bq, S)
+    bk = min(bk, S)
+    pad_q = (-S) % bq
+    pad_k = (-S) % bk
+    Sq, Sk = S + pad_q, S + pad_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    # (B, S, Hkv, qpk, D) → flatten (B·Hkv) into the grid's major axis
+    qg = q.reshape(B, Sq, Hkv, qpk, D).transpose(0, 2, 1, 3, 4) \
+          .reshape(B * Hkv, Sq, qpk, D)
+    kg = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+
+    grid = (B * Hkv, Sq // bq, Sk // bk)
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, q_per_kv=qpk, head_dim=D, window=window,
+        softcap=softcap, num_kv_blocks=Sk // bk, seq=S)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, qpk, D), lambda h, qb, kb: (h, qb, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, qb, kb: (h, kb, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, qb, kb: (h, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, qpk, D),
+                               lambda h, qb, kb: (h, qb, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, Sq, qpk, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qpk, bq), jnp.float32),
+            pltpu.VMEM((qpk, bq), jnp.float32),
+            pltpu.VMEM((qpk, bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+
+    out = out.reshape(B, Hkv, Sq, qpk, D).transpose(0, 2, 1, 3, 4) \
+             .reshape(B, Sq, Hq, D)
+    return out[:, :S]

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for causal (windowed, softcapped, GQA) attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q, k, v, *, window: int = 0, softcap: float = 0.0):
+    """q: (B,S,Hq,D); k,v: (B,S,Hkv,D). Causal full-materialize oracle."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    qpk = Hq // Hkv
+    qg = q.astype(jnp.float32).reshape(B, S, Hkv, qpk, D)
+    s = jnp.einsum("bqgpd,bkgd->bgpqk", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = qp >= kp
+    if window:
+        mask &= qp - kp < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgpqk,bkgd->bqgpd", w, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, D).astype(q.dtype)

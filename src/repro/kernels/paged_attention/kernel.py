@@ -1,0 +1,198 @@
+"""Paged decode attention with RPCool sandbox checks — Pallas TPU kernel.
+
+The block table IS the RPC argument: a pointer-rich structure in shared
+memory (§4.1). The kernel dereferences each "pointer" (pool page id) under
+the sandbox contract (§4.4):
+
+  * bounds check   — page must lie inside the sandboxed pool range;
+  * bitmap check   — the sandbox permission bitmap must allow the page
+                     (the MPK key check);
+  * seal check     — the page must be SEALED (in-flight RPC args are
+                     immutable, §4.5) — the receiver-side verification of
+                     Fig. 8 step 4, done per dereference;
+
+A violating dereference is *masked* (contributes nothing to the softmax)
+and counted in the ``oob`` output — the kernel-space analogue of the
+SIGSEGV→RPC-error path (a TPU kernel cannot trap).
+
+Layout / tiling:
+  q          (B, Hq, D)            — one decode token per sequence
+  k_pool     (P, T, Hkv, D)        — the shared KV heap (P pages × T tok)
+  v_pool     (P, T, Hkv, D)
+  block_tab  (B, MAXP) int32       — scalar-prefetched (SMEM): drives the
+                                     K/V BlockSpec index_map (the pointer
+                                     dereference happens at DMA-issue time)
+  seq_lens   (B,) int32            — valid tokens per sequence
+  perm_bits  (P,) int32            — heap permission words (bit0 = SEALED)
+  sandbox    (3,) int32            — lo page, hi page, enforce?
+  bitmap     (P,) int32            — sandbox permission bitmap
+
+Grid: (B, MAXP). The page axis is innermost so the online-softmax scratch
+(m, l, acc) carries across pages of one sequence in VMEM. Each grid step
+DMAs one (T, Hkv, D) K page + V page into VMEM: T=64, Hkv·D ≤ 2048 ⇒
+≤ 512 KiB per operand pair — comfortably inside the ~16 MiB VMEM budget
+with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_PAGE_TOKENS = 64
+
+PERM_SEALED = 1  # bit0 — mirrors repro.core.heap.PERM_SEALED
+
+
+def _kernel(
+    # scalar-prefetch refs (SMEM)
+    block_tab_ref, seq_lens_ref, perm_ref, sandbox_ref, bitmap_ref,
+    # array refs (VMEM blocks)
+    q_ref, k_ref, v_ref,
+    # outputs
+    out_ref, oob_ref,
+    # scratch
+    m_ref, l_ref, acc_ref,
+    *,
+    page_tokens: int,
+    num_kv: int,
+    q_per_kv: int,
+    head_dim: int,
+    max_pages: int,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        oob_ref[0] = 0
+
+    page_id = block_tab_ref[b, p]
+    seq_len = seq_lens_ref[b]
+    sb_lo, sb_hi, sb_on = sandbox_ref[0], sandbox_ref[1], sandbox_ref[2]
+
+    # ---- the sandboxed dereference (§4.4) --------------------------------
+    n_pages_needed = (seq_len + page_tokens - 1) // page_tokens
+    in_use = p < n_pages_needed
+    in_bounds = (page_id >= sb_lo) & (page_id < sb_hi)
+    clamped = jnp.clip(page_id, 0, bitmap_ref.shape[0] - 1)
+    allowed = bitmap_ref[clamped] > 0
+    sealed = (perm_ref[clamped] & PERM_SEALED) > 0
+    ok = in_bounds & allowed & sealed
+    valid_page = in_use & jnp.where(sb_on > 0, ok, in_bounds)
+
+    # SIGSEGV analogue: count violating dereferences of in-use entries
+    oob_ref[0] += jnp.where(in_use & ~valid_page, 1, 0).astype(jnp.int32)
+
+    # ---- online softmax over this page -----------------------------------
+    q = q_ref[0].astype(jnp.float32)           # (Hq, D)
+    k = k_ref[0].astype(jnp.float32)           # (T, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    qg = q.reshape(num_kv, q_per_kv, head_dim)
+    scale = 1.0 / math.sqrt(head_dim)
+    s = jnp.einsum("gpd,tgd->gpt", qg, k) * scale       # (Hkv, qpk, T)
+
+    # token-level validity inside the page
+    tok_pos = p * page_tokens + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, page_tokens), 2)
+    tok_ok = (tok_pos < seq_len) & valid_page
+    s = jnp.where(tok_ok, s, -jnp.inf)
+
+    m_prev = m_ref[...]                                  # (Hkv, qpk)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard: all -inf rows (nothing valid yet) — keep m at -inf, alpha 1
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+    alpha = jnp.where(jnp.isfinite(m_new), alpha, 1.0)
+    pexp = jnp.where(
+        jnp.isfinite(m_new)[..., None], jnp.exp(s - m_new[..., None]), 0.0)
+
+    l_new = l_prev * alpha + jnp.sum(pexp, axis=-1)
+    acc_new = acc_ref[...] * alpha[..., None] + jnp.einsum(
+        "gpt,tgd->gpd", pexp, v)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(p == max_pages - 1)
+    def _finish():
+        l = l_ref[...]
+        safe_l = jnp.where(l > 0, l, 1.0)
+        out = (acc_ref[...] / safe_l[..., None]).reshape(
+            num_kv * q_per_kv, head_dim)
+        out_ref[0] = out.astype(out_ref.dtype)
+
+
+def paged_attention_pallas(
+    q, k_pool, v_pool, block_tab, seq_lens, perm_bits, sandbox, bitmap,
+    *, interpret: bool = False,
+):
+    """q: (B, Hq, D); pools: (P, T, Hkv, D); block_tab: (B, MAXP) i32.
+
+    Returns (out (B, Hq, D), oob (B,) i32).
+    """
+    B, Hq, D = q.shape
+    P, T, Hkv, _ = k_pool.shape
+    MAXP = block_tab.shape[1]
+    qpk = Hq // Hkv
+
+    grid = (B, MAXP)
+
+    def q_map(b, p, *refs):
+        return (b, 0, 0)
+
+    def kv_map(b, p, block_tab, seq_lens, perm, sandbox, bitmap):
+        page = block_tab[b, p]
+        return (jnp.clip(page, 0, P - 1), 0, 0, 0)
+
+    def out_map(b, p, *refs):
+        return (b, 0, 0)
+
+    def oob_map(b, p, *refs):
+        return (b,)
+
+    kernel = functools.partial(
+        _kernel, page_tokens=T, num_kv=Hkv, q_per_kv=qpk, head_dim=D,
+        max_pages=MAXP)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), q_map),
+            pl.BlockSpec((1, T, Hkv, D), kv_map),
+            pl.BlockSpec((1, T, Hkv, D), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Hq, D), out_map),
+            pl.BlockSpec((1,), oob_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, qpk), jnp.float32),
+            pltpu.VMEM((Hkv, qpk), jnp.float32),
+            pltpu.VMEM((Hkv, qpk, D), jnp.float32),
+        ],
+    )
+
+    out, oob = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(block_tab, seq_lens, perm_bits, sandbox, bitmap, q, k_pool, v_pool)
+    return out, oob

@@ -1,0 +1,81 @@
+"""Scope page gather/scatter — Pallas TPU kernel.
+
+The fallback transport (§5.6) and ``copy_from`` deep copies move *pages*:
+gather the scope's pages from the pool into a contiguous wire buffer (for
+the pod-axis ``ppermute``) and scatter them back into the destination
+pool. The page list is a scalar-prefetched "pointer" array, exactly like
+the paged-attention block table — the same sandbox clamp applies.
+
+This is also the measured ``memcpy`` baseline of Table 1b: copying N
+pages costs O(N·page_bytes) HBM traffic, while seal+sandbox costs O(1)
+permission-word updates — the crossover the paper reports at 2 pages.
+
+Grid: (n_pages,); one page per step. Block = one pool row (page_bytes),
+word-typed for lane alignment.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(pages_ref, pool_ref, out_ref):
+    out_ref[0] = pool_ref[0]
+
+
+def _scatter_kernel(pages_ref, buf_ref, pool_in_ref, out_ref):
+    out_ref[0] = buf_ref[0]
+
+
+def gather_pages_pallas(pool, pages, *, interpret: bool = False):
+    """pool: (P, W) — W words per page; pages: (n,) i32 → (n, W)."""
+    P, W = pool.shape
+    n = pages.shape[0]
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, W),
+                         lambda i, pages: (jnp.clip(pages[i], 0, P - 1), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, W), lambda i, pages: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, W), pool.dtype),
+        interpret=interpret,
+    )(pages, pool)
+
+
+def scatter_pages_pallas(pool, pages, buf, *, interpret: bool = False):
+    """Write buf (n, W) into pool rows `pages`; returns the updated pool.
+
+    Uses input_output_aliasing so the pool is updated in place on TPU (the
+    destination pool is the resident shared heap — no reallocation).
+    """
+    P, W = pool.shape
+    n = pages.shape[0]
+    from jax.experimental.pallas import tpu as pltpu
+
+    row = lambda i, pages: (jnp.clip(pages[i], 0, P - 1), 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, W), lambda i, pages: (i, 0)),  # wire buffer
+            pl.BlockSpec((1, W), row),                      # aliased pool
+        ],
+        out_specs=pl.BlockSpec((1, W), row),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P, W), pool.dtype),
+        input_output_aliases={2: 0},  # pool (input 2, after scalars) ↔ out
+        interpret=interpret,
+    )(pages, buf, pool)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for page gather/scatter."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_pages_ref(pool, pages):
+    return pool[jnp.clip(pages, 0, pool.shape[0] - 1)]
+
+
+def scatter_pages_ref(pool, pages, buf):
+    return pool.at[jnp.clip(pages, 0, pool.shape[0] - 1)].set(buf)

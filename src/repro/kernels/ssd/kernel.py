@@ -1,0 +1,99 @@
+"""Mamba-2 SSD intra-chunk kernel — Pallas TPU.
+
+The chunked SSD algorithm (arXiv:2405.21060 §6) splits the recurrence
+into (a) an intra-chunk dual form — decay-masked (Q×Q) matmuls, MXU food —
+and (b) a short inter-chunk state scan. This kernel computes (a) plus the
+per-chunk boundary states; the O(n_chunks) scan stays in XLA (it is tiny:
+(B, H, N, P) per step).
+
+Per grid step (b, c, hb) the kernel holds in VMEM:
+  x     (Q, HB·P)   e.g. 128 × 8·64 × 4B = 256 KiB (fp32)
+  dt    (Q, HB)
+  B, C  (Q, N)      (shared across heads, G = 1)
+  L     (Q, Q) per head, built head-at-a-time inside the head loop
+  states (HB, N, P) accumulators
+Everything is MXU-aligned for Q ∈ {128, 256}, N ∈ {16, 128}, P = 64.
+
+Outputs: y_diag (B,S,H,P), states (B,nc,H,N,P), decay (B,nc,H).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+            y_ref, st_ref, dec_ref,
+            *, q: int, hb: int, p_dim: int, n_dim: int):
+    x = x_ref[0].astype(jnp.float32)        # (Q, HB, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q, HB)
+    A = a_ref[...].astype(jnp.float32)      # (HB,)
+    Bm = b_ref[0].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)       # (Q, N)
+
+    dA = dt * A[None, :]                    # (Q, HB)
+    cum = jnp.cumsum(dA, axis=0)            # (Q, HB)
+    xdt = x * dt[..., None]                 # (Q, HB, P)
+
+    # scores shared across heads in the block (G = 1)
+    scores = Cm @ Bm.T                      # (Q, Q)
+    tri = jnp.tril(jnp.ones((q, q), jnp.float32))
+
+    # decay matrices per head: L[h] = exp(cum_i - cum_j) masked lower-tri
+    li = cum[:, None, :] - cum[None, :, :]          # (Q, Q, HB)
+    L = jnp.exp(li) * tri[:, :, None]               # (Q, Q, HB)
+    y = jnp.einsum("ij,ijh,jhp->ihp", scores, L, xdt)
+
+    decay_end = jnp.exp(cum[-1:, :] - cum)          # (Q, HB)
+    st = jnp.einsum("jn,jh,jhp->hnp", Bm, decay_end, xdt)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+    st_ref[0, 0] = st.astype(st_ref.dtype)
+    dec_ref[0, 0] = jnp.exp(cum[-1, :]).astype(dec_ref.dtype)
+
+
+def ssd_intra_chunk_pallas(x, dt, A, Bm, Cm, *, chunk: int,
+                           head_block: int = 8, interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N) (G=1 squeezed).
+
+    Returns y_diag (B,S,H,P), states (B,nc,H,N,P), decay (B,nc,H).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, "caller pads S to a chunk multiple"
+    nc = S // Q
+    HB = min(head_block, H)
+    assert H % HB == 0
+    nh = H // HB
+
+    grid = (B, nc, nh)
+    kernel = functools.partial(_kernel, q=Q, hb=HB, p_dim=P, n_dim=N)
+
+    y, st, dec = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, HB, P), lambda b, c, h: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, HB), lambda b, c, h: (b, c, h)),
+            pl.BlockSpec((HB,), lambda b, c, h: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, c, h: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, c, h: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, HB, P), lambda b, c, h: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, HB, N, P), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, HB), lambda b, c, h: (b, c, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, st, dec

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the SSD scan: both a direct sequential recurrence
+(the mathematical ground truth) and the chunked formulation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential_ref(x, dt, A, Bm, Cm, init_state=None):
+    """Token-by-token recurrence — the definitionally-correct oracle.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,G,N) with G=1.
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    x, dt = x.astype(f32), dt.astype(f32)
+    Bm, Cm = Bm.astype(f32)[:, :, 0], Cm.astype(f32)[:, :, 0]  # (B,S,N)
+    s0 = (init_state.astype(f32) if init_state is not None
+          else jnp.zeros((B, H, N, P), f32))
+
+    def step(s, t):
+        xt, dtt, bt, ct = t
+        dA = jnp.exp(dtt * A[None, :])                     # (B,H)
+        s = s * dA[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhp->bhnp", bt, dtt, xt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, s)
+        return s, y
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bm.swapaxes(0, 1), Cm.swapaxes(0, 1))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1), s_final
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, chunk, init_state=None):
+    """The pure-jnp chunked formulation (models.ssm.ssd_chunked)."""
+    from repro.models.ssm import ssd_chunked
+
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk, init_state,
+                       use_kernel=False)

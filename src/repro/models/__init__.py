@@ -1,0 +1,7 @@
+"""Model zoo substrate: configs, layers, attention, SSM, MoE, stacks."""
+
+from .config import LayerSpec, ModelConfig, ShapeConfig, SHAPES
+from .model import Model, build_model
+
+__all__ = ["LayerSpec", "ModelConfig", "ShapeConfig", "SHAPES",
+           "Model", "build_model"]

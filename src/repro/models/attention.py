@@ -1,0 +1,314 @@
+"""Attention: GQA/MHA, RoPE/M-RoPE, sliding windows, qk-norm, KV caches.
+
+Three entry modes share one math core (`_attend`):
+  * full-sequence (train / prefill) — query-chunked so S=32k prefill never
+    materializes an (S, S) score matrix (the pure-JAX stand-in for the
+    Pallas flash kernel, which replaces it on TPU);
+  * decode — one query token against a (possibly ring-buffered) KV cache;
+  * cross — decoder attends to encoder memory (whisper), no causal mask.
+
+KV caches for sliding-window layers are ring buffers of size ``window``
+(gemma3's 5:1 local:global stack stores 1024-token caches for local layers
+— the reason its long_500k cell is feasible at all).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import LayerSpec, ModelConfig
+from .layers import apply_mrope, apply_rope, dense_init, rmsnorm
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, cross: bool = False
+                   ) -> Tuple[Params, Params]:
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, H, Dh)),
+        "wk": dense_init(ks[1], (d, Hkv, Dh)),
+        "wv": dense_init(ks[2], (d, Hkv, Dh)),
+        "wo": dense_init(ks[3], (H, Dh, d)),
+    }
+    ax = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((H, Dh), jnp.bfloat16)
+        p["bk"] = jnp.zeros((Hkv, Dh), jnp.bfloat16)
+        p["bv"] = jnp.zeros((Hkv, Dh), jnp.bfloat16)
+        ax["bq"] = ("heads", "head_dim")
+        ax["bk"] = ("kv_heads", "head_dim")
+        ax["bv"] = ("kv_heads", "head_dim")
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((Dh,), jnp.bfloat16)
+        p["k_norm"] = jnp.ones((Dh,), jnp.bfloat16)
+        ax["q_norm"] = ("head_dim",)
+        ax["k_norm"] = ("head_dim",)
+    return p, ax
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+def _project_q(x, p, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    return q
+
+
+def _project_kv(x, p, cfg: ModelConfig):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+def _rope_qk(q, k, positions, cfg: ModelConfig, spec: LayerSpec):
+    if cfg.rope_kind == "none":
+        return q, k
+    if cfg.rope_kind == "mrope":
+        # positions: (3, B, S)
+        q = apply_mrope(q, positions, spec.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, spec.rope_theta, cfg.mrope_sections)
+        return q, k
+    q = apply_rope(q, positions, spec.rope_theta)
+    k = apply_rope(k, positions, spec.rope_theta)
+    return q, k
+
+
+def _scalar_pos(positions):
+    """(B, S) int positions from whatever rope positions we carry."""
+    return positions[0] if positions.ndim == 3 else positions
+
+
+# ---------------------------------------------------------------------------
+# core attention math (GQA, chunked over queries)
+# ---------------------------------------------------------------------------
+def _attend(q, k, v, q_pos, kv_pos, *, causal: bool, window: int,
+            softcap: float, kv_valid=None, q_chunk: int = 1024):
+    """q: (B,Sq,H,D); k,v: (B,Skv,Hkv,D); *_pos: (B,S*) or None.
+
+    Query-chunked: scores materialize as (B, Hkv, qpk, Cq, Skv) fp32.
+    """
+    from ..costing import is_costing
+
+    if is_costing():
+        q_chunk = max(q_chunk, q.shape[1])  # de-chunk: exact cost analysis
+
+    B, Sq, H, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    qpk = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    if q_pos is None:
+        q_pos = jnp.zeros((B, Sq), jnp.int32)
+
+    qg = q.reshape(B, Sq, Hkv, qpk, Dh)
+
+    def attend_chunk(qc, qpc):
+        # qc: (B, Cq, Hkv, qpk, D); qpc: (B, Cq)
+        # when heads cannot carry the TP axis (28 ∤ 16: qwen2-vl, 8 < 16:
+        # whisper) the "attn_q" rule shards score rows over it instead —
+        # otherwise attention compute is replicated on every TP rank
+        qc = shard(qc, ("batch", "attn_q", None, None, None))
+        s = jnp.einsum("bqgpd,bkgd->bgpqk", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        s = shard(s, ("batch", None, None, "attn_q", None))
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = jnp.ones((B, 1, 1, qc.shape[1], Skv), bool)
+        if causal:
+            m = qpc[:, :, None] >= kv_pos[:, None, :]      # (B, Cq, Skv)
+            if window:
+                m &= qpc[:, :, None] - kv_pos[:, None, :] < window
+            mask &= m[:, None, None]
+        if kv_valid is not None:
+            mask &= kv_valid[:, None, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgpqk,bkgd->bqgpd", w.astype(v.dtype), v)
+        return o
+
+    if Sq <= q_chunk:
+        out = attend_chunk(qg, q_pos)
+    else:
+        nc = (Sq + q_chunk - 1) // q_chunk
+        pad = nc * q_chunk - Sq
+        qg_p = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        qp_p = jnp.pad(q_pos, ((0, 0), (0, pad)))
+        qg_c = qg_p.reshape(B, nc, q_chunk, Hkv, qpk, Dh).swapaxes(0, 1)
+        qp_c = qp_p.reshape(B, nc, q_chunk).swapaxes(0, 1)
+        out = jax.lax.map(lambda t: attend_chunk(*t), (qg_c, qp_c))
+        out = out.swapaxes(0, 1).reshape(B, nc * q_chunk, Hkv, qpk, Dh)
+        out = out[:, :Sq]
+    return out.reshape(B, Sq, H, Dh)
+
+
+# ---------------------------------------------------------------------------
+# public modes
+# ---------------------------------------------------------------------------
+def attention_full(x, p: Params, cfg: ModelConfig, spec: LayerSpec,
+                   positions, memory=None, want_cache: bool = False,
+                   cache_len: int = 0):
+    """Train / prefill over the full sequence.
+
+    memory: encoder output for cross-attention layers.
+    want_cache: return the KV cache (ring-buffered for windowed layers),
+    sized ``cache_len`` (>= S for self-attn decode continuation).
+    """
+    q = _project_q(x, p, cfg)
+    if memory is not None:
+        k, v = _project_kv(memory, p, cfg)
+        out = _attend(q, k, v, None, None, causal=False,
+                      window=0, softcap=cfg.attn_logit_softcap)
+        cache = {"k": k, "v": v} if want_cache else None
+    else:
+        k, v = _project_kv(x, p, cfg)
+        q, k = _rope_qk(q, k, positions, cfg, spec)
+        q = shard(q, ("batch", "seq", "heads", None))
+        k = shard(k, ("batch", "seq", "kv_heads", None))
+        pos = _scalar_pos(positions)
+        out = _attend(q, k, v, pos, pos[:, : k.shape[1]], causal=True,
+                      window=spec.sliding_window,
+                      softcap=cfg.attn_logit_softcap)
+        cache = None
+        if want_cache:
+            cache = _build_cache(k, v, pos, spec.sliding_window, cache_len)
+    out = shard(out, ("batch", "seq", "heads", None))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, cache
+
+
+def _build_cache(k, v, pos, window: int, cache_len: int):
+    """Prefill→decode cache. Windowed layers keep a ring of the last
+    ``window`` tokens; global layers keep everything up to cache_len."""
+    B, S = k.shape[0], k.shape[1]
+    size = min(window, cache_len) if window else cache_len
+    ck = jnp.zeros((B, size) + k.shape[2:], k.dtype)
+    cv = jnp.zeros_like(ck)
+    cpos = jnp.full((B, size), -1, jnp.int32)
+    if window and S > size:
+        k, v, pos = k[:, -size:], v[:, -size:], pos[:, -size:]
+        S = size
+    slots = pos % size if window else pos
+    bidx = jnp.arange(B)[:, None]
+    ck = ck.at[bidx, slots[:, :S]].set(k)
+    cv = cv.at[bidx, slots[:, :S]].set(v)
+    cpos = cpos.at[bidx, slots[:, :S]].set(pos[:, :S])
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+KV_INT8_SCALE = 0.05  # fixed symmetric scale for int8 KV caches (v2 would
+                      # carry per-head scales; the traffic win is identical)
+
+
+def _kv_load(c):
+    if c.dtype == jnp.int8:
+        return c.astype(jnp.bfloat16) * KV_INT8_SCALE
+    return c
+
+
+def _kv_store(x, dtype):
+    if dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) / KV_INT8_SCALE),
+                        -127, 127).astype(jnp.int8)
+    return x.astype(dtype)
+
+
+def attention_decode(x, p: Params, cfg: ModelConfig, spec: LayerSpec,
+                     cache: Params, pos, memory_cache: Optional[Params] = None):
+    """One-token decode. x: (B, 1, D); pos: (B,) int32 current position,
+    or a scalar () int32 when every sequence is at the same position (the
+    serve_step geometry) — the scalar path uses dynamic_update_slice,
+    which XLA aliases in place instead of emitting a gather/scatter copy
+    of the whole cache.
+
+    Self-attn: writes K/V into the (ring) cache, attends over valid slots.
+    Cross-attn (memory_cache given): attends over the sealed encoder KV.
+    """
+    B = x.shape[0]
+    uniform = (jnp.ndim(pos) == 0)
+    if uniform:
+        pos_vec = jnp.broadcast_to(pos[None], (B,))
+    else:
+        pos_vec = pos
+    q = _project_q(x, p, cfg)
+
+    if memory_cache is not None:
+        out = _attend(q, memory_cache["k"], memory_cache["v"], None, None,
+                      causal=False, window=0,
+                      softcap=cfg.attn_logit_softcap)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        return y, cache
+
+    k_new, v_new = _project_kv(x, p, cfg)
+    pos2 = pos_vec[:, None]  # (B, 1)
+    if cfg.rope_kind == "mrope":
+        pos3 = jnp.broadcast_to(pos2[None], (3, B, 1))
+        q = apply_mrope(q, pos3, spec.rope_theta, cfg.mrope_sections)
+        k_new = apply_mrope(k_new, pos3, spec.rope_theta, cfg.mrope_sections)
+    elif cfg.rope_kind == "rope":
+        q = apply_rope(q, pos2, spec.rope_theta)
+        k_new = apply_rope(k_new, pos2, spec.rope_theta)
+
+    size = cache["k"].shape[1]
+    kdt = cache["k"].dtype
+    if uniform:
+        slot = (pos % size) if spec.sliding_window else pos
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], _kv_store(k_new, kdt), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], _kv_store(v_new, kdt), slot, axis=1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.broadcast_to(pos[None, None], (B, 1)),
+            slot, axis=1)
+    else:
+        slot = (pos_vec % size) if spec.sliding_window else pos_vec
+        bidx = jnp.arange(B)
+        ck = cache["k"].at[bidx, slot].set(_kv_store(k_new[:, 0], kdt))
+        cv = cache["v"].at[bidx, slot].set(_kv_store(v_new[:, 0], kdt))
+        cpos = cache["pos"].at[bidx, slot].set(pos_vec)
+
+    ck_s = shard(_kv_load(ck), ("batch", "kv_seq", "kv_heads", None))
+    cv_s = shard(_kv_load(cv), ("batch", "kv_seq", "kv_heads", None))
+    valid = cpos >= 0
+    if spec.sliding_window:
+        valid &= pos_vec[:, None] - cpos < spec.sliding_window
+    out = _attend(q, ck_s, cv_s, pos2, cpos, causal=True,
+                  window=0,  # window already enforced through `valid`
+                  softcap=cfg.attn_logit_softcap, kv_valid=valid)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+def empty_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                cache_len: int, dtype=jnp.bfloat16) -> Params:
+    size = min(spec.sliding_window, cache_len) if spec.sliding_window \
+        else cache_len
+    shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.full((batch, size), -1, jnp.int32),
+    }

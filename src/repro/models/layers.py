@@ -1,0 +1,203 @@
+"""Shared neural building blocks: norms, rotary embeddings, MLPs.
+
+Everything is a pure function over explicit param dicts (plain pytrees —
+no framework). ``init_*`` functions return ``(params, axes)`` twin trees:
+the second tree holds logical sharding axis names per leaf, consumed by
+the launcher to build NamedShardings.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+def zeros_init(key, shape, dtype=jnp.bfloat16):
+    return jnp.zeros(shape, dtype=dtype)
+
+
+def ones_init(key, shape, dtype=jnp.bfloat16):
+    return jnp.ones(shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, w, eps: float = 1e-6, gemma: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if w is not None:
+        scale = (1.0 + w.astype(jnp.float32)) if gemma else w.astype(jnp.float32)
+        x = x * scale
+    return x.astype(dt)
+
+
+def layernorm_np(x, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm: no scale, no bias."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, params: Optional[Params], kind: str, eps: float):
+    if kind == "layernorm_np":
+        return layernorm_np(x, eps)
+    if kind == "layernorm":
+        return layernorm(x, params["scale"], params["bias"], eps)
+    if kind == "rmsnorm_gemma":
+        return rmsnorm(x, params["scale"], eps, gemma=True)
+    return rmsnorm(x, params["scale"], eps)
+
+
+def init_norm(key, d: int, kind: str) -> Tuple[Params, Params]:
+    if kind == "layernorm_np":
+        return {}, {}
+    if kind == "layernorm":
+        return (
+            {"scale": jnp.ones((d,), jnp.bfloat16),
+             "bias": jnp.zeros((d,), jnp.bfloat16)},
+            {"scale": ("embed",), "bias": ("embed",)},
+        )
+    if kind == "rmsnorm_gemma":
+        return ({"scale": jnp.zeros((d,), jnp.bfloat16)},
+                {"scale": ("embed",)})
+    return ({"scale": jnp.ones((d,), jnp.bfloat16)}, {"scale": ("embed",)})
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (RoPE and Qwen2-VL's M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    inv = rope_freqs(x.shape[-1], theta)                 # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: Tuple[int, ...]):
+    """Qwen2-VL multimodal RoPE (arXiv:2409.12191).
+
+    positions3: (3, B, S) — temporal/height/width position streams. The
+    head_dim/2 frequency slots are partitioned into ``sections`` (e.g.
+    16/24/24 for head_dim 128), each driven by its own position stream.
+    For pure text the three streams are identical ⇒ reduces to 1-D RoPE.
+    """
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)  # (D/2,)
+    # section id per frequency slot
+    sec_ids = jnp.repeat(jnp.arange(len(sections)),
+                         jnp.asarray(sections), total_repeat_length=D // 2)
+    pos = positions3.astype(jnp.float32)                 # (3, B, S)
+    ang_all = pos[..., None] * inv                       # (3, B, S, D/2)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 0, -1),                    # (B, S, D/2, 3)
+        sec_ids[None, None, :, None], axis=-1)[..., 0]   # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_apply(x, p: Params, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+        h = shard(h, ("batch", "seq", "mlp"))
+        return h @ p["wo"]
+    # gelu (whisper)
+    h = jax.nn.gelu(x @ p["wi"] + p.get("bi", 0), approximate=True)
+    h = shard(h, ("batch", "seq", "mlp"))
+    return h @ p["wo"] + p.get("bo", 0)
+
+
+def init_mlp(key, d: int, d_ff: int, kind: str) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        p = {
+            "wi_gate": dense_init(ks[0], (d, d_ff)),
+            "wi_up": dense_init(ks[1], (d, d_ff)),
+            "wo": dense_init(ks[2], (d_ff, d), in_axis=0),
+        }
+        ax = {
+            "wi_gate": ("embed", "mlp"),
+            "wi_up": ("embed", "mlp"),
+            "wo": ("mlp", "embed"),
+        }
+        return p, ax
+    p = {
+        "wi": dense_init(ks[0], (d, d_ff)),
+        "bi": jnp.zeros((d_ff,), jnp.bfloat16),
+        "wo": dense_init(ks[1], (d_ff, d)),
+        "bo": jnp.zeros((d,), jnp.bfloat16),
+    }
+    ax = {"wi": ("embed", "mlp"), "bi": ("mlp",),
+          "wo": ("mlp", "embed"), "bo": ("embed",)}
+    return p, ax
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embed(key, vocab: int, d: int, tie: bool) -> Tuple[Params, Params]:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": dense_init(k1, (vocab, d), in_axis=1)}
+    ax = {"tok": ("vocab", "embed")}
+    if not tie:
+        p["unembed"] = dense_init(k2, (d, vocab))
+        ax["unembed"] = ("embed", "vocab")
+    return p, ax
+
+
+def embed_tokens(tokens, p: Params, scale: bool, d: int):
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(d), x.dtype)
+    return x
+
+
+def unembed(x, p: Params):
+    w = p.get("unembed")
+    if w is None:
+        w = p["tok"].T
+    logits = x @ w
+    return shard(logits, ("batch", "seq", "vocab"))

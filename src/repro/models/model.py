@@ -1,0 +1,164 @@
+"""Top-level Model: init / train loss / prefill / decode for every family.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions
+(pjit-able). Batches:
+
+  LM (dense/moe/ssm/hybrid):  {"tokens": (B,S) i32, "labels": (B,S) i32}
+  vlm (qwen2-vl backbone):    + {"positions": (3,B,S) i32}  (M-RoPE streams)
+  audio (whisper backbone):   + {"frames": (B,S_enc,D) bf16} (stub frontend)
+
+Labels < 0 are masked out of the loss. Cross-entropy runs in fp32 with the
+logits kept vocab-sharded.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import embed_tokens, init_embed, init_norm, apply_norm, unembed
+from .transformer import (
+    apply_stack_decode,
+    apply_stack_full,
+    empty_stack_cache,
+    encode,
+    init_encoder,
+    init_stack,
+    stack_layer_axes,
+)
+
+Params = Dict[str, Any]
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # -- init ---------------------------------------------------------------
+    def init_with_axes(self, key) -> Tuple[Params, Params]:
+        cfg = self.cfg
+        k_e, k_s, k_n, k_enc = jax.random.split(key, 4)
+        p: Params = {}
+        ax: Params = {}
+        p["embed"], ax["embed"] = init_embed(
+            k_e, cfg.vocab_size, cfg.d_model, cfg.tie_embeddings)
+        p["stack"], ax["stack"] = init_stack(k_s, cfg)
+        p["norm_f"], ax["norm_f"] = init_norm(k_n, cfg.d_model, cfg.norm_kind)
+        if cfg.encoder_layers:
+            p["encoder"], ax["encoder"] = init_encoder(k_enc, cfg)
+        return p, ax
+
+    def init(self, key) -> Params:
+        return self.init_with_axes(key)[0]
+
+    def axes(self) -> Params:
+        """Logical axes tree matching init() — computed structurally.
+
+        The axes tree is pure python built alongside the param tree, so it
+        can be captured as a tracing side effect under eval_shape (no
+        arrays are ever materialized)."""
+        captured = {}
+
+        def f(key):
+            p, ax = self.init_with_axes(key)
+            captured["ax"] = ax
+            return p
+
+        jax.eval_shape(f, jax.random.PRNGKey(0))
+        return captured["ax"]
+
+    def param_shapes(self) -> Params:
+        """ShapeDtypeStruct tree of the params (no allocation)."""
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # -- helpers --------------------------------------------------------------
+    def _positions(self, batch, B, S):
+        cfg = self.cfg
+        if cfg.rope_kind == "mrope":
+            pos = batch.get("positions")
+            if pos is None:
+                p1 = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+                pos = jnp.broadcast_to(p1[None], (3, B, S))
+            return pos
+        return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def _memory(self, params, batch):
+        if self.cfg.encoder_layers and "frames" in batch:
+            return encode(params["encoder"], self.cfg, batch["frames"])
+        return None
+
+    # -- training -----------------------------------------------------------
+    def loss_fn(self, params: Params, batch: Dict[str, Any],
+                remat: bool = True, use_kernel: bool = False):
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        x = embed_tokens(tokens, params["embed"], cfg.embed_scale,
+                         cfg.d_model)
+        x = shard(x, ("batch", "seq", "embed"))
+        positions = self._positions(batch, B, S)
+        memory = self._memory(params, batch)
+        x, aux, _ = apply_stack_full(
+            x, params["stack"], cfg, positions, memory=memory,
+            remat=remat, use_kernel=use_kernel)
+        x = apply_norm(x, params.get("norm_f"), cfg.norm_kind, cfg.norm_eps)
+        logits = unembed(x, params["embed"])
+
+        logits = logits.astype(jnp.float32)
+        mask = (labels >= 0).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * mask
+        loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+        if cfg.num_experts:
+            loss = loss + cfg.router_aux_coef * aux
+        metrics = {"loss": loss, "tokens": jnp.sum(mask), "aux": aux}
+        return loss, metrics
+
+    # -- serving ------------------------------------------------------------
+    def prefill(self, params: Params, batch: Dict[str, Any],
+                cache_len: Optional[int] = None, use_kernel: bool = False):
+        """Process the prompt; returns (last_token_logits, cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        cache_len = cache_len or S
+        x = embed_tokens(tokens, params["embed"], cfg.embed_scale,
+                         cfg.d_model)
+        x = shard(x, ("batch", "seq", "embed"))
+        positions = self._positions(batch, B, S)
+        memory = self._memory(params, batch)
+        x, _, cache = apply_stack_full(
+            x, params["stack"], cfg, positions, memory=memory,
+            want_cache=True, cache_len=cache_len, use_kernel=use_kernel)
+        x = apply_norm(x[:, -1:], params.get("norm_f"), cfg.norm_kind,
+                       cfg.norm_eps)
+        logits = unembed(x, params["embed"])[:, 0]
+        return logits.astype(jnp.float32), cache
+
+    def decode_step(self, params: Params, token, pos, cache: Params):
+        """token: (B,) i32; pos: (B,) i32; returns (logits (B,V), cache)."""
+        cfg = self.cfg
+        x = embed_tokens(token[:, None], params["embed"], cfg.embed_scale,
+                         cfg.d_model)
+        x, cache = apply_stack_decode(x, params["stack"], cfg, cache, pos)
+        x = apply_norm(x, params.get("norm_f"), cfg.norm_kind, cfg.norm_eps)
+        logits = unembed(x, params["embed"])[:, 0]
+        return logits.astype(jnp.float32), cache
+
+    def empty_cache(self, batch: int, cache_len: int,
+                    kv_dtype=jnp.bfloat16) -> Params:
+        return empty_stack_cache(self.cfg, batch, cache_len,
+                                 enc_len=self.cfg.encoder_seq,
+                                 kv_dtype=kv_dtype)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,197 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based grouped dispatch.
+
+TPU-native formulation: tokens are argsorted by expert id, packed into an
+(E, C, D) buffer (capacity C per expert, capacity-factor overflow drop —
+GShard-style), pushed through batched expert matmuls (one (E, ·, ·)
+einsum = E MXU matmuls), and combined back with routing weights. With EP
+the (E, ·) leading axis is sharded over ``model``: the scatter into the
+expert buffer is the all-to-all the SPMD partitioner materializes.
+
+Token groups: dispatch is chunked into groups of ``group_size`` tokens so
+the transient (E, C, D) buffer stays VMEM/HBM-friendly at 32k sequences —
+the scan carries nothing, groups are independent (GShard's "G" dim).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import dense_init
+
+Params = Dict[str, Any]
+
+# Dropless mode: exact top-k MoE via jax.lax.ragged_dot (no capacity, no
+# token dropping). Used for decode/serving and numerics tests, where
+# capacity-drop nondeterminism is unacceptable. The capacity-einsum path
+# stays the default for distributed training: its (E, C, D) buffer shards
+# cleanly over the EP axis, while ragged group sizes do not partition.
+_dropless = contextvars.ContextVar("moe_dropless", default=False)
+
+
+@contextlib.contextmanager
+def dropless_moe(enabled: bool = True):
+    tok = _dropless.set(enabled)
+    try:
+        yield
+    finally:
+        _dropless.reset(tok)
+
+
+def init_moe(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, F)),
+        "w_up": dense_init(ks[2], (E, d, F)),
+        "w_down": dense_init(ks[3], (E, F, d)),
+    }
+    ax = {
+        "router": ("embed", None),
+        "w_gate": ("expert", "embed", "mlp"),
+        "w_up": ("expert", "embed", "mlp"),
+        "w_down": ("expert", "mlp", "embed"),
+    }
+    return p, ax
+
+
+def _dispatch_groups(xg, p, cfg: ModelConfig, capacity: int):
+    """Vectorized GShard-style dispatch. xg: (ng, G, D) token groups.
+
+    The group dim stays a TENSOR dim (never a scan axis!): groups inherit
+    the batch sharding, so routing/sort/scatter are device-local, and the
+    two sharding constraints around the expert matmuls make the SPMD
+    partitioner emit exactly the GShard pair of all-to-alls
+    (tokens→experts, experts→tokens). A ``lax.map`` over groups — the
+    obvious formulation — serializes a *sharded* axis and forces XLA to
+    all-gather every operand (measured: 485 s collective term for
+    qwen3-moe train_4k; see EXPERIMENTS.md §Perf hillclimb 2).
+
+    Returns (y (ng, G, D), aux).
+    """
+    ng, G, D = xg.shape
+    E, k = cfg.num_experts, cfg.top_k
+    C = capacity
+    gax = _group_axis(ng)  # None when ng doesn't divide the DP extent
+
+    xg = shard(xg, (gax, None, "embed"))
+    logits = xg.astype(jnp.float32) @ p["router"]            # (ng, G, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)                   # (ng, G, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    flat_e = idx.reshape(ng, G * k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    counts = jnp.zeros((ng, E), jnp.int32).at[
+        jnp.arange(ng)[:, None], flat_e].add(1)
+    starts = jnp.cumsum(counts, axis=1) - counts             # exclusive
+    rank = jnp.arange(G * k)[None] - jnp.take_along_axis(
+        starts, sorted_e, axis=1)
+    keep = rank < C
+    dest = jnp.where(keep, sorted_e * C + rank, E * C)       # (ng, G*k)
+
+    gidx = jnp.arange(ng)[:, None]
+    token_of_slot = order // k                               # (ng, G*k)
+    xs = jnp.take_along_axis(xg, token_of_slot[..., None], axis=1)
+    buf = jnp.zeros((ng, E * C + 1, D), xg.dtype).at[gidx, dest].set(
+        jnp.where(keep[..., None], xs, 0))
+    buf = buf[:, :-1].reshape(ng, E, C, D)
+
+    # tokens→experts all-to-all: group-sharded → expert-sharded
+    buf = shard(buf, (None, "expert", None, "embed"))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])) * \
+        jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    h = shard(h, (None, "expert", None, "mlp"))
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    # experts→tokens all-to-all: back to group-sharded
+    out = shard(out, (gax, None, None, "embed"))
+
+    flat_out = jnp.concatenate(
+        [out.reshape(ng, E * C, D),
+         jnp.zeros((ng, 1, D), out.dtype)], axis=1)
+    y_slot = jnp.take_along_axis(flat_out, dest[..., None], axis=1)
+    w_slot = jnp.take_along_axis(
+        weights.reshape(ng, G * k), order, axis=1).astype(y_slot.dtype)
+    y = jnp.zeros((ng, G, D), xg.dtype).at[gidx, token_of_slot].add(
+        y_slot * w_slot[..., None])
+
+    # load-balancing aux loss (Switch-style): E · Σ_e f_e · P_e
+    f = counts.astype(jnp.float32) / (G * k)
+    pmean = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(f * pmean, axis=-1))
+    return y, aux
+
+
+def _group_axis(ng: int):
+    """The token-group dim carries the DP sharding iff it divides it."""
+    from ..sharding import current_mesh, current_rules
+
+    rules, mesh = current_rules(), current_mesh()
+    if not rules or mesh is None:
+        return None
+    r = rules.get("batch")
+    axes = (r,) if isinstance(r, str) else tuple(r or ())
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in axes:
+        dp *= sizes.get(a, 1)
+    return "batch" if dp > 1 and ng % dp == 0 else None
+
+
+def _dispatch_dropless(x, p, cfg: ModelConfig):
+    """Exact (dropless) grouped matmul via ragged_dot. x: (T, D)."""
+    T, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+
+    flat_e = idx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+
+    xs = x[order // k]                                   # (T*k, D) sorted
+    h = jax.nn.silu(jax.lax.ragged_dot(xs, p["w_gate"], counts)) * \
+        jax.lax.ragged_dot(xs, p["w_up"], counts)
+    out = jax.lax.ragged_dot(h, p["w_down"], counts)     # (T*k, D)
+
+    w_slot = weights.reshape(-1)[order].astype(out.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[order // k].add(out * w_slot[:, None])
+
+    f = counts.astype(jnp.float32) / (T * k)
+    aux = E * jnp.sum(f * jnp.mean(probs, axis=0))
+    return y, (aux, jnp.zeros((), jnp.int32))
+
+
+def moe_apply(x, p: Params, cfg: ModelConfig,
+              group_size: int = 4096) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D). Returns (y, aux_loss)."""
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    # (no costing-mode special case: the vectorized dispatch has no scan)
+
+    if _dropless.get():
+        y, (aux, _) = _dispatch_dropless(xt, p, cfg)
+        return y.reshape(B, S, D), aux.astype(jnp.float32)
+    G = min(group_size, T)
+    ng = (T + G - 1) // G
+    pad = ng * G - T
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    capacity = max(1, int(cfg.top_k * G / cfg.num_experts
+                          * cfg.capacity_factor))
+
+    y, aux = _dispatch_groups(xt.reshape(ng, G, D), p, cfg, capacity)
+    y = y.reshape(ng * G, D)[:T].reshape(B, S, D)
+    return y, aux.astype(jnp.float32)

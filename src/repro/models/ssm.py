@@ -1,0 +1,283 @@
+"""Mamba-2 / SSD (state-space duality) layers — arXiv:2405.21060.
+
+Full-sequence mode uses the chunked SSD algorithm: within a chunk the
+recurrence is expanded into a (Q × Q) masked-decay matmul (MXU-friendly —
+the Pallas ``ssd`` kernel implements it on TPU); across chunks a short
+``lax.scan`` carries the (H, N, P) state. Decode mode is the O(1)
+recurrent update.
+
+Layer structure (Mamba-2 block):
+  [z|x|B|C|dt] projections → causal depthwise conv on x/B/C → silu
+  → SSD(x·dt, exp(dt·A), B, C) + D⊙x → gated RMSNorm(y ⊙ silu(z)) → out_proj
+
+Sharding note: the projections are SEPARATE parameters (not the fused
+in_proj of the reference implementation) so that each output stream
+shards cleanly on the TP axis — a fused projection's segment boundaries
+(z at d_inner, B at 2·d_inner, …) do not align with model-axis shards
+and would force XLA to insert gathers after every slice.
+
+Jamba's SSM layers are instantiated through the same SSD block at
+Jamba's dims (d_inner 8192, N 16) — SSD generalizes the S6 recurrence
+(DESIGN.md §Hardware-adaptation).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .config import ModelConfig
+from .layers import dense_init, rmsnorm
+
+Params = Dict[str, Any]
+
+NGROUPS = 1  # B/C shared across heads (Mamba-2 default ngroups=1)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_ssm(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d = cfg.d_model
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    GN = NGROUPS * N
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    p = {
+        "in_z": dense_init(ks[0], (d, di)),
+        "in_x": dense_init(ks[1], (d, di)),
+        "in_B": dense_init(ks[2], (d, GN)),
+        "in_C": dense_init(ks[3], (d, GN)),
+        "in_dt": dense_init(ks[4], (d, H)),
+        "conv_x": dense_init(ks[5], (K, di)),
+        "conv_B": dense_init(ks[6], (K, GN)),
+        "conv_C": dense_init(ks[7], (K, GN)),
+        "conv_bx": jnp.zeros((di,), jnp.bfloat16),
+        "conv_bB": jnp.zeros((GN,), jnp.bfloat16),
+        "conv_bC": jnp.zeros((GN,), jnp.bfloat16),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(
+            jax.random.uniform(jax.random.fold_in(key, 9), (H,),
+                               jnp.float32, jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm_scale": jnp.ones((di,), jnp.bfloat16),
+        "out_proj": dense_init(jax.random.fold_in(key, 10), (di, d)),
+    }
+    ax = {
+        "in_z": ("embed", "ssm_inner"),
+        "in_x": ("embed", "ssm_inner"),
+        "in_B": ("embed", "ssm_state"),
+        "in_C": ("embed", "ssm_state"),
+        "in_dt": ("embed", "ssm_heads"),
+        "conv_x": (None, "ssm_inner"),
+        "conv_B": (None, "ssm_state"),
+        "conv_C": (None, "ssm_state"),
+        "conv_bx": ("ssm_inner",),
+        "conv_bB": ("ssm_state",),
+        "conv_bC": ("ssm_state",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm_scale": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+    return p, ax
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (full sequence)
+# ---------------------------------------------------------------------------
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                use_kernel: bool = False):
+    """Chunked state-space-duality scan.
+
+    x:  (B, S, H, P) — per-head inputs
+    dt: (B, S, H)    — softplus'd step sizes
+    A:  (H,)         — negative decay rates
+    Bm: (B, S, G, N) — input projections (G = 1)
+    Cm: (B, S, G, N) — output projections
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    if use_kernel:
+        from ..kernels.ssd import ops as ssd_ops
+
+        return ssd_ops.ssd_chunked(x, dt, A, Bm, Cm, chunk, init_state)
+
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = (S + Q - 1) // Q
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    f32 = jnp.float32
+    xc = x.reshape(B, nc, Q, H, P).astype(f32)
+    dtc = dt.reshape(B, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(B, nc, Q, NGROUPS, N).astype(f32)
+    Cc = Cm.reshape(B, nc, Q, NGROUPS, N).astype(f32)
+
+    dA = dtc * A[None, None, None, :]          # (B, C, Q, H), ≤ 0
+    cum = jnp.cumsum(dA, axis=2)               # inclusive cumsum
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i ≥ j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,C,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(li), 0.0)
+
+    xdt = xc * dtc[..., None]                   # (B,C,Q,H,P)
+    scores = jnp.einsum("bcign,bcjgn->bcij", Cc, Bc)      # G=1 folded
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp",
+                        scores, L, xdt)
+
+    # chunk-final states: sum_j B_j ⊗ (decay_to_end_j · x_j dt_j)
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,C,Q,H)
+    states = jnp.einsum("bcjgn,bcjh,bcjhp->bchnp",
+                        Bc, decay_end, xdt)               # (B,C,H,N,P)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,C,H)
+    s0 = (init_state.astype(f32) if init_state is not None
+          else jnp.zeros((B, H, N, P), f32))
+
+    def step(s_prev, inp):
+        dec, st = inp  # (B,H), (B,H,N,P)
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    from ..costing import is_costing
+
+    s_final, s_prevs = jax.lax.scan(
+        step, s0, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)),
+        unroll=is_costing())
+    s_prevs = s_prevs.swapaxes(0, 1)                      # (B,C,H,N,P)
+
+    y_off = jnp.einsum("bcign,bchnp,bcih->bcihp",
+                       Cc, s_prevs, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(B, nc * Q, H, P)[:, :S]
+    return y.astype(x.dtype), s_final
+
+
+def ssd_decode(x, dt, A, Bm, Cm, state):
+    """O(1) recurrent update. x: (B,H,P); dt: (B,H); Bm/Cm: (B,G,N);
+    state: (B,H,N,P). Returns (y, new_state)."""
+    f32 = jnp.float32
+    x, dt = x.astype(f32), dt.astype(f32)
+    Bm, Cm, state = Bm.astype(f32), Cm.astype(f32), state.astype(f32)
+    dA = jnp.exp(dt * A[None, :])                          # (B,H)
+    inc = jnp.einsum("bgn,bh,bhp->bhnp", Bm, dt, x)
+    new_state = state * dA[:, :, None, None] + inc
+    y = jnp.einsum("bgn,bhnp->bhp", Cm, new_state)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba-2 block
+# ---------------------------------------------------------------------------
+def _conv_full(xc, w, b):
+    """Causal depthwise conv along seq. xc: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xc, ((0, 0), (K - 1, 0), (0, 0)))
+    # sum_k w[k] * x[s - (K-1) + k]
+    out = sum(pad[:, k : k + xc.shape[1]] * w[k] for k in range(K))
+    return out + b
+
+
+def ssm_forward(x, p: Params, cfg: ModelConfig, want_state: bool = False,
+                use_kernel: bool = False):
+    """Full-sequence Mamba-2 block. x: (B, S, D)."""
+    B, S, _ = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z = x @ p["in_z"]
+    xr = x @ p["in_x"]
+    Br = x @ p["in_B"]
+    Cr = x @ p["in_C"]
+    dt_raw = x @ p["in_dt"]
+
+    xin = jax.nn.silu(_conv_full(xr, p["conv_x"], p["conv_bx"]))
+    Bm = jax.nn.silu(_conv_full(Br, p["conv_B"], p["conv_bB"]))
+    Cm = jax.nn.silu(_conv_full(Cr, p["conv_C"], p["conv_bC"]))
+
+    xin = shard(xin.reshape(B, S, H, P), ("batch", "seq", "ssm_heads", None))
+    Bm = Bm.reshape(B, S, NGROUPS, N)
+    Cm = Cm.reshape(B, S, NGROUPS, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, s_final = ssd_chunked(xin, dt, A, Bm, Cm, cfg.ssm_chunk,
+                             use_kernel=use_kernel)
+    y = y + xin * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    state = None
+    if want_state:
+        Kc = cfg.ssm_conv
+
+        def tail(stream):  # last (K-1) raw conv inputs
+            if S >= Kc - 1:
+                return stream[:, -(Kc - 1):]
+            return jnp.pad(stream, ((0, 0), (Kc - 1 - S, 0), (0, 0)))
+
+        state = {
+            "conv_x": tail(xr), "conv_B": tail(Br), "conv_C": tail(Cr),
+            "ssd": s_final.astype(jnp.float32),
+        }
+    return out, state
+
+
+def ssm_decode_step(x, p: Params, cfg: ModelConfig, state: Params):
+    """One-token decode. x: (B, 1, D); state: conv tails + ssd state."""
+    B = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    xt = x[:, 0]
+    z = xt @ p["in_z"]
+    xr = xt @ p["in_x"]
+    Br = xt @ p["in_B"]
+    Cr = xt @ p["in_C"]
+    dt_raw = xt @ p["in_dt"]
+
+    def conv_step(tail, new, w, b):
+        window = jnp.concatenate([tail, new[:, None]], axis=1)  # (B,K,C)
+        out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w) + b)
+        return out, window[:, 1:]
+
+    xin, ncx = conv_step(state["conv_x"], xr, p["conv_x"], p["conv_bx"])
+    Bm, ncB = conv_step(state["conv_B"], Br, p["conv_B"], p["conv_bB"])
+    Cm, ncC = conv_step(state["conv_C"], Cr, p["conv_C"], p["conv_bC"])
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, new_ssd = ssd_decode(
+        xin.reshape(B, H, P), dt, A,
+        Bm.reshape(B, NGROUPS, N), Cm.reshape(B, NGROUPS, N), state["ssd"])
+    y = y + xin.reshape(B, H, P).astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_scale"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv_x": ncx, "conv_B": ncB, "conv_C": ncC,
+                 "ssd": new_ssd}
+
+
+def empty_ssm_state(cfg: ModelConfig, batch: int) -> Params:
+    GN = NGROUPS * cfg.ssm_state
+    K = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, K - 1, cfg.d_inner), jnp.bfloat16),
+        "conv_B": jnp.zeros((batch, K - 1, GN), jnp.bfloat16),
+        "conv_C": jnp.zeros((batch, K - 1, GN), jnp.bfloat16),
+        "ssd": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32),
+    }

@@ -1,0 +1,349 @@
+"""Unified decoder stack: dense / MoE / SSM / hybrid / enc-dec.
+
+The layer stack is factored into repeating *super-blocks* (see
+``ModelConfig.block_pattern``). Parameters for each pattern position are
+stacked over super-blocks and the stack is applied with ``lax.scan`` —
+compile time and HLO size stay O(pattern) instead of O(num_layers), which
+matters at 48 layers × 512 devices.
+
+Axes trees: every ``init_*`` returns ``(params, axes)`` twin pytrees where
+axes leaves are tuples of logical axis names (see repro.sharding). Helpers
+here treat those tuples as leaves.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .attention import (
+    attention_decode,
+    attention_full,
+    empty_cache,
+    init_attention,
+)
+from .config import LayerSpec, ModelConfig
+from .layers import (
+    apply_norm,
+    embed_tokens,
+    init_embed,
+    init_mlp,
+    init_norm,
+    mlp_apply,
+    unembed,
+)
+from .moe import init_moe, moe_apply
+from .ssm import empty_ssm_state, init_ssm, ssm_decode_step, ssm_forward
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# axes-tree helpers (axes leaves are tuples of logical names)
+# ---------------------------------------------------------------------------
+def is_axes_leaf(x) -> bool:
+    return x is None or (
+        isinstance(x, tuple)
+        and all(e is None or isinstance(e, str) for e in x)
+    )
+
+
+def axes_map(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_axes_leaf)
+
+
+def stack_layer_axes(ax_tree):
+    """Prepend the 'layer' axis to every leaf (stacked over super-blocks)."""
+    return axes_map(lambda a: ("layer",) + tuple(a or ()), ax_tree)
+
+
+def _stack_params(per_block):
+    """[params_b0, params_b1, ...] → stacked leaves (L, ...)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_block)
+
+
+# ---------------------------------------------------------------------------
+# one layer
+# ---------------------------------------------------------------------------
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec
+               ) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 8)
+    p: Params = {}
+    ax: Params = {}
+
+    p["norm_in"], ax["norm_in"] = init_norm(ks[0], cfg.d_model, cfg.norm_kind)
+    if spec.kind == "attn":
+        p["attn"], ax["attn"] = init_attention(ks[1], cfg)
+        if spec.cross_attn:
+            p["norm_cross"], ax["norm_cross"] = init_norm(
+                ks[2], cfg.d_model, cfg.norm_kind)
+            p["cross"], ax["cross"] = init_attention(ks[3], cfg, cross=True)
+    else:
+        p["ssm"], ax["ssm"] = init_ssm(ks[1], cfg)
+
+    has_ffn = spec.moe or cfg.d_ff > 0
+    if has_ffn:
+        p["norm_mlp"], ax["norm_mlp"] = init_norm(
+            ks[4], cfg.d_model, cfg.norm_kind)
+        if spec.moe:
+            p["moe"], ax["moe"] = init_moe(ks[5], cfg)
+        else:
+            p["mlp"], ax["mlp"] = init_mlp(
+                ks[5], cfg.d_model, cfg.d_ff, cfg.mlp_kind)
+    return p, ax
+
+
+def apply_layer_full(x, p: Params, cfg: ModelConfig, spec: LayerSpec,
+                     positions, memory=None, want_cache: bool = False,
+                     cache_len: int = 0, use_kernel: bool = False):
+    """Train/prefill application. Returns (x, aux_loss, cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache: Params = {}
+
+    h = apply_norm(x, p.get("norm_in"), cfg.norm_kind, cfg.norm_eps)
+    if spec.kind == "attn":
+        a, kv = attention_full(h, p["attn"], cfg, spec, positions,
+                               want_cache=want_cache, cache_len=cache_len)
+        if want_cache:
+            cache["self"] = kv
+    else:
+        a, st = ssm_forward(h, p["ssm"], cfg, want_state=want_cache,
+                            use_kernel=use_kernel)
+        if want_cache:
+            cache["ssm"] = st
+    x = x + a
+
+    if spec.cross_attn and memory is not None:
+        h = apply_norm(x, p.get("norm_cross"), cfg.norm_kind, cfg.norm_eps)
+        a, mkv = attention_full(h, p["cross"], cfg, spec, positions,
+                                memory=memory, want_cache=want_cache)
+        if want_cache:
+            cache["cross"] = mkv
+        x = x + a
+
+    if "mlp" in p or "moe" in p:
+        h = apply_norm(x, p.get("norm_mlp"), cfg.norm_kind, cfg.norm_eps)
+        if "moe" in p:
+            m, a_l = moe_apply(h, p["moe"], cfg)
+            aux = aux + a_l
+        else:
+            m = mlp_apply(h, p["mlp"], cfg.mlp_kind)
+        x = x + m
+    x = shard(x, ("batch", "seq", "embed"))
+    return x, aux, cache
+
+
+def apply_layer_decode(x, p: Params, cfg: ModelConfig, spec: LayerSpec,
+                       cache: Params, pos):
+    """One-token decode. Returns (x, new_cache)."""
+    new_cache: Params = {}
+    h = apply_norm(x, p.get("norm_in"), cfg.norm_kind, cfg.norm_eps)
+    if spec.kind == "attn":
+        a, kv = attention_decode(h, p["attn"], cfg, spec, cache["self"], pos)
+        new_cache["self"] = kv
+    else:
+        a, st = ssm_decode_step(h, p["ssm"], cfg, cache["ssm"])
+        new_cache["ssm"] = st
+    x = x + a
+
+    if spec.cross_attn and "cross" in cache:
+        h = apply_norm(x, p.get("norm_cross"), cfg.norm_kind, cfg.norm_eps)
+        a, _ = attention_decode(h, p["cross"], cfg, spec, None, pos,
+                                memory_cache=cache["cross"])
+        new_cache["cross"] = cache["cross"]  # sealed — never rewritten
+        x = x + a
+
+    if "mlp" in p or "moe" in p:
+        h = apply_norm(x, p.get("norm_mlp"), cfg.norm_kind, cfg.norm_eps)
+        if "moe" in p:
+            m, _ = moe_apply(h, p["moe"], cfg)
+        else:
+            m = mlp_apply(h, p["mlp"], cfg.mlp_kind)
+        x = x + m
+    return x, new_cache
+
+
+def empty_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                      cache_len: int, enc_len: int = 0,
+                      kv_dtype=jnp.bfloat16) -> Params:
+    c: Params = {}
+    if spec.kind == "attn":
+        c["self"] = empty_cache(cfg, spec, batch, cache_len, dtype=kv_dtype)
+        if spec.cross_attn:
+            c["cross"] = {
+                "k": jnp.zeros((batch, enc_len, cfg.num_kv_heads,
+                                cfg.head_dim), jnp.bfloat16),
+                "v": jnp.zeros((batch, enc_len, cfg.num_kv_heads,
+                                cfg.head_dim), jnp.bfloat16),
+            }
+    else:
+        c["ssm"] = empty_ssm_state(cfg, batch)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# the stacked decoder
+# ---------------------------------------------------------------------------
+def init_stack(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    pattern = cfg.block_pattern()
+    nb = cfg.num_blocks
+    p: Params = {}
+    ax: Params = {}
+    for i, spec in enumerate(pattern):
+        ks = jax.random.split(jax.random.fold_in(key, i), nb)
+        per_block = [init_layer(k, cfg, spec) for k in ks]
+        p[f"pos{i}"] = _stack_params([pb[0] for pb in per_block])
+        ax[f"pos{i}"] = stack_layer_axes(per_block[0][1])
+    return p, ax
+
+
+def apply_stack_full(x, stack: Params, cfg: ModelConfig, positions,
+                     memory=None, want_cache: bool = False,
+                     cache_len: int = 0, remat: bool = False,
+                     use_kernel: bool = False):
+    pattern = cfg.block_pattern()
+
+    def body(carry, xs):
+        x, aux = carry
+        caches = {}
+        for i, spec in enumerate(pattern):
+            x, a, c = apply_layer_full(
+                x, xs[f"pos{i}"], cfg, spec, positions, memory=memory,
+                want_cache=want_cache, cache_len=cache_len,
+                use_kernel=use_kernel)
+            aux = aux + a
+            if want_cache:
+                caches[f"pos{i}"] = c
+        return (x, aux), caches
+
+    if remat:
+        if isinstance(remat, str) and remat != "full":
+            # e.g. "dots": keep matmul outputs, recompute the cheap ops —
+            # trades activation memory for ~25% less recompute traffic
+            policy = getattr(jax.checkpoint_policies, {
+                "dots": "dots_with_no_batch_dims_saveable",
+            }.get(remat, remat))
+            body = jax.checkpoint(body, policy=policy)
+        else:
+            body = jax.checkpoint(body)
+
+    from ..costing import is_costing
+
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs=stack,
+        unroll=is_costing())
+    return x, aux, (caches if want_cache else None)
+
+
+def apply_stack_decode(x, stack: Params, cfg: ModelConfig, cache: Params,
+                       pos):
+    pattern = cfg.block_pattern()
+
+    def body(x, xs):
+        params_t, cache_t = xs
+        new_caches = {}
+        for i, spec in enumerate(pattern):
+            x, nc = apply_layer_decode(
+                x, params_t[f"pos{i}"], cfg, spec, cache_t[f"pos{i}"], pos)
+            new_caches[f"pos{i}"] = nc
+        return x, new_caches
+
+    from ..costing import is_costing
+
+    x, new_cache = jax.lax.scan(body, x, xs=(stack, cache),
+                                unroll=is_costing())
+    return x, new_cache
+
+
+def stack_cache_axes(cfg: ModelConfig) -> Params:
+    """Logical axes tree matching empty_stack_cache's structure."""
+    pattern = cfg.block_pattern()
+    out = {}
+    for i, spec in enumerate(pattern):
+        c: Params = {}
+        if spec.kind == "attn":
+            c["self"] = {
+                "k": ("layer", "batch", "kv_seq", "kv_heads", None),
+                "v": ("layer", "batch", "kv_seq", "kv_heads", None),
+                "pos": ("layer", "batch", "kv_seq"),
+            }
+            if spec.cross_attn:
+                c["cross"] = {
+                    "k": ("layer", "batch", None, "kv_heads", None),
+                    "v": ("layer", "batch", None, "kv_heads", None),
+                }
+        else:
+            c["ssm"] = {
+                "conv_x": ("layer", "batch", None, "ssm_inner"),
+                "conv_B": ("layer", "batch", None, "ssm_state"),
+                "conv_C": ("layer", "batch", None, "ssm_state"),
+                "ssd": ("layer", "batch", "ssm_heads", None, None),
+            }
+        out[f"pos{i}"] = c
+    return out
+
+
+def empty_stack_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      enc_len: int = 0, kv_dtype=jnp.bfloat16) -> Params:
+    pattern = cfg.block_pattern()
+    nb = cfg.num_blocks
+
+    def rep(leaf):
+        return jnp.broadcast_to(leaf[None], (nb,) + leaf.shape).copy() \
+            if hasattr(leaf, "shape") else leaf
+
+    out = {}
+    for i, spec in enumerate(pattern):
+        c = empty_layer_cache(cfg, spec, batch, cache_len, enc_len,
+                              kv_dtype=kv_dtype)
+        out[f"pos{i}"] = jax.tree.map(rep, c)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper) — uniform bidirectional blocks over stubbed frames
+# ---------------------------------------------------------------------------
+def init_encoder(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    nb = cfg.encoder_layers
+    ks = jax.random.split(key, nb)
+    spec = LayerSpec(kind="attn", rope_theta=cfg.rope_theta)
+    per_block = [init_layer(k, cfg, spec) for k in ks]
+    p = {"blocks": _stack_params([pb[0] for pb in per_block])}
+    ax = {"blocks": stack_layer_axes(per_block[0][1])}
+    p["norm_out"], ax["norm_out"] = init_norm(
+        jax.random.fold_in(key, 99), cfg.d_model, cfg.norm_kind)
+    return p, ax
+
+
+def sinusoid_positions(S: int, d: int, dtype=jnp.bfloat16):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe.astype(dtype)
+
+
+def encode(enc: Params, cfg: ModelConfig, frames):
+    """frames: (B, S_enc, D) stub frontend embeddings (input_specs)."""
+    B, S, D = frames.shape
+    x = frames + sinusoid_positions(S, D, frames.dtype)[None]
+    spec = LayerSpec(kind="attn", rope_theta=cfg.rope_theta)
+    # bidirectional: no causal mask — reuse attention_full's cross path by
+    # passing x as its own memory (no rope, no causal)
+    def body(x, xs):
+        h = apply_norm(x, xs.get("norm_in"), cfg.norm_kind, cfg.norm_eps)
+        a, _ = attention_full(h, xs["attn"], cfg, spec, None, memory=h)
+        x = x + a
+        h = apply_norm(x, xs.get("norm_mlp"), cfg.norm_kind, cfg.norm_eps)
+        x = x + mlp_apply(h, xs["mlp"], cfg.mlp_kind)
+        return x, None
+
+    from ..costing import is_costing
+
+    x, _ = jax.lax.scan(body, x, xs=enc["blocks"], unroll=is_costing())
+    return apply_norm(x, enc.get("norm_out"), cfg.norm_kind, cfg.norm_eps)

@@ -1,0 +1,149 @@
+"""Three-term roofline from dry-run artifacts (TPU v5e targets).
+
+  compute    = FLOPs_per_device / peak_FLOPs           (197 TF/s bf16)
+  memory     = bytes_per_device / HBM_bw               (819 GB/s)
+  collective = collective_bytes_per_device / link_bw   (~50 GB/s/link ICI;
+                                                        DCN for pod axis)
+
+cost_analysis() on the SPMD-partitioned module reports per-device FLOPs/
+bytes; the collective parser (launch.dryrun.collective_bytes) sums operand
+bytes of every collective in the post-SPMD HLO, also per-device.
+
+MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE for train; 2·N_active·tokens
+for inference) anchors the "useful ratio" — how much of compiled compute
+is the model itself vs remat/dispatch overhead.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link (v5e)
+DCN_BW = 25e9            # bytes/s / host-ish (pod axis)
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    step_s: float
+    mfu: float
+    raw: Dict[str, Any]
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.compute_s:.2e} | "
+                f"{self.memory_s:.2e} | {self.collective_s:.2e} | "
+                f"**{self.bottleneck}** | {self.useful_ratio:.2f} | "
+                f"{self.mfu*100:.1f}% |")
+
+
+def model_flops(rec: Dict[str, Any]) -> float:
+    """Per-DEVICE useful model FLOPs for the cell."""
+    n_active = rec["active_params"]
+    devices = rec["devices"]
+    mode = rec["mode"]
+    # tokens processed per step
+    from repro.models.config import SHAPES
+
+    shape = SHAPES[rec["shape"]]
+    if mode == "train":
+        toks = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * toks
+    elif mode == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * toks
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / devices
+
+
+def analyze(rec: Dict[str, Any]) -> Optional[Roofline]:
+    if rec.get("skipped") or "error" in rec:
+        return None
+    flops = rec.get("flops", 0.0)
+    byts = rec.get("bytes_accessed", 0.0)
+    coll = rec.get("collectives", {})
+    coll_ici = sum(v for k, v in coll.items() if k != "count")
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    # pod-axis collectives ride DCN; single-pod artifacts are pure ICI.
+    link = DCN_BW if rec["mesh"] == "multipod" else ICI_BW
+    collective_s = coll_ici / ICI_BW if rec["mesh"] == "pod" \
+        else coll_ici / link
+
+    mf = model_flops(rec)
+    useful = mf / flops if flops else 0.0
+    step = max(compute_s, memory_s, collective_s)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mfu = (mf / step) / PEAK_FLOPS if step > 0 else 0.0
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=mf, hlo_flops=flops,
+        useful_ratio=useful, step_s=step, mfu=mfu, raw=rec)
+
+
+def load_all(artifact_dir: str, mesh: str = "pod",
+             prefer_cost: bool = True) -> List[Roofline]:
+    """Merge: FLOPs/bytes/collectives from the unrolled costing pass
+    (exact), memory_analysis fields from the rolled baseline compile."""
+    out = []
+    for path in sorted(glob.glob(
+            os.path.join(artifact_dir, mesh, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if prefer_cost:
+            cpath = os.path.join(artifact_dir, f"{mesh}_cost",
+                                 os.path.basename(path))
+            if os.path.exists(cpath):
+                with open(cpath) as f:
+                    crec = json.load(f)
+                if "error" not in crec and not crec.get("skipped"):
+                    for k in ("flops", "bytes_accessed", "collectives",
+                              "transcendentals"):
+                        if k in crec:
+                            rec[k] = crec[k]
+        r = analyze(rec)
+        if r:
+            out.append(r)
+    return out
+
+
+def table(rows: List[Roofline]) -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "bottleneck | useful | MFU bound |\n"
+           "|---|---|---|---|---|---|---|---|")
+    return "\n".join([hdr] + [r.row() for r in rows])
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun"))
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args()
+    rows = load_all(args.dir, args.mesh)
+    print(table(rows))
+
+
+if __name__ == "__main__":
+    main()

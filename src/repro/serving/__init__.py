@@ -1,0 +1,7 @@
+"""Serving: paged KV pool on the RPCool heap, continuous batching,
+prefill/decode disaggregation with zero-copy handoff."""
+
+from .kv_pool import PagedKVPool, PoolConfig
+from .engine import Request, ServeEngine
+
+__all__ = ["PagedKVPool", "PoolConfig", "Request", "ServeEngine"]

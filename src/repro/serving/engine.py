@@ -1,0 +1,221 @@
+"""Serving engine: continuous batching with RPCool-disaggregated
+prefill → decode handoff.
+
+Roles (paper ↔ engine):
+  prefill worker = RPC *client*: allocates pool pages (its lease), runs
+      prefill, writes KV into the pages, builds the block table inside an
+      RPCool scope, **seals** it, and calls ``FN_ATTACH`` on the decode
+      channel — the RPC argument is the pointer set, nothing is copied.
+  decode worker = RPC *server*: verifies the seal, adopts the request
+      into the active set, and thereafter dereferences the block table in
+      the paged-attention kernel under the connection's sandbox bitmap.
+  orchestrator  = leases + quota on pool pages; a request whose client
+      stops heartbeating is reclaimed (orphaned-heap GC at request
+      granularity).
+
+The decode loop polls the admission queue under the §5.8 adaptive
+busy-wait policy.
+"""
+
+from __future__ import annotations
+
+import struct
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import addr as gaddr
+from ..core.channel import BusyWaitPolicy, RPC, RpcError
+from ..core.orchestrator import Orchestrator
+from ..models.config import ModelConfig
+from ..models.model import build_model
+from .kv_pool import PagedKVPool, PoolConfig
+from .paged_model import (
+    check_paged_compatible,
+    paged_decode_step,
+    prefill_kv,
+)
+
+FN_ATTACH = 100
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    pages: List[int] = field(default_factory=list)
+    seal_idxs: List[int] = field(default_factory=list)
+    out: List[int] = field(default_factory=list)
+    pos: int = 0          # next position to generate
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, pool_cfg: PoolConfig,
+                 max_active: int = 8, backend: Optional[str] = None,
+                 sleep_us: Optional[float] = None,
+                 quota_pages: Optional[int] = None):
+        check_paged_compatible(cfg)
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.backend = backend
+
+        self.orch = Orchestrator()
+        self.client_pid, self.server_pid = 11, 12
+        if quota_pages is not None:
+            # pool quota: heap page_size × allowed pages (+1 for desc ring)
+            pass
+        self.pool = PagedKVPool(self.orch, cfg, pool_cfg, self.client_pid)
+        self.conn_id = self.client_pid  # pool pages owned by the client
+
+        # RPCool channel for the handoff
+        srv = RPC(self.orch, pid=self.server_pid)
+        self.channel = srv.open("decode", heap_pages=256)
+        self.channel.add(FN_ATTACH, self._attach_rpc)
+        self.conn = RPC(self.orch, pid=self.client_pid).connect("decode")
+
+        self.policy = BusyWaitPolicy(fixed_sleep_us=sleep_us)
+        self.queue: List[Request] = []
+        self.active: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self.max_active = max_active
+        self._next_rid = 1
+        # metrics
+        self.handoff_bytes = 0
+        self.decode_steps = 0
+        self.oob_events = 0
+
+    # -- client-facing API ---------------------------------------------------
+    def submit(self, prompt: List[int], max_new: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, list(prompt), max_new))
+        return rid
+
+    def result(self, rid: int) -> Optional[List[int]]:
+        r = self.finished.get(rid)
+        return r.out if r else None
+
+    # -- the RPCool handoff ----------------------------------------------------
+    def _handoff(self, req: Request) -> None:
+        """Prefill side: seal the pages, RPC the block table (zero copy)."""
+        # 1. block table (pointers!) into a scope in the channel heap
+        scope = self.conn.create_scope(
+            8 * (len(req.pages) + 3))
+        payload = struct.pack(
+            f"<QQQ{len(req.pages)}Q", req.rid, len(req.prompt),
+            len(req.pages), *req.pages)
+        arg = scope.write_bytes(payload, pid=self.client_pid)
+        self.handoff_bytes += len(payload)   # tiny — ints, not KV bytes
+        # 2. seal the KV pages themselves (pool heap) for the flight
+        req.seal_idxs = self.pool.seal_seq(req.pages, holder=self.client_pid)
+        # 3. the RPC (scope sealed too, sandboxed server)
+        try:
+            self.conn.call_inline(FN_ATTACH, arg, scope=scope, sealed=True,
+                                  sandboxed=True)
+        finally:
+            scope.destroy()
+
+    def _attach_rpc(self, ctx, arg) -> int:
+        """Decode side: verify + adopt. Runs sandboxed over the scope."""
+        hdr = bytes(ctx.read(arg, 24))
+        rid, plen, npages = struct.unpack("<QQQ", hdr)
+        raw = bytes(ctx.read(gaddr.add(arg, 24, ctx.conn.heap.page_size),
+                             8 * npages))
+        pages = list(struct.unpack(f"<{npages}Q", raw))
+        # adopt into active set (the block table itself — no KV copied)
+        req = self._pending_attach
+        assert req.rid == rid and req.pages == pages
+        self.active.append(req)
+        return 0
+
+    # -- engine loop --------------------------------------------------------
+    def _admit(self) -> int:
+        admitted = 0
+        while self.queue and len(self.active) < self.max_active:
+            req = self.queue.pop(0)
+            total = len(req.prompt) + req.max_new
+            try:
+                req.pages = self.pool.alloc_seq(total, self.conn_id)
+            except Exception:
+                self.queue.insert(0, req)
+                break
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, k, v = prefill_kv(self.model, self.params, toks)
+            self.pool.write_prefill(k[:, 0], v[:, 0], req.pages,
+                                    len(req.prompt))
+            first = int(jnp.argmax(logits[0]))
+            req.out.append(first)
+            req.pos = len(req.prompt)
+            self._pending_attach = req
+            self._handoff(req)        # ← the paper's RPC
+            admitted += 1
+        return admitted
+
+    def _decode_batch(self) -> None:
+        if not self.active:
+            return
+        B = len(self.active)
+        MAXP = self.pool.pc.max_pages_per_seq
+        bt = np.zeros((B, MAXP), np.int32)
+        pos = np.zeros((B,), np.int32)
+        lens = np.zeros((B,), np.int32)
+        toks = np.zeros((B,), np.int32)
+        for i, r in enumerate(self.active):
+            bt[i, : len(r.pages)] = r.pages
+            pos[i] = r.pos
+            lens[i] = r.pos + 1      # includes the token written this step
+            toks[i] = r.out[-1]
+
+        logits, self.pool.k, self.pool.v, oob = paged_decode_step(
+            self.cfg, self.params, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(bt), jnp.asarray(lens), self.pool.k, self.pool.v,
+            self.pool.perm_bits(), self.pool.sandbox_desc(),
+            self.pool.sandbox_bitmap(self.conn_id), backend=self.backend)
+        self.decode_steps += 1
+        self.oob_events += int(jnp.sum(oob))
+
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        still = []
+        for i, r in enumerate(self.active):
+            r.out.append(int(nxt[i]))
+            r.pos += 1
+            if len(r.out) >= r.max_new:
+                self._retire(r)
+            else:
+                still.append(r)
+        self.active = still
+
+    def _retire(self, req: Request) -> None:
+        req.done = True
+        # release seals (receiver completed the whole generation)
+        self.pool.complete_and_release(req.seal_idxs, self.client_pid,
+                                       batched=True)
+        self.pool.seals.flush()
+        self.pool.free_seq(req.pages)
+        self.finished[req.rid] = req
+
+    def step(self) -> bool:
+        """One engine tick. Returns True if any work happened."""
+        self.orch.renew(self.client_pid)   # lease heartbeat
+        worked = self._admit() > 0
+        if self.active:
+            self._decode_batch()
+            worked = True
+        self.policy.record(worked)
+        if not worked:
+            self.policy.sleep()
+        return worked
+
+    def run_until_drained(self, timeout: float = 120.0) -> None:
+        deadline = time.monotonic() + timeout
+        while (self.queue or self.active):
+            if time.monotonic() > deadline:
+                raise TimeoutError("engine did not drain")
+            self.step()

@@ -1,0 +1,178 @@
+"""PagedKVPool — the KV cache as an RPCool shared-memory heap.
+
+The pool is the TPU-resident instantiation of the paper's shared heap:
+  * a page = one KV block (page_tokens × kv_heads × head_dim × 2 (K,V) ×
+    num_layers) — the natural protection granule on TPU (DESIGN.md §2);
+  * page accounting, ownership, permissions, leases and quotas all run
+    through the SharedHeap/Orchestrator machinery from repro.core —
+    the pool *is* a heap, not a lookalike;
+  * block tables are GlobalAddr-style pointers (page indices) — the
+    pointer-rich RPC argument of the serving data plane;
+  * seals: prefill write-protects a request's pages before the handoff
+    RPC; the paged-attention kernel *verifies the seal on every
+    dereference* (Fig. 8 step 4, done in silicon);
+  * sandbox bitmap: pages owned by the connection — a wild block-table
+    entry pointing at another request's pages is masked + flagged.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.heap import PERM_SEALED, SharedHeap
+from ..core.orchestrator import Orchestrator
+from ..core.seal import SealManager
+from ..models.config import ModelConfig
+
+
+@dataclass
+class PoolConfig:
+    num_pages: int = 256
+    page_tokens: int = 16
+    max_pages_per_seq: int = 32
+
+
+class PagedKVPool:
+    def __init__(self, orch: Orchestrator, cfg: ModelConfig,
+                 pool_cfg: PoolConfig, owner_pid: int):
+        self.cfg = cfg
+        self.pc = pool_cfg
+        L = cfg.num_layers
+        T, P = pool_cfg.page_tokens, pool_cfg.num_pages
+        Hkv, D = cfg.num_kv_heads, cfg.head_dim
+
+        # page byte size for quota accounting (K+V, all layers)
+        page_bytes = 2 * L * T * Hkv * D * 2
+        self.heap = orch.create_heap(P, page_size=page_bytes,
+                                     name="kv_pool")
+        orch.map_heap(owner_pid, self.heap)
+        self.seals = SealManager(self.heap, capacity=4 * P)
+        # NOTE: the seal descriptor ring consumed heap pages 0..r-1; those
+        # pages exist in the device pool too but are never handed to
+        # requests (state == USED, owner 0).
+        self.k = jnp.zeros((L, P, T, Hkv, D), jnp.bfloat16)
+        self.v = jnp.zeros((L, P, T, Hkv, D), jnp.bfloat16)
+        self.owner_pid = owner_pid
+        self.orch = orch
+
+    # -- allocation (pointer minting) -----------------------------------
+    def alloc_seq(self, n_tokens: int, conn_id: int) -> List[int]:
+        n_pages = max(1, -(-n_tokens // self.pc.page_tokens))
+        if n_pages > self.pc.max_pages_per_seq:
+            raise ValueError("sequence exceeds max_pages_per_seq")
+        # pages need not be contiguous: one-page extents (block tables
+        # chase pointers anyway — that is the point of the paper)
+        return [self.heap.alloc_pages(1, owner=conn_id)
+                for _ in range(n_pages)]
+
+    def extend_seq(self, pages: List[int], n_tokens: int,
+                   conn_id: int) -> List[int]:
+        need = max(1, -(-n_tokens // self.pc.page_tokens))
+        while len(pages) < need:
+            if len(pages) >= self.pc.max_pages_per_seq:
+                raise ValueError("sequence exceeds max_pages_per_seq")
+            pages.append(self.heap.alloc_pages(1, owner=conn_id))
+        return pages
+
+    def free_seq(self, pages: List[int]) -> None:
+        for p in pages:
+            self.heap.free_extent(p, 1)
+
+    # -- seal protocol around the handoff RPC -----------------------------
+    def seal_seq(self, pages: List[int], holder: int) -> List[int]:
+        return [self.seals.seal((p, 1), holder=holder) for p in pages]
+
+    def complete_and_release(self, seal_idxs: List[int], holder: int,
+                             batched: bool = True) -> None:
+        for idx in seal_idxs:
+            self.seals.mark_complete(idx)
+            if batched:
+                self.seals.release_batched(idx, holder=holder)
+            else:
+                self.seals.release(idx, holder=holder)
+
+    # -- device-side permission state for the kernel -----------------------
+    def perm_bits(self) -> jnp.ndarray:
+        return jnp.asarray(self.heap.perm.astype(np.int32))
+
+    def sandbox_bitmap(self, conn_id: int) -> jnp.ndarray:
+        """Pages this connection may dereference (the MPK key check)."""
+        allowed = (self.heap.owner == conn_id) & (self.heap.state == 1)
+        return jnp.asarray(allowed.astype(np.int32))
+
+    def sandbox_desc(self, enforce: bool = True) -> jnp.ndarray:
+        return jnp.asarray(
+            [0, self.pc.num_pages, 1 if enforce else 0], jnp.int32)
+
+    # -- data plane ----------------------------------------------------------
+    def write_prefill(self, cache_k, cache_v, pages: List[int],
+                      n_tokens: int) -> None:
+        """Scatter a prefill's contiguous (L, S, Hkv, D) KV into pages."""
+        T = self.pc.page_tokens
+        nP = len(pages)
+        pad = nP * T - n_tokens
+        if pad:
+            cache_k = jnp.pad(cache_k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cache_v = jnp.pad(cache_v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        L = cache_k.shape[0]
+        kb = cache_k.reshape(L, nP, T, *cache_k.shape[2:])
+        vb = cache_v.reshape(L, nP, T, *cache_v.shape[2:])
+        idx = jnp.asarray(pages, jnp.int32)
+        self.k = self.k.at[:, idx].set(kb.astype(self.k.dtype))
+        self.v = self.v.at[:, idx].set(vb.astype(self.v.dtype))
+
+    def write_token(self, k_new, v_new, block_tab, pos) -> None:
+        """Insert one decoded token's KV. k_new/v_new: (L, B, Hkv, D);
+        block_tab: (B, MAXP) i32; pos: (B,) i32 (the slot being written)."""
+        T = self.pc.page_tokens
+        page = jnp.take_along_axis(
+            block_tab, (pos // T)[:, None], axis=1)[:, 0]      # (B,)
+        slot = pos % T
+        # fancy-index write: (L, B, Hkv, D) lands at [:, page_b, slot_b]
+        self.k = self.k.at[:, page, slot].set(k_new.astype(self.k.dtype))
+        self.v = self.v.at[:, page, slot].set(v_new.astype(self.v.dtype))
+
+    def stats(self) -> Dict[str, int]:
+        return self.heap.stats()
+
+
+def transfer_pages_cross_pod(src_pool: "PagedKVPool",
+                             dst_pool: "PagedKVPool",
+                             src_pages: List[int], dst_pages: List[int],
+                             backend: str = "ref") -> int:
+    """The RDMA/DCN fallback data plane (§4.7): when prefill and decode
+    live in different pods (no shared ICI domain), the block-table RPC
+    degrades to gather(src pages) → wire → scatter(dst pages). Returns
+    the bytes moved — the number the zero-copy path avoids entirely.
+
+    On hardware the wire hop is a ``ppermute`` over the ``pod`` mesh axis
+    (see launch/collectives.kv_handoff_lowering, which the dry-run lowers
+    to count collective bytes); here the copy itself is executed.
+    """
+    import jax.numpy as jnp
+
+    from ..kernels.scope_copy.ops import gather_pages, scatter_pages
+
+    L = src_pool.k.shape[0]
+    sp = jnp.asarray(src_pages, jnp.int32)
+    dp = jnp.asarray(dst_pages, jnp.int32)
+    P = src_pool.k.shape[1]
+    flat = lambda a: a.reshape(L * P, -1)
+
+    moved = 0
+    for name in ("k", "v"):
+        src = flat(getattr(src_pool, name))
+        dst = flat(getattr(dst_pool, name))
+        # page ids offset per layer into the flattened (L·P, W) pool
+        for l in range(L):
+            wire = gather_pages(src, sp + l * P, backend=backend)
+            dst = scatter_pages(dst, dp + l * P, wire, backend=backend)
+            moved += wire.size * wire.dtype.itemsize
+        setattr(dst_pool, name,
+                dst.reshape(getattr(dst_pool, name).shape))
+    return moved

@@ -1,0 +1,11 @@
+"""Training substrate: optimizer, data, checkpointing, train step, PP,
+gradient compression."""
+
+from .optimizer import AdamWConfig, adamw_update, init_opt_state, lr_at
+from .train_loop import make_eval_step, make_train_step
+from .checkpoint import Checkpointer
+from .data import DataConfig, PrefetchLoader, SyntheticPackedDataset
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "lr_at",
+           "make_eval_step", "make_train_step", "Checkpointer",
+           "DataConfig", "PrefetchLoader", "SyntheticPackedDataset"]

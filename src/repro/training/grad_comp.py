@@ -1,0 +1,86 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+At 2+ pods the data-parallel gradient sync crosses DCN (~25 GB/s/host vs
+~50 GB/s/link ICI). The standard trick: run the ICI all-reduce dense
+(inside the pod, implicit in pjit's backward) and compress only the pod-
+axis reduction — int8 quantization with error feedback (1-bit-Adam /
+PowerSGD-class residual correction), 4× fewer DCN bytes for bf16 grads.
+
+``compressed_psum`` runs inside shard_map over the ``pod`` axis:
+  scale = pmax(max|g + e|) / 127     (SHARED across the axis — a scalar
+                                      all-reduce; per-shard scales cannot
+                                      be dequantized after an int psum)
+  q = clip(round((g + e) / scale))
+  ĝ = psum(q) · scale / n_pods
+  e ← (g + e) − q·scale              (error feedback)
+
+The dry-run variant (``estimate_bytes``) reports the DCN byte reduction
+for EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def _quantize(g, err, scale=None):
+    gf = g.astype(jnp.float32) + err
+    if scale is None:
+        scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def compressed_psum(grads: Params, err_state: Params, axis_name: str,
+                    n_shards: Optional[int] = None) -> Tuple[Params, Params]:
+    """int8 + error-feedback psum over ``axis_name`` (call under shard_map).
+
+    With ``n_shards`` given (static axis size), the wire stays int8: each
+    shard quantizes into ±(127 // n_shards) so the integer sum cannot
+    overflow — the all-reduce moves 1 byte/element instead of 2 (bf16) or
+    4 (fp32). Without it, accumulation is int32 (correct but wide).
+
+    Returns (averaged grads fp32, new error-feedback state).
+    """
+    n = jax.lax.psum(1, axis_name)
+    qmax = float(127 // n_shards) if n_shards else 127.0
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        # shared symmetric scale: scalar pmax (negligible wire bytes)
+        scale = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name) / qmax + 1e-12
+        q = jnp.clip(jnp.round(gf / scale), -qmax, qmax).astype(jnp.int8)
+        new_e = gf - q.astype(jnp.float32) * scale
+        if n_shards:  # int8 on the wire, overflow-free by construction
+            s = jax.lax.psum(q, axis_name)
+        else:
+            s = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        ĝ = s.astype(jnp.float32) * scale / n
+        return ĝ.astype(g.dtype), new_e
+
+    out = jax.tree.map(one, grads, err_state)
+    new_g = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e
+
+
+def init_error_state(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def estimate_bytes(params: Params) -> Dict[str, int]:
+    """DCN bytes per step: dense bf16 vs int8-compressed."""
+    n = sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+    return {
+        "dense_bf16": 2 * n,
+        "int8_ef": n,
+        "reduction": 2.0,
+    }

@@ -1,0 +1,78 @@
+"""Train-step factory: grad accumulation, remat, ZeRO state, metrics.
+
+``make_train_step(model, opt_cfg, ...)`` returns a pure
+``(params, opt_state, batch) → (params, opt_state, metrics)`` suitable for
+``jax.jit`` with shardings from the launcher. Grad accumulation scans over
+microbatches inside the step (one HLO, no host round-trips); the gradient
+all-reduce over the DP axes is implicit in the pjit backward and runs
+hierarchically (ICI first, DCN second — XLA's reduce-scatter/all-gather
+decomposition over the ("pod","data") axes).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+Params = Any
+Batch = Dict[str, Any]
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    grad_accum: int = 1, remat: bool = True,
+                    use_kernel: bool = False) -> Callable:
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch, remat=remat,
+                             use_kernel=use_kernel)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            def split(key, x):
+                if key == "positions" and x.ndim == 3:  # (3, B, S) m-rope
+                    B = x.shape[1]
+                    return x.reshape(3, grad_accum, B // grad_accum,
+                                     x.shape[2]).swapaxes(0, 1)
+                # (B, ...) → (accum, B/accum, ...)
+                return x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                 + x.shape[1:])
+
+            mbs = {k: split(k, v) for k, v in batch.items()}
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (zero_g, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            metrics = {"loss": loss}
+
+        new_params, new_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss_fn(params, batch, remat=False)
+        return metrics
+
+    return eval_step

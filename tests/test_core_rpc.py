@@ -1,0 +1,652 @@
+"""Unit + behaviour tests for the RPCool core (heap/scope/seal/sandbox/
+channel/orchestrator/fallback/containers)."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AllocationError,
+    BusyWaitPolicy,
+    Channel,
+    FallbackConnection,
+    InvalidPointer,
+    Orchestrator,
+    QuotaExceeded,
+    RPC,
+    RpcError,
+    SandboxManager,
+    SandboxViolation,
+    Scope,
+    ScopePool,
+    SealManager,
+    SealViolation,
+    SealedPageError,
+    SharedHeap,
+    create_scope,
+)
+from repro.core import addr as ga
+from repro.core import containers as C
+from repro.core import serial
+
+
+# ---------------------------------------------------------------------------
+# addr
+# ---------------------------------------------------------------------------
+class TestAddr:
+    def test_roundtrip(self):
+        a = ga.pack(3, 17, 123)
+        u = ga.unpack(a)
+        assert (u.heap_id, u.page, u.offset) == (3, 17, 123)
+
+    def test_null(self):
+        assert ga.is_null(ga.NULL)
+        with pytest.raises(ValueError):
+            ga.unpack(ga.NULL)
+
+    def test_arith_carries_pages(self):
+        a = ga.pack(1, 0, 4000)
+        b = ga.add(a, 200, page_size=4096)
+        u = ga.unpack(b)
+        assert (u.page, u.offset) == (1, 104)
+
+    def test_range_checks(self):
+        with pytest.raises(ValueError):
+            ga.pack(ga.MAX_HEAPS, 0, 0)
+        with pytest.raises(ValueError):
+            ga.pack(0, ga.MAX_PAGES, 0)
+
+
+# ---------------------------------------------------------------------------
+# heap
+# ---------------------------------------------------------------------------
+class TestHeap:
+    def test_contiguous_alloc_and_free(self):
+        h = SharedHeap(1, 64)
+        a = h.alloc_pages(8)
+        b = h.alloc_pages(8)
+        assert b == a + 8
+        h.free_extent(a, 8)
+        c = h.alloc_pages(4)  # first fit reuses the hole
+        assert c == a
+
+    def test_free_coalescing(self):
+        h = SharedHeap(1, 64)
+        a = h.alloc_pages(16)
+        h.free_extent(a, 8)
+        h.free_extent(a + 8, 8)
+        # whole heap free again → can allocate it all
+        assert h.alloc_pages(64) == 0
+
+    def test_double_free_raises(self):
+        h = SharedHeap(1, 16)
+        a = h.alloc_pages(2)
+        h.free_extent(a, 2)
+        with pytest.raises(InvalidPointer):
+            h.free_extent(a, 2)
+
+    def test_alloc_exhaustion(self):
+        h = SharedHeap(1, 8)
+        h.alloc_pages(8)
+        with pytest.raises(AllocationError):
+            h.alloc_pages(1)
+
+    def test_write_read_roundtrip(self):
+        h = SharedHeap(5, 16)
+        p = h.alloc_pages(1)
+        a = h.addr_of_page(p, 100)
+        h.write(a, b"hello world")
+        assert bytes(h.read(a, 11)) == b"hello world"
+
+    def test_wrong_heap_pointer(self):
+        h = SharedHeap(5, 16)
+        with pytest.raises(InvalidPointer):
+            h.read(ga.pack(6, 0, 0), 4)
+
+    def test_freed_page_access(self):
+        h = SharedHeap(1, 16)
+        p = h.alloc_pages(1)
+        a = h.addr_of_page(p)
+        h.free_extent(p, 1)
+        with pytest.raises(InvalidPointer):
+            h.read(a, 4)
+
+    def test_sealed_write_blocked_for_holder_only(self):
+        h = SharedHeap(1, 16)
+        p = h.alloc_pages(2, owner=7)
+        h.protect_range(p, 2, holder=7)
+        a = h.addr_of_page(p)
+        with pytest.raises(SealedPageError):
+            h.write(a, b"x", pid=7)
+        h.write(a, b"x", pid=9)  # receiver may still write
+        h.unprotect_range(p, 2)
+        h.write(a, b"y", pid=7)
+
+    def test_epoch_counts_shootdowns(self):
+        h = SharedHeap(1, 16)
+        p = h.alloc_pages(4)
+        e0 = h.perm_epoch
+        h.protect_range(p, 4, holder=1)
+        h.unprotect_ranges([(p, 1), (p + 1, 1), (p + 2, 2)])
+        assert h.perm_epoch == e0 + 2  # one for protect, ONE for the batch
+
+
+# ---------------------------------------------------------------------------
+# scope
+# ---------------------------------------------------------------------------
+class TestScope:
+    def test_bump_alloc_and_overflow(self):
+        h = SharedHeap(1, 16, page_size=256)
+        s = create_scope(h, 512)
+        a1 = s.alloc(100)
+        a2 = s.alloc(100)
+        assert ga.linear(a2, 256) - ga.linear(a1, 256) >= 100
+        with pytest.raises(AllocationError):
+            s.alloc(1000)
+
+    def test_reset_reuses(self):
+        h = SharedHeap(1, 16, page_size=256)
+        s = create_scope(h, 256)
+        s.alloc(200)
+        s.reset()
+        s.alloc(200)  # fits again
+
+    def test_destroy_returns_pages(self):
+        h = SharedHeap(1, 4, page_size=256)
+        s = create_scope(h, 4 * 256)
+        with pytest.raises(AllocationError):
+            h.alloc_pages(1)
+        s.destroy()
+        h.alloc_pages(4)
+        with pytest.raises(InvalidPointer):
+            s.alloc(1)
+
+    def test_contains(self):
+        h = SharedHeap(2, 16, page_size=256)
+        s = create_scope(h, 256)
+        a = s.alloc(8)
+        assert s.contains(a)
+        assert not s.contains(ga.pack(3, 0, 0))
+
+
+# ---------------------------------------------------------------------------
+# seal protocol (Fig. 8)
+# ---------------------------------------------------------------------------
+class TestSeal:
+    def _mk(self):
+        h = SharedHeap(1, 256)
+        sm = SealManager(h, capacity=64, batch_threshold=4)
+        s = create_scope(h, 2 * h.page_size, owner=1)
+        return h, sm, s
+
+    def test_protocol_happy_path(self):
+        h, sm, s = self._mk()
+        idx = sm.seal(s, holder=1)
+        assert sm.is_sealed(idx)
+        assert sm.is_sealed(idx, s)
+        sm.mark_complete(idx)
+        sm.release(idx, holder=1)
+        assert not sm.is_sealed(idx)
+
+    def test_release_before_complete_rejected(self):
+        h, sm, s = self._mk()
+        idx = sm.seal(s, holder=1)
+        with pytest.raises(SealViolation):
+            sm.release(idx, holder=1)  # Fig. 8 step 8
+
+    def test_wrong_holder_rejected(self):
+        h, sm, s = self._mk()
+        idx = sm.seal(s, holder=1)
+        sm.mark_complete(idx)
+        with pytest.raises(SealViolation):
+            sm.release(idx, holder=2)
+
+    def test_double_release_rejected(self):
+        h, sm, s = self._mk()
+        idx = sm.seal(s, holder=1)
+        sm.mark_complete(idx)
+        sm.release(idx, holder=1)
+        with pytest.raises(SealViolation):
+            sm.release(idx, holder=1)
+
+    def test_seal_covers_region_check(self):
+        h, sm, s = self._mk()
+        small = create_scope(h, h.page_size, owner=1)
+        idx = sm.seal(small, holder=1)
+        # seal over 'small' does NOT cover 's'
+        assert not sm.is_sealed(idx, s)
+
+    def test_sender_write_blocked_while_sealed(self):
+        h, sm, s = self._mk()
+        a = s.alloc(16)
+        h.write(a, b"0" * 16, pid=1)
+        idx = sm.seal(s, holder=1)
+        with pytest.raises(SealedPageError):
+            h.write(a, b"1" * 16, pid=1)
+        sm.mark_complete(idx)
+        sm.release(idx, holder=1)
+        h.write(a, b"1" * 16, pid=1)
+
+    def test_batch_release_single_epoch(self):
+        h, sm, s = self._mk()
+        scopes = [create_scope(h, h.page_size, owner=1) for _ in range(4)]
+        e0 = h.perm_epoch
+        idxs = []
+        for sc in scopes:
+            i = sm.seal(sc, holder=1)
+            sm.mark_complete(i)
+            idxs.append(i)
+        flushed = [sm.release_batched(i, holder=1) for i in idxs]
+        assert flushed == [False, False, False, True]  # threshold 4
+        # 4 protect epochs + 1 batched unprotect epoch
+        assert h.perm_epoch == e0 + 5
+        assert sm.n_batch_flushes == 1
+
+    def test_ring_slot_reuse(self):
+        h, sm, s = self._mk()
+        for _ in range(3 * sm.capacity):
+            idx = sm.seal(s, holder=1)
+            sm.mark_complete(idx)
+            sm.release(idx, holder=1)
+
+
+# ---------------------------------------------------------------------------
+# sandbox (MPK analogue)
+# ---------------------------------------------------------------------------
+class TestSandbox:
+    def _mk(self, pages=64):
+        h = SharedHeap(1, pages)
+        return h, SandboxManager(h)
+
+    def test_inside_ok_outside_segv(self):
+        h, sm = self._mk()
+        p = h.alloc_pages(2)
+        a = h.addr_of_page(p)
+        h.write(a, b"data")
+        with sm.enter(p, 2) as sb:
+            assert bytes(sb.read(a, 4)) == b"data"
+            with pytest.raises(SandboxViolation):
+                sb.read(h.addr_of_page(p + 2), 1)  # one page past
+            with pytest.raises(SandboxViolation):
+                sb.read(ga.pack(9, 0, 0), 1)  # wild pointer, other heap
+
+    def test_cached_vs_uncached_counters(self):
+        h, sm = self._mk(256)
+        p = h.alloc_pages(1)
+        with sm.enter(p, 1):
+            pass
+        with sm.enter(p, 1):
+            pass
+        assert sm.cache_hits == 1 and sm.cache_misses == 1
+
+    def test_key_recycling_over_14(self):
+        h, sm = self._mk(256)
+        pages = [h.alloc_pages(1) for _ in range(20)]
+        for p in pages:  # 20 regions > 14 keys → recycling must kick in
+            with sm.enter(p, 1):
+                pass
+        assert sm.cached_regions() <= 14
+        assert sm.cache_misses == 20
+
+    def test_all_keys_active_raises(self):
+        h, sm = self._mk(256)
+        pages = [h.alloc_pages(1) for p in range(15)]
+        boxes = [sm.enter(p, 1) for p in pages[:14]]
+        for b in boxes:
+            b.__enter__()
+        with pytest.raises(SandboxViolation):
+            sm.enter(pages[14], 1)
+        for b in boxes:
+            b.__exit__(None, None, None)
+        with sm.enter(pages[14], 1):
+            pass
+
+    def test_temp_heap_malloc_and_loss(self):
+        h, sm = self._mk()
+        p = h.alloc_pages(1)
+        with sm.enter(p, 1) as sb:
+            mv = sb.malloc(64)
+            mv[:4] = b"abcd"
+        with sm.enter(p, 1) as sb:  # contents were lost, bump reset
+            mv2 = sb.malloc(64)
+            assert len(mv2) == 64
+
+    def test_copied_private_vars(self):
+        h, sm = self._mk()
+        p = h.alloc_pages(1)
+        with sm.enter(p, 1, secret=b"k3y") as sb:
+            assert sb.var("secret") == b"k3y"
+            with pytest.raises(SandboxViolation):
+                sb.var("other")
+
+    def test_private_access_check(self):
+        h, sm = self._mk()
+        p = h.alloc_pages(1)
+        sm.check_private_access()  # fine outside
+        with sm.enter(p, 1):
+            with pytest.raises(SandboxViolation):
+                sm.check_private_access()
+
+    def test_device_bitmap_shape(self):
+        h, sm = self._mk(32)
+        p = h.alloc_pages(4)
+        with sm.enter(p, 4) as sb:
+            bm = sb.device_bitmap()
+            assert bm.shape == (32,)
+            assert bm[p : p + 4].all() and bm.sum() == 4
+
+
+# ---------------------------------------------------------------------------
+# channel RPC end-to-end
+# ---------------------------------------------------------------------------
+class TestChannel:
+    def _mk(self):
+        orch = Orchestrator()
+        ch = RPC(orch, pid=100).open("svc")
+        conn = RPC(orch, pid=200).connect("svc")
+        return orch, ch, conn
+
+    def test_pingpong_inline(self):
+        orch, ch, conn = self._mk()
+        sc = conn.create_scope(4096)
+        _, arg = C.build_value(sc, "ping")
+
+        def fn(ctx, a):
+            assert C.read_str(ctx, a) == "ping"
+            return 42
+
+        ch.add(1, fn)
+        assert conn.call_inline(1, arg) == 42
+
+    def test_pingpong_threaded(self):
+        orch, ch, conn = self._mk()
+        ch.add(1, lambda ctx, a: 7)
+        th = ch.listen_in_thread()
+        try:
+            for _ in range(50):
+                assert conn.call(1) == 7
+        finally:
+            ch.stop()
+            th.join(timeout=2)
+
+    def test_unknown_function(self):
+        orch, ch, conn = self._mk()
+        with pytest.raises(RpcError) as e:
+            conn.call_inline(99)
+        assert e.value.status == 3  # E_NOFUNC
+
+    def test_handler_exception_propagates_as_error(self):
+        orch, ch, conn = self._mk()
+        ch.add(1, lambda ctx, a: 1 // 0)
+        with pytest.raises(RpcError) as e:
+            conn.call_inline(1)
+        assert e.value.status == 4  # E_EXCEPTION
+
+    def test_sealed_rpc_blocks_sender_during_flight(self):
+        orch, ch, conn = self._mk()
+        sc = conn.create_scope(4096)
+        a = sc.write_bytes(b"payload", pid=conn.client_pid)
+        observed = {}
+
+        def fn(ctx, arg):
+            try:
+                ctx.conn.heap.write(arg, b"EVIL", pid=ctx.conn.client_pid)
+                observed["sender_write"] = "allowed"
+            except SealedPageError:
+                observed["sender_write"] = "blocked"
+            return 0
+
+        ch.add(1, fn)
+        conn.call_inline(1, a, scope=sc, sealed=True)
+        assert observed["sender_write"] == "blocked"
+        # after release the sender can write again
+        conn.heap.write(a, b"okay", pid=conn.client_pid)
+
+    def test_sandboxed_wild_pointer_becomes_rpc_error(self):
+        orch, ch, conn = self._mk()
+        sc = conn.create_scope(4096)
+        _, arg = C.build_value(sc, {"next": 1})
+
+        def evil(ctx, a):
+            # chase a "pointer" to another heap — must be trapped
+            C.read_str(ctx, ga.pack(50, 0, 0))
+            return 1
+
+        ch.add(1, evil)
+        with pytest.raises(RpcError) as e:
+            conn.call_inline(1, arg, scope=sc, sandboxed=True)
+        assert e.value.status == 2  # E_SANDBOX
+
+    def test_pointer_rich_argument_no_copy(self):
+        orch, ch, conn = self._mk()
+        sc = conn.create_scope(1 << 16)
+        doc = {"user": "ada", "tags": ["a", "b"], "score": 9.5,
+               "nested": {"k": [1, 2, 3]}}
+        root = C.build_doc(sc, doc)
+
+        def fn(ctx, a):
+            got = C.to_python(ctx, (C.T_MAP, a))
+            assert got == doc
+            return 0
+
+        ch.add(1, fn)
+        assert conn.call_inline(1, root, scope=sc, sealed=True,
+                                sandboxed=True) == 0
+
+    def test_async_pipeline(self):
+        orch, ch, conn = self._mk()
+        ch.add(1, lambda ctx, a: 5)
+        th = ch.listen_in_thread()
+        try:
+            toks = [conn.call_async(1) for _ in range(32)]
+            assert all(conn.wait(t) == 5 for t in toks)
+        finally:
+            ch.stop()
+            th.join(timeout=2)
+
+    def test_scope_pool_with_batched_release(self):
+        orch, ch, conn = self._mk()
+        ch.add(1, lambda ctx, a: 0)
+        pool = conn.scope_pool(1)
+        for i in range(3000):  # > batch threshold cycles
+            s = pool.pop()
+            a = s.write_bytes(b"z" * 16, pid=conn.client_pid)
+            conn.call_inline(1, a, scope=s, sealed=True, batch_release=True)
+            pool.push_sealed(s, conn.last_seal_idx)
+        assert conn.seals.n_batch_flushes >= 1
+
+    def test_shared_heap_channel(self):
+        orch = Orchestrator()
+        ch = RPC(orch, pid=1).open("shared", shared_heap=True)
+        c1 = RPC(orch, pid=2).connect("shared")
+        c2 = RPC(orch, pid=3).connect("shared")
+        assert c1.heap is c2.heap  # Fig. 4b channel-wide heap
+
+    def test_busy_wait_policy_thresholds(self):
+        p = BusyWaitPolicy()
+        for _ in range(10):
+            p.record(False)
+        assert p._hits / max(1, p._polls) < 0.25
+        for _ in range(50):
+            p.record(True)
+        assert p._hits / max(1, p._polls) > 0.5
+
+
+# ---------------------------------------------------------------------------
+# orchestrator: leases, quotas, failure GC (Fig. 5)
+# ---------------------------------------------------------------------------
+class TestOrchestrator:
+    def test_server_crash_notifies_and_gc(self):
+        clock = [0.0]
+        orch = Orchestrator(clock=lambda: clock[0], lease_ttl=5.0)
+        h = orch.create_heap(16)
+        orch.map_heap(1, h)  # server
+        orch.map_heap(2, h)  # client
+        fails = []
+        orch.on_failure(lambda pid, hid: fails.append((pid, hid)))
+
+        clock[0] = 3.0
+        orch.renew(2)  # only the client renews
+        clock[0] = 6.0
+        orch.tick()
+        assert fails == [(1, h.heap_id)]
+        assert h.heap_id in orch.heaps  # client still leases it
+
+        clock[0] = 20.0
+        orch.tick()  # client lease lapses too → orphaned heap reclaimed
+        assert h.heap_id not in orch.heaps
+        assert orch.reclaimed_heaps == 1
+
+    def test_total_failure_reclaims_all(self):
+        clock = [0.0]
+        orch = Orchestrator(clock=lambda: clock[0], lease_ttl=1.0)
+        heaps = [orch.create_heap(4) for _ in range(3)]
+        for i, h in enumerate(heaps):
+            orch.map_heap(10 + i, h)
+        clock[0] = 10.0
+        orch.tick()
+        assert orch.reclaimed_heaps == 3
+
+    def test_quota_forces_return(self):
+        orch = Orchestrator()
+        orch.set_quota(7, 2 * 16 * 4096)
+        h1, h2, h3 = (orch.create_heap(16) for _ in range(3))
+        orch.map_heap(7, h1)
+        orch.map_heap(7, h2)
+        with pytest.raises(QuotaExceeded):
+            orch.map_heap(7, h3)
+        orch.unmap_heap(7, h1.heap_id)
+        orch.map_heap(7, h3)  # after returning a heap it fits
+
+    def test_quota_counts_shared_heaps_for_all(self):
+        orch = Orchestrator()
+        h = orch.create_heap(16)
+        orch.set_quota(1, 16 * 4096)
+        orch.set_quota(2, 16 * 4096)
+        orch.map_heap(1, h)
+        orch.map_heap(2, h)  # same heap counts against both
+        assert orch.mapped_bytes(1) == orch.mapped_bytes(2) == 16 * 4096
+
+    def test_renew_keeps_alive(self):
+        clock = [0.0]
+        orch = Orchestrator(clock=lambda: clock[0], lease_ttl=2.0)
+        h = orch.create_heap(4)
+        orch.map_heap(1, h)
+        for t in range(1, 10):
+            clock[0] = float(t)
+            orch.renew(1)
+            orch.tick()
+        assert h.heap_id in orch.heaps
+
+
+# ---------------------------------------------------------------------------
+# fallback transport (§5.6)
+# ---------------------------------------------------------------------------
+class TestFallback:
+    def test_call_with_page_migration(self):
+        fb = FallbackConnection(num_pages=64, link_latency_us=0.0)
+        sc = fb.create_scope(4096)
+        _, a = C.build_value(sc, {"x": "hello", "n": 42})
+
+        def fn(ctx, arg):
+            v = C.to_python(ctx, (C.T_MAP, arg))
+            return v["n"]
+
+        fb.add(5, fn)
+        assert fb.call(5, a, scope=sc, sealed=True) == 42
+        st = fb.stats()
+        assert st["page_faults"] >= 1 and st["bytes_moved"] > 0
+
+    def test_ownership_pingpong(self):
+        fb = FallbackConnection(num_pages=64, link_latency_us=0.0)
+        sc = fb.create_scope(4096)
+        a = fb.new_bytes(b"v1")
+        fb.add(1, lambda ctx, arg: int(bytes(ctx.read(arg, 2)) == b"v1"))
+        assert fb.call(1, a, scope=sc) == 1
+        # server now owns the page; client write faults it back
+        before = fb.link.page_faults
+        fb.client.write(a, b"v2", pid=fb.client_pid)
+        assert fb.link.page_faults == before + 1
+        assert fb.call(1, a, scope=sc) == 0  # server sees v2 (≠ v1)
+
+    def test_sandboxed_fallback(self):
+        fb = FallbackConnection(num_pages=64, link_latency_us=0.0)
+        sc = fb.create_scope(4096)
+        _, a = C.build_value(sc, {"k": "v"})
+
+        def evil(ctx, arg):
+            ctx.read(ga.pack(40, 0, 0), 1)
+            return 1
+
+        fb.add(1, evil)
+        with pytest.raises(SandboxViolation):
+            fb.call(1, a, scope=sc, sealed=True, sandboxed=True)
+
+    def test_deep_copy_between_transports(self):
+        fb = FallbackConnection(num_pages=64, link_latency_us=0.0)
+        sc = fb.create_scope(4096)
+        v = C.build_value(sc, {"a": [1, 2], "b": "x"})
+        orch = Orchestrator()
+        h = orch.create_heap(64)
+        dst = create_scope(h, 4096)
+        v2 = C.deep_copy(fb.client, dst, v)
+        assert C.to_python(h, v2) == {"a": [1, 2], "b": "x"}
+
+
+# ---------------------------------------------------------------------------
+# containers
+# ---------------------------------------------------------------------------
+class TestContainers:
+    def _scope(self):
+        h = SharedHeap(1, 256)
+        return h, create_scope(h, 64 * 4096)
+
+    def test_scalar_roundtrip(self):
+        h, s = self._scope()
+        for obj in [None, 0, -5, 1 << 40, 3.14159, True, "héllo"]:
+            v = C.build_value(s, obj)
+            got = C.to_python(h, v)
+            if isinstance(obj, bool):
+                assert got == int(obj)
+            else:
+                assert got == obj
+
+    def test_nested_doc_roundtrip(self):
+        h, s = self._scope()
+        doc = {"id": 1, "name": "x" * 100,
+               "items": [{"q": i, "w": float(i)} for i in range(10)],
+               "meta": {"deep": {"deeper": [None, "end"]}}}
+        root = C.build_doc(s, doc)
+        assert C.to_python(h, (C.T_MAP, root)) == doc
+
+    def test_map_get_and_path_search(self):
+        h, s = self._scope()
+        root = C.build_doc(s, {"a": {"b": {"c": 41}}, "d": "no"})
+        assert C.doc_matches(h, root, ["a", "b", "c"], lambda v: v == 41)
+        assert not C.doc_matches(h, root, ["a", "b", "zzz"], lambda v: True)
+
+    def test_corrupt_tag_detected(self):
+        h, s = self._scope()
+        root = C.build_doc(s, {"k": "v"})
+        with pytest.raises(InvalidPointer):
+            C.read_str(h, root)  # map node read as string
+
+
+# ---------------------------------------------------------------------------
+# serializing baseline
+# ---------------------------------------------------------------------------
+class TestSerial:
+    def test_encode_decode(self):
+        obj = {"a": [1, 2.5, "x", None, {"b": b"raw"}], "n": -7}
+        assert serial.decode(serial.encode(obj)) == obj
+
+    def test_serial_channel_roundtrip(self):
+        ch = serial.SerialChannel()
+        ch.add(1, lambda obj: {"echo": obj["msg"]})
+        th = ch.listen_in_thread()
+        try:
+            assert ch.call(1, {"msg": "hi"}) == {"echo": "hi"}
+            assert ch.bytes_sent > 0
+        finally:
+            ch.stop()

@@ -1,0 +1,172 @@
+"""Serving tests: paged pool, RPCool handoff, continuous batching,
+cross-pod fallback, failure handling."""
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.errors import AllocationError
+from repro.core.orchestrator import Orchestrator
+from repro.models import build_model
+from repro.serving import PagedKVPool, PoolConfig, ServeEngine
+from repro.serving.kv_pool import transfer_pages_cross_pod
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = replace(get_smoke_config("yi_9b"), num_layers=2)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def mk_engine(cfg, params, **kw):
+    pc = PoolConfig(num_pages=kw.pop("num_pages", 64), page_tokens=8,
+                    max_pages_per_seq=8)
+    return ServeEngine(cfg, params, pc, backend="ref", **kw)
+
+
+class TestEngine:
+    def test_paged_equals_dense_decode(self, small_lm):
+        cfg, m, params = small_lm
+        eng = mk_engine(cfg, params)
+        prompt = [5, 6, 7, 8]
+        # dense reference chain
+        toks = jnp.asarray(prompt, jnp.int32)[None]
+        logits, cache = m.prefill(params, {"tokens": toks}, cache_len=16)
+        seq = [int(jnp.argmax(logits[0]))]
+        pos = len(prompt)
+        for _ in range(5):
+            lg, cache = m.decode_step(
+                params, jnp.asarray([seq[-1]], jnp.int32),
+                jnp.asarray([pos], jnp.int32), cache)
+            seq.append(int(jnp.argmax(lg[0])))
+            pos += 1
+        rid = eng.submit(prompt, max_new=6)
+        eng.run_until_drained()
+        assert eng.result(rid) == seq
+
+    def test_continuous_batching_many_requests(self, small_lm):
+        cfg, m, params = small_lm
+        eng = mk_engine(cfg, params, max_active=3)
+        rng = np.random.default_rng(0)
+        rids = [eng.submit(list(rng.integers(1, cfg.vocab_size, size=5)),
+                           max_new=4) for _ in range(7)]
+        eng.run_until_drained()
+        assert all(len(eng.result(r)) == 4 for r in rids)
+        # all pages returned to the pool (no leaks)
+        st = eng.pool.stats()
+        assert st["sealed_pages"] == 0
+
+    def test_handoff_is_pointer_sized(self, small_lm):
+        """The RPC payload must be O(pages·8B), not O(KV bytes)."""
+        cfg, m, params = small_lm
+        eng = mk_engine(cfg, params)
+        rid = eng.submit(list(range(1, 17)), max_new=2)  # 16 tokens
+        eng.run_until_drained()
+        kv_bytes = (2 * cfg.num_layers * 16 * cfg.num_kv_heads
+                    * cfg.head_dim * 2)
+        assert eng.handoff_bytes < 100            # a few pointers
+        assert kv_bytes > 10 * eng.handoff_bytes  # ≫ copied (smoke dims)
+        # at yi-9b full scale the same handoff is 2·48·16·4·128·2 ≈ 1.5 MB
+        # of KV vs the same 48 pointer bytes — a ~32000× reduction
+        full_kv = 2 * 48 * 16 * 4 * 128 * 2
+        assert full_kv > 10_000 * eng.handoff_bytes
+
+    def test_seals_protect_inflight_pages(self, small_lm):
+        """While a request is active its pages are sealed: the pool heap
+        rejects a client-side write (the RPCool §4.5 guarantee)."""
+        cfg, m, params = small_lm
+        eng = mk_engine(cfg, params)
+        eng.submit([1, 2, 3, 4], max_new=8)
+        eng._admit()
+        req = eng.active[0]
+        from repro.core.errors import SealedPageError
+
+        with pytest.raises(SealedPageError):
+            eng.pool.heap.write(
+                eng.pool.heap.addr_of_page(req.pages[0]), b"x",
+                pid=eng.client_pid)
+        eng.run_until_drained()
+
+    def test_admission_backpressure_on_pool_exhaustion(self, small_lm):
+        cfg, m, params = small_lm
+        eng = mk_engine(cfg, params, num_pages=16, max_active=16)
+        # descriptor ring eats a few pages; each request needs 2 pages
+        rids = [eng.submit([1, 2, 3, 4], max_new=4) for _ in range(12)]
+        eng.run_until_drained()  # must complete by queueing, not crash
+        assert all(eng.result(r) is not None for r in rids)
+
+    def test_oob_flagged_for_forged_block_table(self, small_lm):
+        """A forged pointer into another request's pages must be flagged
+        by the kernel sandbox (§4.3's cross-request read attack)."""
+        cfg, m, params = small_lm
+        eng = mk_engine(cfg, params)
+        eng.submit([1, 2, 3, 4], max_new=8)
+        eng._admit()
+        req = eng.active[0]
+        # forge the in-use pointer: point at a page owned by nobody.
+        # (forging a not-yet-dereferenced tail page is correctly NOT
+        # flagged — the sandbox checks actual dereferences, §4.4)
+        victim = (req.pages[0] + 37) % eng.pool.pc.num_pages
+        req.pages[0] = victim
+        eng._decode_batch()
+        assert eng.oob_events >= 1
+        eng.active = []  # drop the poisoned request
+
+
+class TestCrossPodFallback:
+    def test_transfer_matches_source(self, small_lm):
+        cfg, m, params = small_lm
+        orch = Orchestrator()
+        pc = PoolConfig(num_pages=32, page_tokens=8, max_pages_per_seq=8)
+        src = PagedKVPool(orch, cfg, pc, owner_pid=1)
+        dst = PagedKVPool(orch, cfg, pc, owner_pid=2)
+        src.k = jax.random.normal(jax.random.PRNGKey(1), src.k.shape,
+                                  jnp.float32).astype(src.k.dtype)
+        src.v = jax.random.normal(jax.random.PRNGKey(2), src.v.shape,
+                                  jnp.float32).astype(src.v.dtype)
+        sp, dp = [3, 9, 17], [5, 6, 7]
+        moved = transfer_pages_cross_pod(src, dst, sp, dp, backend="ref")
+        assert moved > 0
+        np.testing.assert_array_equal(
+            np.asarray(dst.k[:, dp], np.float32),
+            np.asarray(src.k[:, sp], np.float32))
+
+    def test_zero_copy_vs_fallback_byte_ratio(self, small_lm):
+        """In-pod handoff bytes vs cross-pod copied bytes — the paper's
+        core quantitative claim at pod scale."""
+        cfg, m, params = small_lm
+        orch = Orchestrator()
+        pc = PoolConfig(num_pages=32, page_tokens=8, max_pages_per_seq=8)
+        src = PagedKVPool(orch, cfg, pc, owner_pid=1)
+        dst = PagedKVPool(orch, cfg, pc, owner_pid=2)
+        pages = [3, 9]
+        moved = transfer_pages_cross_pod(src, dst, pages, [4, 5],
+                                         backend="ref")
+        pointer_bytes = 8 * len(pages)
+        assert moved / pointer_bytes > 100
+
+
+class TestLeaseIntegration:
+    def test_engine_heartbeats_keep_pool_alive(self, small_lm):
+        cfg, m, params = small_lm
+        eng = mk_engine(cfg, params)
+        eng.submit([1, 2, 3], max_new=3)
+        eng.run_until_drained()
+        assert eng.orch.live_leases(eng.pool.heap.heap_id) >= 1
+
+    def test_orphaned_pool_reclaimed_after_crash(self, small_lm):
+        cfg, m, params = small_lm
+        clock = [0.0]
+        orch = Orchestrator(clock=lambda: clock[0], lease_ttl=2.0)
+        pc = PoolConfig(num_pages=16, page_tokens=8)
+        pool = PagedKVPool(orch, cfg, pc, owner_pid=77)
+        hid = pool.heap.heap_id
+        clock[0] = 10.0  # owner never heartbeats → crash semantics
+        orch.tick()
+        assert hid not in orch.heaps
