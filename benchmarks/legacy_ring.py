@@ -1,0 +1,230 @@
+"""Pre-refactor descriptor-ring implementation, kept verbatim.
+
+This is the seed repo's ``struct``-based hot path (``struct.pack`` /
+``struct.unpack`` per call, byte-at-a-time state poll, per-connection
+per-slot Python serve scan). The noop benchmark runs it side by side with
+the structured-dtype path so ``BENCH_noop.json`` proves the before/after
+RTT and throughput delta in a single process on the same machine — not
+against numbers recorded on some other host.
+
+Nothing outside the benchmarks imports this module.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Tuple
+
+from repro.core.channel import (
+    Channel,
+    Connection,
+    E_EXCEPTION,
+    E_NOFUNC,
+    E_SANDBOX,
+    E_UNSEALED,
+    F_SANDBOXED,
+    F_SEALED,
+    OK,
+    R_DONE,
+    R_EMPTY,
+    R_ERR,
+    R_REQ,
+    RpcError,
+    ServerCtx,
+)
+from repro.core import addr as gaddr
+from repro.core.errors import ChannelError, SandboxViolation, SealViolation
+from repro.core.heap import SharedHeap
+
+_REQ_FMT = "<QIIQQQIIII"
+_REQ_SIZE = struct.calcsize(_REQ_FMT)
+
+
+class LegacyRing:
+    """The seed's SPSC descriptor ring: struct-repacked heap bytes."""
+
+    def __init__(self, heap: SharedHeap, capacity: int = 256):
+        self.heap = heap
+        self.capacity = capacity
+        self.head = 1
+        nbytes = capacity * _REQ_SIZE
+        pages = (nbytes + heap.page_size - 1) // heap.page_size
+        self.start_page = heap.alloc_pages(pages, owner=0)
+        base = self.start_page * heap.page_size
+        self.view = heap.buf[base : base + nbytes]
+
+    def pack(self, slot: int, *fields) -> None:
+        off = slot * _REQ_SIZE
+        self.view[off : off + _REQ_SIZE] = memoryview(
+            struct.pack(_REQ_FMT, *fields)
+        )
+
+    def unpack(self, slot: int) -> Tuple:
+        off = slot * _REQ_SIZE
+        return struct.unpack(_REQ_FMT, self.view[off : off + _REQ_SIZE])
+
+    def state(self, slot: int) -> int:
+        # the seed's (truncated) 2-of-4-byte state load, kept verbatim
+        off = slot * _REQ_SIZE + 40
+        return int(self.view[off]) | (int(self.view[off + 1]) << 8)
+
+    def set_state_status(self, slot: int, state: int, status: int) -> None:
+        off = slot * _REQ_SIZE + 40
+        self.view[off : off + 8] = memoryview(struct.pack("<II", state, status))
+
+    def set_ret(self, slot: int, ret: int) -> None:
+        off = slot * _REQ_SIZE + 32
+        self.view[off : off + 8] = memoryview(struct.pack("<Q", ret))
+
+
+class LegacyConnection(Connection):
+    """Seed-verbatim client half (post/poll/complete via struct)."""
+
+    RING_CLS = LegacyRing
+
+    def call(self, fn_id, arg_addr=gaddr.NULL, scope=None, sealed=False,
+             sandboxed=False, batch_release=False, timeout=10.0,
+             spin_sleep_us=0.0):
+        import time
+        slot, seal_idx = self._post(fn_id, arg_addr, scope, sealed, sandboxed)
+        deadline = time.monotonic() + timeout
+        while True:
+            st = self.ring.state(slot)
+            if st in (R_DONE, R_ERR):
+                break
+            if time.monotonic() > deadline:
+                raise ChannelError(f"RPC {fn_id} timed out")
+            time.sleep(spin_sleep_us * 1e-6 if spin_sleep_us else 0)
+        return self._complete(slot, sealed, seal_idx, batch_release)
+
+    def call_inline(self, fn_id, arg_addr=gaddr.NULL, scope=None,
+                    sealed=False, sandboxed=False, batch_release=False):
+        slot, seal_idx = self._post(fn_id, arg_addr, scope, sealed, sandboxed)
+        self.channel._process(self, slot)
+        self.ring.head += 1
+        return self._complete(slot, sealed, seal_idx, batch_release)
+
+    def call_async(self, fn_id, arg_addr=gaddr.NULL, scope=None,
+                   sealed=False, sandboxed=False):
+        return self._post(fn_id, arg_addr, scope, sealed, sandboxed)
+
+    def wait(self, token, sealed=False, batch_release=False, timeout=10.0):
+        import time
+        slot, seal_idx = token
+        deadline = time.monotonic() + timeout
+        while self.ring.state(slot) not in (R_DONE, R_ERR):
+            if time.monotonic() > deadline:
+                raise ChannelError("RPC timed out")
+            time.sleep(0)
+        return self._complete(slot, sealed, seal_idx, batch_release)
+
+    def _post(self, fn_id, arg_addr, scope, sealed, sandboxed):
+        if self.closed:
+            raise ChannelError("call on closed connection")
+        seq = self._next_seq
+        self._next_seq += 1
+        slot = seq % self.ring.capacity
+        if self.ring.state(slot) == R_REQ:
+            raise ChannelError("ring overflow: too many in-flight RPCs")
+
+        flags = 0
+        seal_idx = 0
+        sc_start = sc_count = 0
+        if scope is not None:
+            sc_start, sc_count = scope.page_range()
+        if sealed:
+            if scope is None:
+                raise SealViolation("sealed call requires a scope (§4.5)")
+            seal_idx = self.seals.seal(scope, holder=self.client_pid)
+            self.last_seal_idx = seal_idx
+            flags |= F_SEALED
+        if sandboxed:
+            flags |= F_SANDBOXED
+
+        self.ring.pack(slot, seq, fn_id, flags, arg_addr, seal_idx,
+                       0, R_REQ, OK, sc_start, sc_count)
+        self.channel._event.set()  # seed's unconditional notify
+        return slot, seal_idx
+
+    def _complete(self, slot, sealed, seal_idx, batch_release):
+        (seq_, fn_, flags_, arg_, seal_, ret, state, status,
+         _scs, _scc) = self.ring.unpack(slot)
+        self.ring.set_state_status(slot, R_EMPTY, OK)
+        self.n_calls += 1
+
+        if sealed:
+            if batch_release:
+                self.seals.release_batched(seal_idx, holder=self.client_pid)
+            else:
+                self.seals.release(seal_idx, holder=self.client_pid)
+
+        if state == R_ERR:
+            raise RpcError(status)
+        return ret
+
+
+class LegacyChannel(Channel):
+    """Seed-verbatim server half (per-conn per-slot Python scan)."""
+
+    CONN_CLS = LegacyConnection
+
+    def listen(self, policy=None, stop=None) -> None:
+        # seed loop: a blind policy nap on every empty sweep (no doorbell)
+        from repro.core.channel import BusyWaitPolicy
+        policy = policy or BusyWaitPolicy()
+        stop = stop or self._stop
+        while not stop.is_set():
+            n = self.serve_once()
+            policy.record(n > 0)
+            if n == 0:
+                policy.sleep()
+
+    def serve_once(self) -> int:
+        served = 0
+        for conn in list(self.connections):
+            ring = conn.ring
+            while ring.state(ring.head % ring.capacity) == R_REQ:
+                self._process(conn, ring.head % ring.capacity)
+                ring.head += 1
+                served += 1
+        return served
+
+    def _process(self, conn, slot) -> None:
+        (seq, fn_id, flags, arg, seal_idx, _ret, _st, _status,
+         sc_start, sc_count) = conn.ring.unpack(slot)
+
+        fn = self.functions.get(fn_id)
+        if fn is None:
+            conn.ring.set_state_status(slot, R_ERR, E_NOFUNC)
+            return
+
+        if flags & F_SEALED:
+            if not conn.seals.is_sealed(seal_idx):
+                conn.ring.set_state_status(slot, R_ERR, E_UNSEALED)
+                return
+
+        ctx = ServerCtx(self, conn, flags)
+        try:
+            if flags & F_SANDBOXED and not gaddr.is_null(arg):
+                if sc_count:
+                    start, count = sc_start, sc_count
+                else:
+                    start, count = self._arg_scope(conn, arg)
+                with conn.sandboxes.enter(start, count) as sb:
+                    ctx.sandbox = sb
+                    ret = fn(ctx, arg)
+            else:
+                ret = fn(ctx, arg)
+            status, state = OK, R_DONE
+        except SandboxViolation:
+            ret, status, state = 0, E_SANDBOX, R_ERR
+        except Exception:
+            ret, status, state = 0, E_EXCEPTION, R_ERR
+
+        if flags & F_SEALED:
+            try:
+                conn.seals.mark_complete(seal_idx)
+            except SealViolation:
+                pass
+        conn.ring.set_ret(slot, ret)
+        conn.ring.set_state_status(slot, state, status)

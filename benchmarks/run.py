@@ -3,31 +3,94 @@
 Prints ``name,us_per_call,derived`` CSV. Roofline terms come from the
 dry-run artifacts (see repro.roofline.analysis / EXPERIMENTS.md) — this
 harness measures the host-side RPCool control plane for real.
+
+The noop suite additionally writes ``BENCH_noop.json``: every row plus
+the legacy-vs-current speedups for ``noop_rtt_rpcool`` and
+``noop_throughput_rpcool`` (the pre-refactor struct-ring path is re-run
+in the same process — see ``benchmarks/legacy_ring.py``), proving the
+before/after delta of the descriptor-ring refactor on this machine.
+
+Usage:
+    python -m benchmarks.run                     # all suites
+    python -m benchmarks.run --suite noop        # one suite
+    python -m benchmarks.run --suite noop --iters 2000 --json out.json
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 import traceback
 
+NOOP_JSON_DEFAULT = "BENCH_noop.json"
 
-def main() -> None:
-    suites = []
-    from . import cooldb, kv_handoff, microservices, noop_rtt, op_latency, ycsb_kv
+
+def _write_noop_json(rows, path: str, iters: int) -> None:
+    by_name = {name: us for name, us, _ in rows}
+    derived = {name: d for name, us, d in rows}
+    # the speedup rows are the benchmark's own robust estimator (median of
+    # interleaved per-pair ratios — see noop_rtt.bench)
+    speedup = {}
+    for key, row in (("noop_rtt_rpcool", "noop_rtt_speedup"),
+                     ("noop_throughput_rpcool", "noop_throughput_speedup")):
+        if row in by_name:
+            speedup[key] = by_name[row]
+    doc = {
+        "suite": "noop_rtt (Table 1a)",
+        "iters": iters,
+        "unit": "us_per_call",
+        "rows": by_name,
+        "derived": derived,
+        "speedup_vs_legacy": speedup,
+        "target_speedup": 2.0,
+        "meets_target": bool(speedup) and
+            all(v >= 2.0 for v in speedup.values()),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}: speedups "
+          + ", ".join(f"{k}={v:.2f}x" for k, v in speedup.items()),
+          file=sys.stderr)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--suite", default=None,
+                    help="run only this suite (noop, op, cooldb, ycsb, "
+                         "micro, kv)")
+    ap.add_argument("--iters", type=int, default=20_000,
+                    help="iteration count for the noop RTT rows")
+    ap.add_argument("--thr-iters", type=int, default=30_000,
+                    help="iteration count for the noop throughput rows")
+    ap.add_argument("--json", default=NOOP_JSON_DEFAULT,
+                    help="path for the noop trajectory file "
+                         "(default BENCH_noop.json)")
+    args = ap.parse_args(argv)
+
+    from . import cooldb, kv_handoff, microservices, noop_rtt, op_latency, \
+        ycsb_kv
+
+    def noop_bench():
+        return noop_rtt.bench(n=args.iters, thr_iters=args.thr_iters)
 
     suites = [
-        ("noop_rtt (Table 1a)", noop_rtt.bench),
-        ("op_latency (Table 1b)", op_latency.bench),
-        ("cooldb (Fig. 11)", cooldb.bench),
-        ("ycsb_kv (Figs. 9/10)", ycsb_kv.bench),
-        ("microservices (Figs. 12/13)", microservices.bench),
-        ("kv_handoff (pod-scale)", kv_handoff.bench),
+        ("noop", "noop_rtt (Table 1a)", noop_bench),
+        ("op", "op_latency (Table 1b)", op_latency.bench),
+        ("cooldb", "cooldb (Fig. 11)", cooldb.bench),
+        ("ycsb", "ycsb_kv (Figs. 9/10)", ycsb_kv.bench),
+        ("micro", "microservices (Figs. 12/13)", microservices.bench),
+        ("kv", "kv_handoff (pod-scale)", kv_handoff.bench),
     ]
+    if args.suite is not None:
+        suites = [s for s in suites if s[0] == args.suite]
+        if not suites:
+            sys.exit(f"unknown suite {args.suite!r}")
 
     print("name,us_per_call,derived")
     failures = 0
-    for title, fn in suites:
+    for key, title, fn in suites:
         t0 = time.time()
         try:
             rows = fn()
@@ -38,6 +101,8 @@ def main() -> None:
         for name, us, derived in rows:
             print(f"{name},{us:.3f},{derived}")
         print(f"# {title} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        if key == "noop":
+            _write_noop_json(rows, args.json, args.iters)
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,41 @@
+"""Version-compat shims for jax API drift.
+
+The reproduction must run on the pinned container jax (0.4.x) and on
+current releases in CI; two APIs moved between them:
+
+* ``shard_map`` — ``jax.experimental.shard_map.shard_map`` in 0.4.x,
+  promoted to ``jax.shard_map`` later; the replication-check kwarg was
+  also renamed ``check_rep`` → ``check_vma``.
+* ``Compiled.cost_analysis()`` — returns a list with one per-device dict
+  in 0.4.x, a plain dict in later releases.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # jax < 0.5: experimental module, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+_CHECK_KWS = ("check_vma", "check_rep")
+
+
+def shard_map(f, **kw):
+    """``jax.shard_map`` with the replication-check kwarg translated to
+    whatever this jax version accepts."""
+    for name in _CHECK_KWS:
+        if name in kw and name != _CHECK_KW:
+            kw[_CHECK_KW] = kw.pop(name)
+    return _shard_map(f, **kw)
+
+
+def cost_analysis(compiled) -> dict:
+    """Per-device cost dict of a ``Compiled``, any jax version."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}

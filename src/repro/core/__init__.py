@@ -35,6 +35,8 @@ from .channel import (
     BusyWaitPolicy,
     Channel,
     Connection,
+    DescriptorRing,
+    RING_DTYPE,
     RPC,
     RpcError,
     ServerCtx,
@@ -54,7 +56,8 @@ __all__ = [
     "SealManager", "S_COMPLETE", "S_RELEASED", "S_SEALED",
     "MAX_CACHED", "Sandbox", "SandboxManager",
     "Lease", "Orchestrator",
-    "BusyWaitPolicy", "Channel", "Connection", "RPC", "RpcError",
+    "BusyWaitPolicy", "Channel", "Connection", "DescriptorRing",
+    "RING_DTYPE", "RPC", "RpcError",
     "ServerCtx", "F_SANDBOXED", "F_SEALED",
     "DSMLink", "DSMNode", "FallbackConnection",
     "containers", "serial",

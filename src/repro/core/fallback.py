@@ -21,18 +21,31 @@ counts.
 The programmer-facing API is identical to the CXL path (§5.6 "all other
 programmer-facing interfaces are identical") — ``FallbackConnection.call``
 mirrors ``Connection.call`` including seals and sandboxes; only one
-server and one client per link, per the paper's limitation.
+server and one client per link, per the paper's limitation. The request
+descriptor uses the **same structured-dtype ring** (``DescriptorRing``)
+as the CXL path — the slot record is the wire format, posted with zero
+``struct`` repacking; ``send_msg`` models its flight over the link.
 """
 
 from __future__ import annotations
 
-import struct
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from . import addr as gaddr
+from .channel import (
+    DescriptorRing,
+    RING_SLOT_BYTES,
+    F_SANDBOXED,
+    F_SEALED,
+    OK,
+    R_DONE,
+    R_ERR,
+    R_REQ,
+    E_EXCEPTION,
+)
 from .errors import ChannelError, OwnershipMiss, SandboxViolation, SealViolation
 from .heap import SharedHeap
 from .sandbox import SandboxManager
@@ -123,8 +136,8 @@ class DSMNode:
         self._fault_in(a, nbytes)
         return self.heap.read(a, nbytes)
 
-    def write(self, a: int, data: bytes, pid: int = 0) -> None:
-        self._fault_in(a, len(data))
+    def write(self, a: int, data, pid: int = 0) -> None:
+        self._fault_in(a, SharedHeap._payload_nbytes(data))
         self.heap.write(a, data, pid=pid)
 
     def owns(self, page: int) -> bool:
@@ -136,7 +149,7 @@ class FallbackConnection:
 
     def __init__(self, num_pages: int = 4096, page_size: int = 4096,
                  link_latency_us: float = 3.0, client_pid: int = 1,
-                 server_pid: int = 2):
+                 server_pid: int = 2, ring_capacity: int = 64):
         self.link = DSMLink(num_pages, page_size, link_latency_us)
         self.client = DSMNode(self.link, OWNER_CLIENT)
         self.server = DSMNode(self.link, OWNER_SERVER)
@@ -146,6 +159,10 @@ class FallbackConnection:
         # allocator of this 1:1 link) and metadata is mirrored on demand.
         self.seals = SealManager(self.client.heap)
         self.sandboxes = SandboxManager(self.server.heap)
+        # The descriptor ring is daemon-owned heap bytes on the client
+        # replica; its slot record is what ``send_msg`` carries.
+        self.ring = DescriptorRing(self.client.heap, ring_capacity)
+        self._next_seq = 1
         self.functions: Dict[int, Callable[["FallbackServerCtx", int], int]] = {}
         self.n_calls = 0
 
@@ -168,42 +185,74 @@ class FallbackConnection:
     def call(self, fn_id: int, arg_addr: int = gaddr.NULL,
              scope: Optional[Scope] = None, sealed: bool = False,
              sandboxed: bool = False) -> int:
+        flags = 0
         seal_idx = 0
+        sc_start = sc_count = 0
+        if scope is not None:
+            sc_start, sc_count = scope.page_range()
         if sealed:
             if scope is None:
                 raise SealViolation("sealed call requires a scope")
             seal_idx = self.seals.seal(scope, holder=self.client_pid)
-        # descriptor goes over the wire (48B message)
-        self.link.send_msg(48)
+            flags |= F_SEALED
+        if sandboxed:
+            flags |= F_SANDBOXED
+
+        ring = self.ring
+        seq = self._next_seq
+        self._next_seq = seq + 1
+        slot = seq % ring.capacity
+        if ring.state_of(slot) == R_REQ:
+            raise ChannelError("ring overflow: too many in-flight RPCs")
+        ring.post(slot, seq, fn_id, flags, arg_addr, seal_idx,
+                  sc_start, sc_count)
+        # the descriptor record goes over the wire (§5.6)
+        self.link.send_msg(RING_SLOT_BYTES)
         self.link.sync_meta(to=OWNER_SERVER)
+
+        try:
+            self._serve(slot)
+        except BaseException:
+            # free the slot so the link survives handler failures
+            ring.complete(slot, 0, R_ERR, E_EXCEPTION)
+            ring.consume(slot)
+            raise
+        # completion message back
+        self.link.send_msg(RING_SLOT_BYTES)
+        ret, _state, _status = ring.consume(slot)
+        if sealed:
+            self.seals.release(seal_idx, holder=self.client_pid)
+        self.n_calls += 1
+        return ret
+
+    # -- server half (shares the CXL-path descriptor format) --------------
+    def _serve(self, slot: int) -> None:
+        ring = self.ring
+        (seq, fn_id, flags, arg, seal_idx, _ret, _st, _status,
+         sc_start, sc_count) = ring.load(slot)
 
         fn = self.functions.get(fn_id)
         if fn is None:
             raise ChannelError(f"no function {fn_id}")
 
         ctx = FallbackServerCtx(self)
-        if sealed and not self.seals.is_sealed(seal_idx):
+        if flags & F_SEALED and not self.seals.is_sealed(seal_idx):
             raise SealViolation("receiver found region unsealed")
         try:
-            if sandboxed and not gaddr.is_null(arg_addr) and scope is not None:
-                start, count = scope.page_range()
+            if flags & F_SANDBOXED and not gaddr.is_null(arg) and sc_count:
                 # server must own the pages before sandboxing them
-                self.link.migrate(list(range(start, start + count)),
-                                  to=OWNER_SERVER)
-                with self.sandboxes.enter(start, count) as sb:
+                self.link.migrate(
+                    list(range(sc_start, sc_start + sc_count)),
+                    to=OWNER_SERVER)
+                with self.sandboxes.enter(sc_start, sc_count) as sb:
                     ctx.sandbox = sb
-                    ret = fn(ctx, arg_addr)
+                    ret = fn(ctx, arg)
             else:
-                ret = fn(ctx, arg_addr)
+                ret = fn(ctx, arg)
         finally:
-            if sealed:
+            if flags & F_SEALED:
                 self.seals.mark_complete(seal_idx)
-        # completion message back
-        self.link.send_msg(48)
-        if sealed:
-            self.seals.release(seal_idx, holder=self.client_pid)
-        self.n_calls += 1
-        return ret
+        ring.complete(slot, ret, R_DONE, OK)
 
     def stats(self) -> Dict[str, int]:
         return {

@@ -78,6 +78,10 @@ class SharedHeap:
 
         # The byte space. One contiguous buffer == the CXL region.
         self.buf = np.zeros(num_pages * page_size, dtype=np.uint8)
+        # Cached 'B'-format memoryview of the byte space: slice-assigning
+        # into it from bytes/bytearray/memoryview is a single C memcpy,
+        # with no intermediate Python-level copy.
+        self._bytes = self.buf.data
 
         self.state = np.full(num_pages, FREE, dtype=np.uint8)
         self.owner = np.zeros(num_pages, dtype=np.int32)
@@ -218,8 +222,34 @@ class SharedHeap:
             raise InvalidPointer(f"addr+{nbytes} past end of {self.name}")
         return off, off + nbytes
 
-    def write(self, a: int, data: bytes | np.ndarray, pid: int = 0) -> None:
-        lo, hi = self._check_addr(a, len(data))
+    @staticmethod
+    def _payload_nbytes(data) -> int:
+        if isinstance(data, (np.ndarray, memoryview)):
+            return data.nbytes
+        return len(data)
+
+    def _store(self, lo: int, hi: int, data) -> None:
+        """Copy ``data`` into heap bytes with exactly one memcpy — no
+        intermediate ``bytes()`` materialization (the historical
+        ``np.frombuffer(bytes(data))`` path copied every payload twice)."""
+        if isinstance(data, np.ndarray):
+            if data.dtype != np.uint8 or data.ndim != 1:
+                data = np.ascontiguousarray(data).reshape(-1).view(np.uint8)
+            self.buf[lo:hi] = data
+        elif isinstance(data, memoryview):
+            if data.format != "B" or data.ndim != 1:
+                try:
+                    data = data.cast("B")
+                except TypeError:  # non-contiguous: flattening copy
+                    data = bytes(data)
+            self._bytes[lo:hi] = data
+        else:  # bytes | bytearray
+            self._bytes[lo:hi] = data
+
+    def write(self, a: int,
+              data: bytes | bytearray | memoryview | np.ndarray,
+              pid: int = 0) -> None:
+        lo, hi = self._check_addr(a, self._payload_nbytes(data))
         p0, p1 = lo // self.page_size, (hi - 1) // self.page_size + 1
         if p1 - p0 == 1:  # hot path: single-page access, scalar checks
             if self.state[p0] == FREE:
@@ -242,7 +272,7 @@ class SharedHeap:
                     f"pid {pid} writing sealed page in {self.name} "
                     f"(RPC in flight — §4.5)"
                 )
-        self.buf[lo:hi] = np.frombuffer(bytes(data), dtype=np.uint8)
+        self._store(lo, hi, data)
 
     def read(self, a: int, nbytes: int) -> np.ndarray:
         lo, hi = self._check_addr(a, nbytes)
@@ -254,15 +284,16 @@ class SharedHeap:
             raise InvalidPointer(f"read of freed page in {self.name}")
         return self.buf[lo:hi]
 
-    def write_fast(self, a: int, data: bytes) -> None:
+    def write_fast(self, a: int,
+                   data: bytes | bytearray | memoryview | np.ndarray) -> None:
         """Unchecked-permissions write for freshly-allocated private
         scopes (builder hot path): bounds only — never use on pages that
         may be sealed or foreign (the checked ``write`` is the default)."""
         lo = gaddr.linear(a, self.page_size)
-        hi = lo + len(data)
+        hi = lo + self._payload_nbytes(data)
         if hi > self.num_pages * self.page_size:
             raise InvalidPointer(f"write past end of {self.name}")
-        self.buf[lo:hi] = np.frombuffer(data, dtype=np.uint8)
+        self._store(lo, hi, data)
 
     def addr_of_page(self, page: int, offset: int = 0) -> int:
         return gaddr.pack(self.heap_id, page, offset)

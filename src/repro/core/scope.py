@@ -12,8 +12,9 @@ paths never touch the heap allocator, and batches seal releases.
 
 from __future__ import annotations
 
-import struct
 from typing import List, Optional
+
+import numpy as np
 
 from . import addr as gaddr
 from .errors import AllocationError, InvalidPointer
@@ -70,13 +71,21 @@ class Scope:
         self._bump = off + nbytes
         return gaddr.add(self.base_addr, off, self.heap.page_size)
 
-    def write_bytes(self, data: bytes, pid: int = 0) -> int:
-        a = self.alloc(len(data))
+    def write_bytes(self, data: bytes | bytearray | memoryview | np.ndarray,
+                    pid: int = 0) -> int:
+        """Copy ``data`` into the scope (one memcpy — the heap accepts any
+        buffer-protocol payload without an intermediate ``bytes()``)."""
+        a = self.alloc(SharedHeap._payload_nbytes(data))
         self.heap.write(a, data, pid=pid)
         return a
 
     def write_u64(self, values: List[int], pid: int = 0) -> int:
-        return self.write_bytes(struct.pack(f"<{len(values)}Q", *values), pid)
+        return self.write_bytes(np.asarray(values, dtype="<u8"), pid)
+
+    def view(self) -> np.ndarray:
+        """Raw ndarray view of the scope's bytes (zero-copy fill path)."""
+        lo = self.start_page * self.heap.page_size
+        return self.heap.buf[lo : lo + self.size_bytes]
 
     def used_bytes(self) -> int:
         return self._bump

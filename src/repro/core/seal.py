@@ -15,17 +15,29 @@ receiver — asymmetric permissions exactly as §5.3 describes. Here the
 asymmetry is enforced by the API (only the receiver half exposes
 ``mark_complete``), and descriptors are physically stored in heap bytes so
 that the fallback transport can migrate them like any other page.
+Descriptors are accessed through a NumPy structured-dtype view — field
+loads/stores, no ``struct`` repacking on the per-call path.
 
 ``release_batched`` implements §5.3 "Optimizing Sealing": releases are
 queued and the expensive permission flip + epoch bump (the TLB-shootdown
 analogue) is amortized over the whole batch. Default threshold 1024 — the
 paper's measured sweet spot.
+
+``seal`` extends the same amortization from release to **acquire**: when a
+scope is re-sealed while its previous release is still queued (same page
+range, same holder, batch not yet flushed), the pages are *still*
+write-protected — the old descriptor is reactivated in place and the
+protect-side epoch bump is skipped entirely. Since the holder could not
+have written the pages in between (they were sealed the whole time), the
+argument bytes are provably unchanged and re-protection is a no-op by
+construction. ``n_fast_seals`` counts these zero-epoch acquires.
 """
 
 from __future__ import annotations
 
-import struct
 from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
 
 from .errors import SealViolation
 from .heap import SharedHeap
@@ -37,8 +49,17 @@ S_SEALED = 1
 S_COMPLETE = 2
 S_RELEASED = 3
 
-_DESC_FMT = "<QIIQII"  # seq, start_page, num_pages, holder, state, _pad
-_DESC_SIZE = struct.calcsize(_DESC_FMT)
+# seq, start_page, num_pages, holder, state, _pad — byte-identical to the
+# historical "<QIIQII" struct layout (32 bytes).
+SEAL_DTYPE = np.dtype([
+    ("seq", "<u8"),
+    ("start", "<u4"),
+    ("count", "<u4"),
+    ("holder", "<u8"),
+    ("state", "<u4"),
+    ("pad", "<u4"),
+])
+SEAL_DESC_BYTES = SEAL_DTYPE.itemsize  # 32
 
 RangeLike = Union[Scope, Tuple[int, int]]
 
@@ -63,45 +84,51 @@ class SealManager:
         self.capacity = capacity
         self.batch_threshold = batch_threshold
 
-        ring_bytes = capacity * _DESC_SIZE
+        ring_bytes = capacity * SEAL_DESC_BYTES
         ring_pages = (ring_bytes + heap.page_size - 1) // heap.page_size
         self._ring_start = heap.alloc_pages(ring_pages, owner=0)
         self._ring_pages = ring_pages
         self._ring_base = heap.addr_of_page(self._ring_start)
-        # Raw view of the descriptor region. The kernel (this class) writes
-        # descriptors directly — the sender-RO / receiver-RW asymmetry of
-        # §5.3 is enforced at the API boundary, not per byte.
+        # Structured view of the descriptor region. The kernel (this class)
+        # writes descriptors directly — the sender-RO / receiver-RW
+        # asymmetry of §5.3 is enforced at the API boundary, not per byte.
         base = self._ring_start * heap.page_size
-        self._view = heap.buf[base : base + ring_bytes]
+        self._arr = heap.buf[base : base + ring_bytes].view(SEAL_DTYPE)
+        self._state = self._arr["state"]  # field-sliced view for state flips
 
         self._next_seq = 1
-        # pending batched releases: (idx, seq, start, count, holder) — the
-        # descriptor is read ONCE at release_batched time; flush only flips
-        # permissions and descriptor states.
-        self._pending: List[Tuple[int, int, int, int, int]] = []
+        # Pending batched releases: [idx, seq, start, count, holder, alive].
+        # The descriptor is read ONCE at release_batched time; flush only
+        # flips permissions and descriptor states. ``alive`` is cleared when
+        # a fast re-seal cancels the queued release.
+        self._pending: List[list] = []
+        self._pending_live = 0
+        self._pending_dead = 0
+        # (start, count, holder) → pending entry, for the seal fast path.
+        self._reusable: Dict[Tuple[int, int, int], list] = {}
+        # idx → live pending entry: rejects re-releasing a queued seal
+        # (queuing does not flip the descriptor state, so the state-based
+        # double-release check alone cannot see it).
+        self._queued: Dict[int, list] = {}
         # flush generation: anything queued in generation g is released once
         # flush_gen > g. Lets scope pools test release status in O(1).
         self.flush_gen = 0
 
         # perf counters (consumed by benchmarks / EXPERIMENTS.md)
         self.n_seals = 0
+        self.n_fast_seals = 0
         self.n_releases = 0
         self.n_batch_flushes = 0
 
-    # -- descriptor ring I/O (heap-resident raw views) -------------------
+    # -- descriptor ring I/O (heap-resident structured views) ------------
     def _read_desc(self, idx: int) -> Tuple[int, int, int, int, int]:
-        off = (idx % self.capacity) * _DESC_SIZE
-        seq, start, count, holder, state, _ = struct.unpack_from(
-            _DESC_FMT, self._view, off
-        )
+        seq, start, count, holder, state, _ = \
+            self._arr[idx % self.capacity].item()
         return seq, start, count, holder, state
 
     def _write_desc(self, idx: int, seq: int, start: int, count: int,
                     holder: int, state: int) -> None:
-        off = (idx % self.capacity) * _DESC_SIZE
-        self._view[off : off + _DESC_SIZE] = memoryview(
-            struct.pack(_DESC_FMT, seq, start, count, holder, state, 0)
-        )
+        self._arr[idx % self.capacity] = (seq, start, count, holder, state, 0)
 
     # -- sender side -----------------------------------------------------
     def seal(self, region: RangeLike, holder: int) -> int:
@@ -109,6 +136,27 @@ class SealManager:
         attaches to the RPC (§5.3: "the sender also includes an index into
         the descriptor buffer along with RPC's arguments")."""
         start, count = _as_range(region)
+        ent = self._reusable.pop((start, count, holder), None)
+        if ent is not None and ent[5]:
+            # Fast path: the previous flight's release is still queued, so
+            # the pages never lost their write protection — reactivate the
+            # old descriptor in place. Zero epoch bumps (§5.3, extended
+            # from release to acquire).
+            ent[5] = False
+            self._pending_live -= 1
+            self._pending_dead += 1
+            self._queued.pop(ent[0], None)
+            if self._pending_dead >= self.batch_threshold:
+                # steady-state reuse never reaches the live flush
+                # threshold, so compact cancelled entries here to keep
+                # the queue bounded
+                self._pending = [e for e in self._pending if e[5]]
+                self._pending_dead = 0
+            idx = ent[0]
+            self._state[idx % self.capacity] = S_SEALED
+            self.n_seals += 1
+            self.n_fast_seals += 1
+            return idx
         idx = self._next_seq
         self._next_seq += 1
         seq, _, _, _, state = self._read_desc(idx)
@@ -126,6 +174,7 @@ class SealManager:
         """``release()`` system call: verify completion, restore perms."""
         seq, start, count, h, state = self._read_desc(idx)
         self._check_release(idx, seq, h, holder, state)
+        self._check_not_queued(idx)
         self.heap.unprotect_range(start, count)
         self._write_desc(idx, seq, start, count, h, S_RELEASED)
         self.n_releases += 1
@@ -137,8 +186,13 @@ class SealManager:
         """
         seq, start, count, h, state = self._read_desc(idx)
         self._check_release(idx, seq, h, holder, state)
-        self._pending.append((idx, seq, start, count, h))
-        if len(self._pending) >= self.batch_threshold:
+        self._check_not_queued(idx)
+        ent = [idx, seq, start, count, h, True]
+        self._pending.append(ent)
+        self._reusable[(start, count, h)] = ent
+        self._queued[idx] = ent
+        self._pending_live += 1
+        if self._pending_live >= self.batch_threshold:
             self.flush()
             return True
         return False
@@ -147,14 +201,20 @@ class SealManager:
         """Release every pending seal with a single permission epoch."""
         if not self._pending:
             return
-        ranges = [(start, count) for _, _, start, count, _ in self._pending]
-        self.heap.unprotect_ranges(ranges)  # ONE epoch bump
-        for idx, seq, start, count, h in self._pending:
-            self._write_desc(idx, seq, start, count, h, S_RELEASED)
-        self.n_releases += len(self._pending)
+        live = [e for e in self._pending if e[5]]
+        if live:
+            ranges = [(e[2], e[3]) for e in live]
+            self.heap.unprotect_ranges(ranges)  # ONE epoch bump
+            for idx, seq, start, count, h, _ in live:
+                self._write_desc(idx, seq, start, count, h, S_RELEASED)
+        self.n_releases += len(live)
         self.n_batch_flushes += 1
         self.flush_gen += 1
         self._pending.clear()
+        self._reusable.clear()
+        self._queued.clear()
+        self._pending_live = 0
+        self._pending_dead = 0
 
     def _check_release(self, idx, seq, h, holder, state) -> None:
         if seq != idx or state == S_EMPTY:
@@ -170,6 +230,14 @@ class SealManager:
             raise SealViolation(
                 f"release of in-flight seal {idx} (state={state}): "
                 "receiver has not marked the RPC complete"
+            )
+
+    def _check_not_queued(self, idx: int) -> None:
+        ent = self._queued.get(idx)
+        if ent is not None and ent[5]:
+            raise SealViolation(
+                f"double release of seal {idx}: already queued for "
+                "batched release"
             )
 
     # -- receiver side ----------------------------------------------------
@@ -192,11 +260,11 @@ class SealManager:
         seq, start, count, h, state = self._read_desc(idx)
         if seq != idx or state != S_SEALED:
             raise SealViolation(f"completing non-sealed descriptor {idx}")
-        self._write_desc(idx, seq, start, count, h, S_COMPLETE)
+        self._state[idx % self.capacity] = S_COMPLETE
 
     # -- introspection ------------------------------------------------------
     def pending_releases(self) -> int:
-        return len(self._pending)
+        return self._pending_live
 
     def state_of(self, idx: int) -> int:
-        return self._read_desc(idx)[4]
+        return int(self._state[idx % self.capacity])

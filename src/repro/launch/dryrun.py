@@ -262,7 +262,8 @@ def _compile_metrics(cfg, shape, mesh, rules, variant: str = "",
             if val is not None:
                 rec[f] = int(val)
 
-    cost = compiled.cost_analysis()
+    from repro.compat import cost_analysis
+    cost = cost_analysis(compiled)
     if verbose:
         print({k: val for k, val in (cost or {}).items()
                if k in ("flops", "bytes accessed")})

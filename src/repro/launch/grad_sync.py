@@ -25,6 +25,7 @@ def main() -> None:
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map
     from repro.configs import get_config
     from repro.launch.dryrun import collective_bytes
     from repro.launch.mesh import make_production_mesh
@@ -56,7 +57,7 @@ def main() -> None:
                             is_leaf=lambda x: isinstance(x, P))
 
     def lower(fn):
-        sm = jax.shard_map(
+        sm = shard_map(
             fn, mesh=mesh, in_specs=(in_specs,), out_specs=in_specs,
             check_vma=False)
         return jax.jit(sm).lower(grad_shapes).compile()

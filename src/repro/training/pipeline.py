@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 Params = Any
 
 
@@ -45,11 +47,12 @@ def pipeline_apply(fn_stage: Callable, x, stage_params, *, mesh,
         micros = x_local.reshape((n_micro, mb) + x_local.shape[1:])
 
         n_ticks = n_micro + n_stages - 1
-        # carries become pod-varying through ppermute: mark them as such
-        buf = jax.lax.pcast(
-            jnp.zeros((mb,) + x_local.shape[1:], x_local.dtype),
-            (axis,), to="varying")
-        outs = jax.lax.pcast(jnp.zeros_like(micros), (axis,), to="varying")
+        # carries become pod-varying through ppermute; the shard_map below
+        # runs with the replication/vma check off (check_vma=False — the
+        # compat shim maps it to check_rep on older jax), which works on
+        # every jax version without lax.pcast
+        buf = jnp.zeros((mb,) + x_local.shape[1:], x_local.dtype)
+        outs = jnp.zeros_like(micros)
 
         def tick(carry, t):
             buf, outs = carry
@@ -80,10 +83,11 @@ def pipeline_apply(fn_stage: Callable, x, stage_params, *, mesh,
             jnp.where(stage == n_stages - 1, outs, 0.0), axis)
         return outs.reshape(x_local.shape)
 
-    return jax.shard_map(
+    return shard_map(
         per_pod, mesh=mesh,
         in_specs=(P(), P(axis)),
         out_specs=P(),
+        check_vma=False,
     )(x, stage_params)
 
 

@@ -10,10 +10,13 @@ from repro.core import (
     AllocationError,
     BusyWaitPolicy,
     Channel,
+    ChannelError,
+    DescriptorRing,
     FallbackConnection,
     InvalidPointer,
     Orchestrator,
     QuotaExceeded,
+    RING_DTYPE,
     RPC,
     RpcError,
     SandboxManager,
@@ -650,3 +653,293 @@ class TestSerial:
             assert ch.bytes_sent > 0
         finally:
             ch.stop()
+
+
+# ---------------------------------------------------------------------------
+# descriptor ring: structured-dtype layout, wraparound, overflow, sweeps
+# ---------------------------------------------------------------------------
+class TestDescriptorRing:
+    def test_dtype_matches_legacy_struct_layout(self):
+        """The structured dtype must be byte-identical to the historical
+        "<QIIQQQIIII" packing (fallback pages stay migratable)."""
+        import struct
+        assert RING_DTYPE.itemsize == struct.calcsize("<QIIQQQIIII")
+        offs = dict(zip(RING_DTYPE.names,
+                        (RING_DTYPE.fields[n][1] for n in RING_DTYPE.names)))
+        assert offs == {"seq": 0, "fn": 8, "flags": 12, "arg": 16,
+                        "seal_idx": 24, "ret": 32, "state": 40,
+                        "status": 44, "scope_start": 48, "scope_count": 52}
+
+    def test_state_is_full_u32(self):
+        """Regression: the seed's state load truncated the "<I" state field
+        to its low 2 bytes (channel.py:120-123 pre-refactor). Pin proper
+        u32 loads against the raw little-endian bytes."""
+        h = SharedHeap(1, 16)
+        r = DescriptorRing(h, capacity=8)
+        slot = 3
+        r.state[slot] = 0x01020304
+        assert int(r.state[slot]) == 0x01020304
+        assert r.state_of(slot) == 0x01020304
+        base = r.start_page * h.page_size + slot * RING_DTYPE.itemsize + 40
+        assert list(h.buf[base : base + 4]) == [0x04, 0x03, 0x02, 0x01]
+        # raw byte write with a value whose high half is nonzero
+        h.buf[base : base + 4] = [0xDD, 0xCC, 0xBB, 0xAA]
+        assert r.state_of(slot) == 0xAABBCCDD
+        assert int(r.state[slot]) == 0xAABBCCDD
+
+    def test_post_load_roundtrip_field_views(self):
+        h = SharedHeap(1, 16)
+        r = DescriptorRing(h, capacity=8)
+        r.post(2, seq=10, fn=7, flags=3, arg=0xDEADBEEF, seal_idx=5,
+               sc_start=11, sc_count=2)
+        assert r.load(2) == (10, 7, 3, 0xDEADBEEF, 5, 0, 1, 0, 11, 2)
+        assert r.load_req(2) == (7, 3, 0xDEADBEEF, 5, 11, 2)
+        # field-sliced store visible through the word alias and vice versa
+        r.seq[2] = 99
+        assert r.load(2)[0] == 99
+        r.complete(2, ret=1234, state=2, status=0)
+        ret, state, status = r.consume(2)
+        assert (ret, state, status) == (1234, 2, 0)
+        assert r.state_of(2) == 0  # consumed slot is R_EMPTY
+
+    def _mk(self, ring_capacity=8):
+        orch = Orchestrator()
+        ch = RPC(orch, pid=1).open("ring")
+        ch.add(1, lambda ctx, a: int(a) + 1)
+        conn = RPC(orch, pid=2).connect("ring", ring_capacity=ring_capacity)
+        return ch, conn
+
+    def test_wraparound_sequential(self):
+        ch, conn = self._mk(ring_capacity=8)
+        for i in range(5 * 8 + 3):  # several laps around the ring
+            assert conn.call_inline(1, i) == i + 1
+        assert conn.n_calls == 43
+
+    def test_wraparound_pipelined(self):
+        ch, conn = self._mk(ring_capacity=8)
+        for lap in range(12):
+            toks = [conn.call_async(1, lap * 6 + k) for k in range(6)]
+            assert ch.serve_once() == 6
+            for k, t in enumerate(toks):
+                assert conn.wait(t) == lap * 6 + k + 1
+
+    def test_overflow_when_window_exceeds_capacity(self):
+        ch, conn = self._mk(ring_capacity=8)
+        toks = [conn.call_async(1, k) for k in range(8)]  # fills every slot
+        with pytest.raises(ChannelError, match="ring overflow"):
+            conn.call_async(1, 99)
+        # serving alone does not free slots: a completed-but-unconsumed
+        # result must not be overwritten (that would alias two calls)
+        assert ch.serve_once() == 8
+        with pytest.raises(ChannelError, match="ring overflow"):
+            conn.call_async(1, 99)
+        # consuming the results frees the window (overflow is not sticky)
+        for k, t in enumerate(toks):
+            assert conn.wait(t) == k + 1
+        assert conn.call_inline(1, 7) == 8
+
+    def test_rejected_post_does_not_burn_a_seq(self):
+        """Regression: a rejected post must leave _next_seq untouched —
+        burning a seq desyncs the server head, which then waits forever
+        on a request that was never written (seed bug, probe-found)."""
+        ch, conn = self._mk(ring_capacity=4)
+        toks = [conn.call_async(1, k) for k in range(4)]
+        for _ in range(3):  # repeated rejections must not consume seqs
+            with pytest.raises(ChannelError, match="ring overflow"):
+                conn.call_async(1, 99)
+        ch.serve_once()
+        assert [conn.wait(t) for t in toks] == [1, 2, 3, 4]
+        # the server head is still in sync: threaded calls keep working
+        th = ch.listen_in_thread()
+        try:
+            assert conn.call(1, 9, timeout=5.0) == 10
+        finally:
+            ch.stop()
+            th.join(timeout=2)
+
+    def test_rejected_sealed_post_does_not_burn_a_seq(self):
+        """Same invariant for the other raising paths of _post: a sealed
+        call without a scope (and a failing seal) must leave the seq
+        unclaimed, or the connection deadlocks."""
+        ch, conn = self._mk(ring_capacity=8)
+        with pytest.raises(SealViolation):
+            conn.call(1, sealed=True)  # no scope → rejected before posting
+        th = ch.listen_in_thread()
+        try:
+            assert conn.call(1, 1, timeout=5.0) == 2
+        finally:
+            ch.stop()
+            th.join(timeout=2)
+
+    def test_vectorized_sweep_multiconn(self):
+        orch = Orchestrator()
+        ch = RPC(orch, pid=1).open("sweep")
+        ch.add(1, lambda ctx, a: int(a) * 2)
+        conns = [RPC(orch, pid=10 + i).connect("sweep") for i in range(4)]
+        toks = {0: conns[0].call_async(1, 3), 2: conns[2].call_async(1, 4)}
+        assert ch.serve_once() == 2  # only the two ready rings drained
+        assert conns[0].wait(toks[0]) == 6
+        assert conns[2].wait(toks[2]) == 8
+        assert ch.serve_once() == 0
+
+    def test_serve_many_drains_backlog(self):
+        orch = Orchestrator()
+        ch = RPC(orch, pid=1).open("many")
+        ch.add(1, lambda ctx, a: 1)
+        conns = [RPC(orch, pid=20 + i).connect("many", ring_capacity=16)
+                 for i in range(3)]
+        toks = [(c, c.call_async(1)) for c in conns for _ in range(5)]
+        assert ch.serve_many() == 15
+        for c, t in toks:
+            assert c.wait(t) == 1
+
+
+# ---------------------------------------------------------------------------
+# seal fast path: §5.3 amortization extended from release to acquire
+# ---------------------------------------------------------------------------
+class TestSealFastPath:
+    def _mk(self, threshold=1024):
+        h = SharedHeap(1, 256)
+        sm = SealManager(h, capacity=64, batch_threshold=threshold)
+        s = create_scope(h, 2 * h.page_size, owner=1)
+        return h, sm, s
+
+    def test_reseal_of_pending_scope_skips_epoch(self):
+        h, sm, s = self._mk()
+        idx = sm.seal(s, holder=1)
+        sm.mark_complete(idx)
+        sm.release_batched(idx, holder=1)
+        e0 = h.perm_epoch
+        idx2 = sm.seal(s, holder=1)  # release still queued → reuse
+        assert idx2 == idx
+        assert sm.n_fast_seals == 1
+        assert h.perm_epoch == e0  # zero epoch bumps on the fast acquire
+        assert sm.is_sealed(idx2) and sm.is_sealed(idx2, s)
+        # pages stayed protected the whole time
+        a = s.alloc(8)
+        with pytest.raises(SealedPageError):
+            h.write(a, b"x" * 8, pid=1)
+        sm.mark_complete(idx2)
+        sm.release(idx2, holder=1)
+        h.write(a, b"y" * 8, pid=1)  # released → writable again
+
+    def test_no_reuse_after_flush(self):
+        h, sm, s = self._mk()
+        idx = sm.seal(s, holder=1)
+        sm.mark_complete(idx)
+        sm.release_batched(idx, holder=1)
+        sm.flush()  # release went through: pages unprotected
+        idx2 = sm.seal(s, holder=1)  # must re-protect (slow path)
+        assert idx2 != idx
+        assert sm.n_fast_seals == 0
+        sm.mark_complete(idx2)
+        sm.release(idx2, holder=1)
+
+    def test_no_reuse_for_different_holder_or_range(self):
+        h, sm, s = self._mk()
+        idx = sm.seal(s, holder=1)
+        sm.mark_complete(idx)
+        sm.release_batched(idx, holder=1)
+        other = create_scope(h, h.page_size, owner=2)
+        idx2 = sm.seal(other, holder=2)  # different range+holder: slow path
+        assert sm.n_fast_seals == 0
+        assert idx2 != idx
+
+    def test_flush_skips_cancelled_releases(self):
+        h, sm, s = self._mk(threshold=4)
+        idx = sm.seal(s, holder=1)
+        sm.mark_complete(idx)
+        sm.release_batched(idx, holder=1)
+        sm.seal(s, holder=1)  # cancels the queued release
+        assert sm.pending_releases() == 0
+        e0 = h.perm_epoch
+        sm.flush()  # only dead entries: no permission flip
+        assert h.perm_epoch == e0
+        assert sm.is_sealed(idx)  # the reused seal survived the flush
+        sm.mark_complete(idx)
+        sm.release(idx, holder=1)
+
+    def test_direct_release_after_queued_release_rejected(self):
+        """Regression: release() of a seal whose release is already queued
+        must be a double release — silently unprotecting the pages would
+        let a later fast re-seal hand out a 'sealed' descriptor over
+        writable pages (§4.5 violation)."""
+        h, sm, s = self._mk()
+        idx = sm.seal(s, holder=1)
+        sm.mark_complete(idx)
+        sm.release_batched(idx, holder=1)
+        with pytest.raises(SealViolation, match="double release"):
+            sm.release(idx, holder=1)
+        with pytest.raises(SealViolation, match="double release"):
+            sm.release_batched(idx, holder=1)
+        # pages stayed protected; the flight resolves through the flush
+        a = s.alloc(8)
+        with pytest.raises(SealedPageError):
+            h.write(a, b"x" * 8, pid=1)
+        sm.flush()
+        h.write(a, b"x" * 8, pid=1)
+
+    def test_end_to_end_amortized_secure_calls(self):
+        orch = Orchestrator()
+        ch = RPC(orch, pid=1).open("amort")
+        seen = []
+        ch.add(1, lambda ctx, a: len(seen) if not seen.append(None) else 0)
+        conn = RPC(orch, pid=2).connect("amort")
+        pool = conn.scope_pool(1)
+        scope = pool.pop()
+        arg = scope.write_bytes(b"p" * 32, pid=conn.client_pid)
+        e0 = conn.heap.perm_epoch
+        for _ in range(50):
+            conn.call_inline(1, arg, scope=scope, sealed=True,
+                             batch_release=True)
+        # first call protects (1 epoch); the other 49 reuse the seal
+        assert conn.seals.n_fast_seals == 49
+        assert conn.heap.perm_epoch == e0 + 1
+        assert len(seen) == 50
+        conn.seals.flush()
+        conn.heap.write(arg, b"q" * 32, pid=conn.client_pid)
+
+
+# ---------------------------------------------------------------------------
+# heap write: buffer-protocol payloads, no intermediate copies
+# ---------------------------------------------------------------------------
+class TestHeapWritePayloads:
+    def test_accepts_buffer_types(self):
+        h = SharedHeap(1, 16)
+        p = h.alloc_pages(2)
+        payloads = [
+            b"plain bytes",
+            bytearray(b"a mutable buffer"),
+            memoryview(b"a memoryview"),
+            np.arange(32, dtype=np.uint8),
+            np.arange(8, dtype="<u4"),          # non-u8 dtype ndarray
+            np.ones((4, 4), dtype=np.uint8),    # 2-D ndarray
+            memoryview(np.arange(6, dtype="<u8")),  # non-'B' memoryview
+        ]
+        for i, data in enumerate(payloads):
+            a = h.addr_of_page(p, i * 256)
+            expect = bytes(data) if not isinstance(data, np.ndarray) \
+                else data.tobytes()
+            h.write(a, data)
+            assert bytes(h.read(a, len(expect))) == expect
+            h.buf[:] = h.buf  # no-op; keep page contents
+            h.write_fast(a, data)
+            assert bytes(h.read(a, len(expect))) == expect
+
+    def test_seal_check_still_applies_to_all_payload_types(self):
+        h = SharedHeap(1, 16)
+        p = h.alloc_pages(1, owner=7)
+        h.protect_range(p, 1, holder=7)
+        a = h.addr_of_page(p)
+        for data in [b"x", bytearray(b"x"), memoryview(b"x"),
+                     np.zeros(1, np.uint8)]:
+            with pytest.raises(SealedPageError):
+                h.write(a, data, pid=7)
+
+    def test_scope_write_u64_roundtrip(self):
+        h = SharedHeap(1, 16)
+        s = create_scope(h, 4096)
+        vals = [0, 1, 2**40, 2**64 - 1]
+        a = s.write_u64(vals)
+        got = np.frombuffer(bytes(h.read(a, 8 * len(vals))), "<u8")
+        assert list(got) == vals

@@ -9,6 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property sweeps need hypothesis, which the pinned container "
+           "image does not ship; install it to run this module")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_prefill.ops import flash_prefill
