@@ -18,7 +18,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import BusyWaitPolicy, Orchestrator, RPC
+from repro.core import BusyWaitPolicy, ClusterRouter, Orchestrator, RPC, \
+    ServerLoop
 from repro.core import containers as C
 
 FN_COMPOSE, FN_USER, FN_MEDIA, FN_TEXT, FN_STORE = 1, 2, 3, 4, 5
@@ -26,12 +27,27 @@ DB_WORK_US = 30.0  # simulated storage work (the paper's 66% critical path)
 
 
 class SocialNet:
-    def __init__(self, sleep_us: Optional[float] = None):
+    """The service mesh, published through the cluster router: clients
+    resolve ``/pod0/svc`` by name and the router hands them the same-pod
+    CXL ring transport (the cross-pod arm is benchmarked in the cluster
+    suite)."""
+
+    def __init__(self, sleep_us: Optional[float] = None,
+                 threaded: bool = False):
         self.orch = Orchestrator()
-        ch = RPC(self.orch, pid=1).open("svc", heap_pages=1 << 12)
+        self.router = ClusterRouter(self.orch)
+        ch = RPC(self.orch, pid=1).open("/pod0/svc", heap_pages=1 << 12)
         self.ch = ch
-        self.conn = RPC(self.orch, pid=2).connect("svc")
+        self.router.register("/pod0/svc", ch, pod="pod0")
+        self.conn = self.router.connect("/pod0/svc", pid=2, pod="pod0")
+        assert self.conn.transport == "cxl"
         self.scope = self.conn.create_scope(1 << 14)
+        # threaded: requests are served by one ServerLoop thread instead
+        # of inline on the caller (the multi-client deployment shape)
+        self.loop: Optional[ServerLoop] = None
+        if threaded:
+            self.loop = ServerLoop([ch])
+            self.loop.run_in_thread()
         self.store: Dict[int, int] = {}
         self._n = 0
         ch.add(FN_COMPOSE, self._compose)
@@ -67,8 +83,16 @@ class SocialNet:
             "media": [1, 2, 3], "ts": 12345,
         }, pid=2)
         t0 = time.perf_counter()
-        self.conn.call_inline(FN_COMPOSE, root, scope=self.scope)
+        if self.loop is not None:
+            self.conn.call(FN_COMPOSE, root, scope=self.scope, timeout=30.0)
+        else:
+            self.conn.call_inline(FN_COMPOSE, root, scope=self.scope)
         return (time.perf_counter() - t0) * 1e6
+
+    def shutdown(self) -> None:
+        if self.loop is not None:
+            self.loop.stop()
+            self.loop = None
 
 
 def _load_sweep(net: SocialNet, offered_rps: float, duration_s: float
@@ -106,4 +130,13 @@ def bench(duration_s: float = 1.0) -> List[Tuple[str, float, str]]:
         tag = "adaptive" if sleep is None else f"{sleep:.0f}us"
         rows.append((f"socialnet_sleep_{tag}_p99", p99,
                      f"p50={p50:.0f}us achieved={ach:.0f}rps"))
+    # cluster deployment shape: requests cross a thread boundary into one
+    # ServerLoop serving the whole mesh (see --suite cluster for scaling)
+    net = SocialNet(threaded=True)
+    try:
+        p50, p99, ach = _load_sweep(net, 2000, duration_s)
+    finally:
+        net.shutdown()
+    rows.append(("socialnet_serverloop_p99", p99,
+                 f"p50={p50:.0f}us achieved={ach:.0f}rps"))
     return rows

@@ -10,10 +10,16 @@ the legacy-vs-current speedups for ``noop_rtt_rpcool`` and
 in the same process — see ``benchmarks/legacy_ring.py``), proving the
 before/after delta of the descriptor-ring refactor on this machine.
 
+The cluster suite writes ``BENCH_cluster.json``: 1→8 concurrent client
+threads through ONE ServerLoop thread (aggregate throughput + the
+8-vs-1 scaling ratio, gate ≥ 4×) plus the router's same-pod/cross-pod
+connection counts.
+
 Usage:
     python -m benchmarks.run                     # all suites
     python -m benchmarks.run --suite noop        # one suite
     python -m benchmarks.run --suite noop --iters 2000 --json out.json
+    python -m benchmarks.run --suite cluster     # writes BENCH_cluster.json
 """
 
 from __future__ import annotations
@@ -25,6 +31,39 @@ import time
 import traceback
 
 NOOP_JSON_DEFAULT = "BENCH_noop.json"
+CLUSTER_JSON_DEFAULT = "BENCH_cluster.json"
+
+
+def _write_cluster_json(rows, path: str, iters: int) -> None:
+    by_name = {name: us for name, us, _ in rows}
+    derived = {name: d for name, us, d in rows}
+    throughput = {
+        str(n): 1e6 * n / by_name[f"cluster_{n}clients_rtt"]
+        for n in (1, 2, 4, 8)
+        if f"cluster_{n}clients_rtt" in by_name
+    }
+    scaling = by_name.get("cluster_scaling_8v1", 0.0)
+    doc = {
+        "suite": "cluster (§4.6 router + ServerLoop)",
+        "iters": iters,
+        "unit": "us_per_call",
+        "rows": by_name,
+        "derived": derived,
+        "aggregate_calls_per_s": throughput,
+        "scaling_8v1": scaling,
+        "target_scaling": 4.0,
+        "meets_target": scaling >= 4.0,
+        "routing": {
+            "cxl_connects": int(by_name.get(
+                "cluster_routing_cxl_connects", 0)),
+            "fallback_connects": int(by_name.get(
+                "cluster_routing_fallback_connects", 0)),
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}: scaling_8v1={scaling:.2f}x "
+          f"routing={doc['routing']}", file=sys.stderr)
 
 
 def _write_noop_json(rows, path: str, iters: int) -> None:
@@ -59,7 +98,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--suite", default=None,
                     help="run only this suite (noop, op, cooldb, ycsb, "
-                         "micro, kv)")
+                         "micro, kv, cluster)")
     ap.add_argument("--iters", type=int, default=20_000,
                     help="iteration count for the noop RTT rows")
     ap.add_argument("--thr-iters", type=int, default=30_000,
@@ -69,11 +108,16 @@ def main(argv=None) -> None:
                          "(default BENCH_noop.json)")
     args = ap.parse_args(argv)
 
-    from . import cooldb, kv_handoff, microservices, noop_rtt, op_latency, \
-        ycsb_kv
+    from . import cluster, cooldb, kv_handoff, microservices, noop_rtt, \
+        op_latency, ycsb_kv
 
     def noop_bench():
         return noop_rtt.bench(n=args.iters, thr_iters=args.thr_iters)
+
+    def cluster_bench():
+        # the noop default of 20k iters would take minutes at the polite
+        # 20µs client poll cadence; 3000 is plenty for a stable ratio
+        return cluster.bench(iters=min(args.iters, 3000))
 
     suites = [
         ("noop", "noop_rtt (Table 1a)", noop_bench),
@@ -82,6 +126,7 @@ def main(argv=None) -> None:
         ("ycsb", "ycsb_kv (Figs. 9/10)", ycsb_kv.bench),
         ("micro", "microservices (Figs. 12/13)", microservices.bench),
         ("kv", "kv_handoff (pod-scale)", kv_handoff.bench),
+        ("cluster", "cluster (§4.6 router + ServerLoop)", cluster_bench),
     ]
     if args.suite is not None:
         suites = [s for s in suites if s[0] == args.suite]
@@ -103,6 +148,14 @@ def main(argv=None) -> None:
         print(f"# {title} done in {time.time()-t0:.1f}s", file=sys.stderr)
         if key == "noop":
             _write_noop_json(rows, args.json, args.iters)
+        elif key == "cluster":
+            # honor a custom --json only when cluster is the ONLY suite
+            # running; in an all-suites run the flag belongs to noop and
+            # cluster must not clobber its trajectory file
+            path = args.json if (args.suite == "cluster"
+                                 and args.json != NOOP_JSON_DEFAULT) \
+                else CLUSTER_JSON_DEFAULT
+            _write_cluster_json(rows, path, min(args.iters, 3000))
     if failures:
         sys.exit(1)
 

@@ -7,9 +7,12 @@ Layers (bottom-up):
   seal        Fig. 8 seal()/release() protocol + batched release
   sandbox     MPK-analogue pointer confinement, 14 cached sandboxes
   containers  heap-resident pointer-rich objects (Boost.Interprocess analogue)
-  channel     channels/connections/RPC rings + §5.8 busy-wait policy
-  orchestrator leases, quotas, registry, failure GC
+  channel     channels/connections/RPC rings + §5.8 busy-wait policy,
+              ServerLoop (one thread serving every ring of N channels)
+  orchestrator leases, quotas, registry, pods, failure GC
   fallback    two-node software-coherent DSM (RDMA/DCN analogue)
+  router      ClusterRouter: hierarchical endpoint names → CXL or
+              fallback transport, lease heartbeats, replica failover
   serial      serializing baseline transport (gRPC analogue, benchmarks)
 """
 
@@ -40,10 +43,12 @@ from .channel import (
     RPC,
     RpcError,
     ServerCtx,
+    ServerLoop,
     F_SANDBOXED,
     F_SEALED,
 )
 from .fallback import DSMLink, DSMNode, FallbackConnection
+from .router import ClusterRouter, Endpoint, RoutedConnection
 from . import containers, serial
 
 __all__ = [
@@ -58,7 +63,8 @@ __all__ = [
     "Lease", "Orchestrator",
     "BusyWaitPolicy", "Channel", "Connection", "DescriptorRing",
     "RING_DTYPE", "RPC", "RpcError",
-    "ServerCtx", "F_SANDBOXED", "F_SEALED",
+    "ServerCtx", "ServerLoop", "F_SANDBOXED", "F_SEALED",
     "DSMLink", "DSMNode", "FallbackConnection",
+    "ClusterRouter", "Endpoint", "RoutedConnection",
     "containers", "serial",
 ]

@@ -125,6 +125,43 @@ class BusyWaitPolicy:
         time.sleep(self.delay_s())
 
 
+def _serve_event_loop(serve_pending: Callable[[], int],
+                      sweep_once: Callable[[], int],
+                      channels, policy: BusyWaitPolicy,
+                      stop: threading.Event, ev: threading.Event) -> None:
+    """The one §5.8 busy-wait/doorbell protocol, shared by
+    ``Channel.listen`` (one channel) and ``ServerLoop.run`` (many).
+
+    The policy-prescribed back-off is spent blocked on the doorbell event
+    rather than in a blind nap: a post that lands while the server is
+    backing off wakes it immediately, so the high-load 150µs budget
+    bounds the wait instead of gating every batch. The clear → park →
+    re-sweep → wait sequence is race-sensitive (a post may land between
+    the clear and the park flag), so it lives here exactly once.
+    """
+    while not stop.is_set():
+        n = serve_pending()
+        policy.record(n > 0)
+        if n == 0:
+            delay = policy.delay_s()
+            if delay <= 0:
+                time.sleep(0)  # spin, but yield the GIL
+                continue
+            ev.clear()
+            for ch in channels:
+                ch._parked = True
+            # re-check after parking: a post may have raced the clear
+            # (posts from here on see _parked and ring the doorbell)
+            if sweep_once():
+                for ch in channels:
+                    ch._parked = False
+                policy.record(True)
+                continue
+            ev.wait(delay)
+            for ch in channels:
+                ch._parked = False
+
+
 class DescriptorRing:
     """SPSC descriptor ring: a structured-dtype view over heap bytes.
 
@@ -405,6 +442,7 @@ class Channel:
         self._parked = False  # True only while listen waits on the doorbell
         self._stop = threading.Event()
         self._sweep_scratch: Optional[np.ndarray] = None
+        self._conn_version = 0  # bumped on accept/drop; ServerLoop caches
         orch.register_channel(name, self)
 
     # -- server API (Fig. 6 left) -------------------------------------------
@@ -428,11 +466,13 @@ class Channel:
         self.orch.map_heap(client_pid, heap)
         conn = self.CONN_CLS(self, heap, client_pid, ring_capacity)
         self.connections.append(conn)
+        self._conn_version += 1
         return conn
 
     def _drop_connection(self, conn: Connection) -> None:
         if conn in self.connections:
             self.connections.remove(conn)
+            self._conn_version += 1
             self.orch.unmap_heap(conn.client_pid, conn.heap.heap_id)
             if not self.shared_heap:
                 self.orch.unmap_heap(self.server_pid, conn.heap.heap_id)
@@ -504,33 +544,11 @@ class Channel:
 
     def listen(self, policy: Optional[BusyWaitPolicy] = None,
                stop: Optional[threading.Event] = None) -> None:
-        """``conn->listen()`` — busy-wait loop with §5.8 adaptive back-off.
-
-        The policy-prescribed back-off is spent blocked on the channel
-        doorbell event rather than in a blind nap: a post that lands while
-        the server is backing off wakes it immediately, so the high-load
-        150µs budget bounds the wait instead of gating every batch."""
-        policy = policy or BusyWaitPolicy()
-        stop = stop or self._stop
-        ev = self._event
-        while not stop.is_set():
-            n = self.serve_many()
-            policy.record(n > 0)
-            if n == 0:
-                delay = policy.delay_s()
-                if delay <= 0:
-                    time.sleep(0)  # spin, but yield the GIL
-                    continue
-                ev.clear()
-                self._parked = True
-                # re-check after parking: a post may have raced the clear
-                # (posts from here on see _parked and ring the doorbell)
-                if self.serve_once():
-                    self._parked = False
-                    policy.record(True)
-                    continue
-                ev.wait(delay)
-                self._parked = False
+        """``conn->listen()`` — busy-wait loop with §5.8 adaptive back-off
+        spent parked on the doorbell (see ``_serve_event_loop``)."""
+        _serve_event_loop(self.serve_many, self.serve_once, (self,),
+                          policy or BusyWaitPolicy(), stop or self._stop,
+                          self._event)
 
     def listen_in_thread(self, policy: Optional[BusyWaitPolicy] = None
                          ) -> threading.Thread:
@@ -538,6 +556,16 @@ class Channel:
         t = threading.Thread(target=self.listen, args=(policy,), daemon=True)
         t.start()
         return t
+
+    @classmethod
+    def serve_all(cls, channels: List["Channel"],
+                  policy: Optional[BusyWaitPolicy] = None) -> "ServerLoop":
+        """Serve every ring of every channel in ``channels`` from ONE
+        background thread (a started ``ServerLoop``). The cluster-scale
+        replacement for one ``listen_in_thread`` per channel."""
+        loop = ServerLoop(channels, policy)
+        loop.run_in_thread()
+        return loop
 
     def stop(self) -> None:
         self._stop.set()
@@ -621,6 +649,136 @@ class Channel:
                 heap.owner[hi] == heap.owner[page]:
             hi += 1
         return lo, hi - lo
+
+
+class ServerLoop:
+    """One server thread serving *all* rings of N channels (§4.6 scale-out).
+
+    Extends ``Channel.serve_once``'s per-channel sweep **across channels**:
+    each iteration gathers the head-slot state of every accepted ring of
+    every attached channel into one scratch array and finds the ready rings
+    with a single vectorized NumPy compare. The §5.8 busy-wait budget and
+    the doorbell are likewise shared: attaching a channel rebinds its
+    doorbell event to the loop's, so while the loop is parked a post on
+    ANY attached channel wakes it immediately.
+
+    The flat connection list is cached and invalidated by the channels'
+    ``_conn_version`` counters, so the steady state does no list rebuilds —
+    the sweep is one Python loop of word loads plus ONE compare, exactly
+    like PR 1's single-channel sweep, just wider.
+    """
+
+    def __init__(self, channels: Optional[List[Channel]] = None,
+                 policy: Optional[BusyWaitPolicy] = None):
+        self.channels: List[Channel] = []
+        self.policy = policy or BusyWaitPolicy()
+        self._event = threading.Event()   # the one shared doorbell
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._conns: List[Connection] = []
+        self._versions: List[int] = []
+        self._scratch: Optional[np.ndarray] = None
+        # stats
+        self.n_sweeps = 0
+        self.n_served = 0
+        for ch in (channels or []):
+            self.attach(ch)
+
+    # -- channel set --------------------------------------------------------
+    def attach(self, channel: Channel) -> None:
+        if channel not in self.channels:
+            self.channels.append(channel)
+            channel._event = self._event  # posts now ring the shared bell
+            self._versions = []           # force a conn-list rebuild
+
+    def detach(self, channel: Channel) -> None:
+        if channel in self.channels:
+            self.channels.remove(channel)
+            channel._event = threading.Event()
+            channel._parked = False
+            self._versions = []
+
+    def _refresh_conns(self) -> None:
+        chs = self.channels
+        if len(self._versions) == len(chs) and all(
+                v == ch._conn_version
+                for v, ch in zip(self._versions, chs)):
+            return
+        # snapshot versions BEFORE reading the connection lists: an accept
+        # racing this rebuild then at worst forces one extra rebuild next
+        # sweep, instead of being cached out (and never served) forever
+        self._versions = [ch._conn_version for ch in chs]
+        self._conns = [c for ch in chs for c in ch.connections]
+        n = len(self._conns)
+        if n > 1 and (self._scratch is None or self._scratch.shape[0] < n):
+            self._scratch = np.empty(max(8, 2 * n), dtype=np.uint32)
+
+    # -- sweeps -------------------------------------------------------------
+    def sweep_once(self) -> int:
+        """One vectorized sweep over every ring of every channel; drains
+        each ready ring inline. Returns the number of RPCs served."""
+        self._refresh_conns()
+        conns = self._conns
+        n = len(conns)
+        self.n_sweeps += 1
+        if n == 0:
+            return 0
+        if n == 1:  # common case: skip the gather
+            conn = conns[0]
+            served = conn.channel._drain(conn)
+        else:
+            scratch = self._scratch
+            for i, conn in enumerate(conns):
+                ring = conn.ring
+                scratch[i] = ring.state_of(ring.head % ring.capacity)
+            ready = np.flatnonzero(scratch[:n] == R_REQ)  # ONE compare
+            served = 0
+            for i in ready:
+                conn = conns[i]
+                served += conn.channel._drain(conn)
+        self.n_served += served
+        return served
+
+    def serve_pending(self, max_sweeps: Optional[int] = None) -> int:
+        """Sweep until idle (cf. ``Channel.serve_many``, across channels)."""
+        total = 0
+        sweeps = 0
+        while True:
+            n = self.sweep_once()
+            total += n
+            sweeps += 1
+            if n == 0 or (max_sweeps is not None and sweeps >= max_sweeps):
+                return total
+
+    # -- the event loop ------------------------------------------------------
+    def run(self, stop: Optional[threading.Event] = None) -> None:
+        """Busy-wait loop with the §5.8 back-off spent parked on the shared
+        doorbell (same protocol as ``Channel.listen``, across channels)."""
+        _serve_event_loop(self.serve_pending, self.sweep_once,
+                          self.channels, self.policy, stop or self._stop,
+                          self._event)
+
+    def run_in_thread(self) -> threading.Thread:
+        self._stop.clear()
+        t = threading.Thread(target=self.run, daemon=True,
+                             name="rpcool-serverloop")
+        self._thread = t
+        t.start()
+        return t
+
+    def stop(self, join: bool = True, timeout: float = 2.0) -> None:
+        """Stop the loop; by default join the serving thread (clean
+        shutdown — no leaked listener threads)."""
+        self._stop.set()
+        self._event.set()  # wake a parked loop immediately
+        t = self._thread
+        if join and t is not None and t is not threading.current_thread():
+            t.join(timeout)
+        self._thread = None
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
 
 
 class ServerCtx:

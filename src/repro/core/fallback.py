@@ -75,6 +75,7 @@ class DSMLink:
         # stats
         self.bytes_moved = 0
         self.page_faults = 0
+        self.ownership_misses = 0
         self.msgs = 0
 
     def _wire(self, nbytes: int) -> None:
@@ -124,16 +125,40 @@ class DSMNode:
         self.heap = link.replica[node_id]
         self.page_size = link.page_size
 
-    def _fault_in(self, a: int, nbytes: int) -> None:
+    def _page_range(self, a: int, nbytes: int) -> Tuple[int, int]:
         lin = gaddr.linear(a, self.page_size)
-        p0, p1 = lin // self.page_size, (lin + nbytes - 1) // self.page_size
-        pages = [p for p in range(p0, p1 + 1)
-                 if self.link.owner[p] != self.node_id]
-        if pages:
-            self.link.migrate(pages, to=self.node_id)
+        return lin // self.page_size, (lin + nbytes - 1) // self.page_size
+
+    def check_owned(self, a: int, nbytes: int = 1) -> None:
+        """The load/store permission check: raise ``OwnershipMiss`` on the
+        first page of the extent this node does not currently own — the
+        §5.6 page-fault analogue, surfaced instead of serviced."""
+        p0, p1 = self._page_range(a, nbytes)
+        for p in range(p0, p1 + 1):
+            if self.link.owner[p] != self.node_id:
+                raise OwnershipMiss(p)
+
+    def _fault_in(self, a: int, nbytes: int) -> None:
+        """Fault-and-fetch: a miss is *counted*, then serviced by a bulk
+        migration of the whole unowned extent (one fault, one wire op)."""
+        try:
+            self.check_owned(a, nbytes)
+        except OwnershipMiss:
+            self.link.ownership_misses += 1
+            p0, p1 = self._page_range(a, nbytes)
+            self.link.migrate(
+                [p for p in range(p0, p1 + 1)
+                 if self.link.owner[p] != self.node_id],
+                to=self.node_id)
 
     def read(self, a: int, nbytes: int) -> np.ndarray:
         self._fault_in(a, nbytes)
+        return self.heap.read(a, nbytes)
+
+    def read_owned(self, a: int, nbytes: int) -> np.ndarray:
+        """Strict read: no transparent migration. Touching a page the peer
+        holds mid-flight raises ``OwnershipMiss`` to the caller."""
+        self.check_owned(a, nbytes)
         return self.heap.read(a, nbytes)
 
     def write(self, a: int, data, pid: int = 0) -> None:
@@ -149,8 +174,11 @@ class FallbackConnection:
 
     def __init__(self, num_pages: int = 4096, page_size: int = 4096,
                  link_latency_us: float = 3.0, client_pid: int = 1,
-                 server_pid: int = 2, ring_capacity: int = 64):
-        self.link = DSMLink(num_pages, page_size, link_latency_us)
+                 server_pid: int = 2, ring_capacity: int = 64,
+                 functions: Optional[Dict[int, Callable]] = None,
+                 heap_id: int = 1):
+        self.link = DSMLink(num_pages, page_size, link_latency_us,
+                            heap_id=heap_id)
         self.client = DSMNode(self.link, OWNER_CLIENT)
         self.server = DSMNode(self.link, OWNER_SERVER)
         self.client_pid = client_pid
@@ -163,8 +191,13 @@ class FallbackConnection:
         # replica; its slot record is what ``send_msg`` carries.
         self.ring = DescriptorRing(self.client.heap, ring_capacity)
         self._next_seq = 1
-        self.functions: Dict[int, Callable[["FallbackServerCtx", int], int]] = {}
+        # ``functions`` may be a Channel's live handler table: the router
+        # bridges a cross-pod client to the same server code the CXL path
+        # dispatches to (§5.6 "interfaces are identical").
+        self.functions: Dict[int, Callable[["FallbackServerCtx", int], int]] \
+            = functions if functions is not None else {}
         self.n_calls = 0
+        self.closed = False
 
     # -- client-side API (identical shape to Connection) -----------------
     def create_scope(self, size_bytes: int) -> Scope:
@@ -184,7 +217,13 @@ class FallbackConnection:
 
     def call(self, fn_id: int, arg_addr: int = gaddr.NULL,
              scope: Optional[Scope] = None, sealed: bool = False,
-             sandboxed: bool = False) -> int:
+             sandboxed: bool = False, batch_release: bool = False,
+             **_ignored) -> int:
+        """Mirrors ``Connection.call``; extra CXL-tuning kwargs (timeouts,
+        spin intervals) are accepted and ignored — the fallback call is
+        synchronous request/reply over the link."""
+        if self.closed:
+            raise ChannelError("call on closed connection")
         flags = 0
         seal_idx = 0
         sc_start = sc_count = 0
@@ -221,9 +260,19 @@ class FallbackConnection:
         self.link.send_msg(RING_SLOT_BYTES)
         ret, _state, _status = ring.consume(slot)
         if sealed:
-            self.seals.release(seal_idx, holder=self.client_pid)
+            if batch_release:
+                self.seals.release_batched(seal_idx, holder=self.client_pid)
+            else:
+                self.seals.release(seal_idx, holder=self.client_pid)
         self.n_calls += 1
         return ret
+
+    # the fallback call is already synchronous end-to-end, so the inline
+    # variant is the same entry point (RoutedConnection relies on this)
+    call_inline = call
+
+    def close(self) -> None:
+        self.closed = True
 
     # -- server half (shares the CXL-path descriptor format) --------------
     def _serve(self, slot: int) -> None:
@@ -258,6 +307,7 @@ class FallbackConnection:
         return {
             "bytes_moved": self.link.bytes_moved,
             "page_faults": self.link.page_faults,
+            "ownership_misses": self.link.ownership_misses,
             "msgs": self.link.msgs,
             "calls": self.n_calls,
         }

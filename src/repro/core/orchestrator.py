@@ -6,6 +6,12 @@ hierarchical names, tracks which process has which heap mapped via
 *leases*, enforces per-process shared-memory *quotas*, and garbage-collects
 orphaned heaps when every lease on them has lapsed.
 
+It also keeps the *coherence-domain* registry (§4.6–§4.7): every process
+may be assigned to a named pod; two processes share hardware cache
+coherence iff they are in the same pod. ``ClusterRouter`` consults
+exactly this metadata — nothing else — to decide whether a connection
+gets the CXL ring data plane or the RDMA-style fallback transport.
+
 Time is injected (``clock``) so tests and benchmarks can drive lease expiry
 deterministically; production uses ``time.monotonic``.
 
@@ -50,15 +56,43 @@ class Orchestrator:
         self._quota: Dict[int, int] = {}  # pid -> max mapped bytes
         self._mapped: Dict[int, Set[int]] = {}  # pid -> heap ids
         self._failure_cbs: List[Callable[[int, int], None]] = []
+        # coherence domains: pod name -> member pids (§4.6)
+        self.pods: Dict[str, Set[int]] = {}
+        self._pod_of: Dict[int, str] = {}
         # stats
         self.reclaimed_heaps = 0
         self.expired_leases = 0
 
+    # -- coherence domains ---------------------------------------------------
+    def assign_pod(self, pid: int, pod: str) -> None:
+        """Place ``pid`` in coherence domain ``pod`` (one pod per pid)."""
+        old = self._pod_of.get(pid)
+        if old is not None:
+            self.pods[old].discard(pid)
+        self._pod_of[pid] = pod
+        self.pods.setdefault(pod, set()).add(pid)
+
+    def pod_of(self, pid: int) -> Optional[str]:
+        return self._pod_of.get(pid)
+
+    def same_domain(self, pid_a: int, pid_b: int) -> bool:
+        """True iff the two processes share hardware cache coherence.
+        A pid with no pod assignment is treated as local (single-host
+        deployments never register pods and always get the CXL path)."""
+        pa, pb = self._pod_of.get(pid_a), self._pod_of.get(pid_b)
+        return pa is None or pb is None or pa == pb
+
+    def alloc_heap_id(self) -> int:
+        """Reserve a cluster-unique heap id without creating a heap here
+        (the fallback transport instantiates its own replica pair)."""
+        hid = self._next_heap_id
+        self._next_heap_id += 1
+        return hid
+
     # -- heap lifecycle ------------------------------------------------------
     def create_heap(self, num_pages: int, page_size: int = 4096,
                     name: str = "") -> SharedHeap:
-        hid = self._next_heap_id
-        self._next_heap_id += 1
+        hid = self.alloc_heap_id()
         heap = SharedHeap(hid, num_pages, page_size, name=name)
         self.heaps[hid] = heap
         return heap

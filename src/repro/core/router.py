@@ -1,0 +1,387 @@
+"""Cluster router — transparent CXL/RDMA endpoint routing (§4.6–§4.7).
+
+The paper's cluster story: servers register channels with the orchestrator
+under hierarchical names (``/pod0/kv/shard3``), clients anywhere in the
+datacenter connect *by name*, and RPCool picks the data plane — shared
+CXL memory when the two endpoints sit in the same coherence domain, the
+RDMA-style software-coherent fallback when they do not. The choice is
+made from the orchestrator's pod registry and **nothing else**; the
+programmer-facing call surface is identical either way (§5.6).
+
+``ClusterRouter`` is that composition layer:
+
+* ``register(name, channel)`` publishes a server channel under a
+  hierarchical endpoint name; registering a second channel under the same
+  name appends a *replica* (the Fig. 5 failover target).
+* ``connect(name, pid)`` returns a ``RoutedConnection`` — a thin client
+  handle bound to the endpoint *name*, wired underneath to either a CXL
+  ring ``Connection`` (same pod) or a ``FallbackConnection`` (cross pod,
+  bridged onto the same live handler table).
+* Leases of every pid that registered or connected are auto-renewed at
+  ttl/2 (librpcool's renewal cadence): deterministically via ``pump()``
+  with an injected clock, or by a background thread
+  (``start_auto_renew``) in wall-clock deployments.
+* A lease lapse on an endpoint's serving pid (Fig. 5a server crash)
+  fires the orchestrator failure callback; the router fails the endpoint
+  over to the next replica and every live ``RoutedConnection`` re-wires
+  itself on its next call.
+
+Failover re-wires the *descriptor plane* only: scopes/objects a client
+allocated in the dead server's connection heap are gone with it (the
+paper's leases reclaim that heap) — callers re-create argument scopes
+after a failover, which ``RoutedConnection.create_scope`` does naturally
+since it always allocates against the live target.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from . import addr as gaddr
+from .channel import Channel, Connection
+from .errors import ChannelError
+from .fallback import FallbackConnection
+from .orchestrator import Orchestrator
+from .scope import Scope
+
+
+@dataclass
+class Endpoint:
+    """A hierarchical name bound to a primary channel + replica chain."""
+
+    name: str
+    chain: List[Channel] = field(default_factory=list)
+    active_idx: int = 0
+    generation: int = 0   # bumped on every failover
+    dead: bool = False    # primary and every replica lapsed
+
+    @property
+    def channel(self) -> Channel:
+        return self.chain[self.active_idx]
+
+    @property
+    def replicas(self) -> List[Channel]:
+        return self.chain[1:]
+
+
+class ClusterRouter:
+    """Names → transports: the layer every client connects through."""
+
+    def __init__(self, orch: Orchestrator,
+                 fallback_pages: int = 4096,
+                 fallback_link_latency_us: float = 3.0,
+                 fallback_ring_capacity: int = 64):
+        self.orch = orch
+        self.fallback_pages = fallback_pages
+        self.fallback_link_latency_us = fallback_link_latency_us
+        self.fallback_ring_capacity = fallback_ring_capacity
+        self.endpoints: Dict[str, Endpoint] = {}
+        self._conns: List["RoutedConnection"] = []
+        self._lock = threading.RLock()
+        # lease renewal bookkeeping: pid -> clock() of the last renewal
+        self._renew_last: Dict[int, float] = {}
+        self._renew_stop = threading.Event()
+        self._renew_thread: Optional[threading.Thread] = None
+        # routing stats (the BENCH_cluster.json "mixed routing" counters)
+        self.n_cxl_connects = 0
+        self.n_fallback_connects = 0
+        self.n_failovers = 0
+        orch.on_failure(self._on_lease_lapse)
+
+    # -- registration --------------------------------------------------------
+    def register(self, name: str, channel: Channel,
+                 pod: Optional[str] = None) -> Endpoint:
+        """Publish ``channel`` under hierarchical endpoint ``name``.
+
+        ``pod`` optionally assigns the serving pid's coherence domain at
+        the same time. Registering a second channel under an existing
+        name appends it to the replica chain (Fig. 5 failover target);
+        registering onto a fully-dead endpoint revives it.
+        """
+        if not name.startswith("/"):
+            raise ChannelError(
+                f"endpoint names are hierarchical paths, got {name!r}")
+        if pod is not None:
+            self.orch.assign_pod(channel.server_pid, pod)
+        with self._lock:
+            ep = self.endpoints.get(name)
+            if ep is None:
+                ep = Endpoint(name, [channel])
+                self.endpoints[name] = ep
+            elif channel not in ep.chain:
+                ep.chain.append(channel)
+                if ep.dead:  # revived by a fresh replica
+                    ep.dead = False
+                    ep.active_idx = len(ep.chain) - 1
+                    ep.generation += 1
+            self._track(channel.server_pid)
+        return ep
+
+    def resolve(self, name: str) -> Endpoint:
+        try:
+            return self.endpoints[name]
+        except KeyError:
+            raise ChannelError(f"no endpoint registered as {name!r}")
+
+    def list_endpoints(self, prefix: str = "/") -> List[str]:
+        """Hierarchical listing: every endpoint under ``prefix``."""
+        return sorted(n for n in self.endpoints if n.startswith(prefix))
+
+    # -- connection ---------------------------------------------------------
+    def connect(self, name: str, pid: int, ring_capacity: int = 256,
+                pod: Optional[str] = None) -> "RoutedConnection":
+        """Connect ``pid`` to endpoint ``name``; the transport (CXL ring
+        vs RDMA-style fallback) is chosen purely from the orchestrator's
+        pod metadata for (client pid, endpoint's serving pid)."""
+        if pod is not None:
+            self.orch.assign_pod(pid, pod)
+        ep = self.resolve(name)
+        rc = RoutedConnection(self, ep, pid, ring_capacity)
+        with self._lock:
+            self._conns.append(rc)
+            self._track(pid)
+        return rc
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "cxl_connects": self.n_cxl_connects,
+            "fallback_connects": self.n_fallback_connects,
+            "failovers": self.n_failovers,
+            "endpoints": len(self.endpoints),
+            "live_connections": len(self._conns),
+        }
+
+    # -- lease renewal (librpcool's ttl/2 heartbeat) -------------------------
+    def _track(self, pid: int) -> None:
+        self._renew_last.setdefault(pid, self.orch.clock())
+
+    def mark_crashed(self, pid: int) -> None:
+        """Stop heartbeating for ``pid`` (test/ops hook: the process died;
+        its leases will lapse and Fig. 5 reclamation takes over)."""
+        with self._lock:
+            self._renew_last.pop(pid, None)
+
+    def pump(self) -> int:
+        """One heartbeat step: renew every tracked pid whose last renewal
+        is ≥ ttl/2 old, then run the orchestrator's expiry tick (which
+        fires failure callbacks → failover). Deterministic under an
+        injected clock; the auto-renew thread just calls this. Returns
+        the number of pids renewed."""
+        now = self.orch.clock()
+        half = self.orch.lease_ttl / 2.0
+        renewed = 0
+        with self._lock:
+            due = [pid for pid, last in self._renew_last.items()
+                   if now - last >= half]
+            for pid in due:
+                self.orch.renew(pid)
+                self._renew_last[pid] = now
+                renewed += 1
+        self.orch.tick()
+        return renewed
+
+    def start_auto_renew(self, interval_s: Optional[float] = None) -> None:
+        """Wall-clock deployments: heartbeat from a daemon thread every
+        ttl/2 (or ``interval_s``). Use ``pump()`` directly when driving
+        an injected clock."""
+        if self._renew_thread is not None and self._renew_thread.is_alive():
+            return
+        interval = interval_s if interval_s is not None \
+            else self.orch.lease_ttl / 2.0
+        self._renew_stop.clear()
+
+        def _loop() -> None:
+            while not self._renew_stop.wait(interval):
+                self.pump()
+
+        t = threading.Thread(target=_loop, daemon=True,
+                             name="rpcool-lease-renew")
+        self._renew_thread = t
+        t.start()
+
+    def stop_auto_renew(self, timeout: float = 2.0) -> None:
+        self._renew_stop.set()
+        t = self._renew_thread
+        if t is not None:
+            t.join(timeout)
+        self._renew_thread = None
+
+    # -- failure handling (Fig. 5a) ------------------------------------------
+    def _on_lease_lapse(self, pid: int, heap_id: int) -> None:
+        """Orchestrator failure callback: if the lapsed lease belongs to a
+        pid actively serving an endpoint, fail that endpoint over."""
+        with self._lock:
+            for ep in self.endpoints.values():
+                if not ep.dead and ep.channel.server_pid == pid:
+                    self._fail_over(ep, pid)
+
+    def _fail_over(self, ep: Endpoint, dead_pid: int) -> None:
+        while ep.channel.server_pid == dead_pid:
+            if ep.active_idx + 1 >= len(ep.chain):
+                ep.dead = True
+                break
+            ep.active_idx += 1
+        ep.generation += 1
+        self.n_failovers += 1
+
+    def _drop(self, rc: "RoutedConnection") -> None:
+        with self._lock:
+            if rc in self._conns:
+                self._conns.remove(rc)
+
+
+class RoutedConnection:
+    """A client handle bound to an endpoint *name*, not a server.
+
+    Underneath sits either a CXL ring ``Connection`` or a
+    ``FallbackConnection`` (``.transport`` is ``"cxl"`` / ``"fallback"``,
+    ``.target`` the live object). When the endpoint fails over, the stale
+    target is dropped and the next call transparently re-wires against
+    the replica — re-running the same pod-metadata routing decision, so a
+    replica in another pod correctly comes up on the fallback transport.
+    """
+
+    def __init__(self, router: ClusterRouter, endpoint: Endpoint, pid: int,
+                 ring_capacity: int = 256):
+        self.router = router
+        self.endpoint = endpoint
+        self.client_pid = pid
+        self.ring_capacity = ring_capacity
+        self.target = None          # Connection | FallbackConnection
+        self.transport: Optional[str] = None
+        self.generation = -1
+        self.failovers = 0
+        self.closed = False
+        self._attach()
+
+    # -- wiring -------------------------------------------------------------
+    def _attach(self) -> None:
+        ep = self.endpoint
+        if ep.dead:
+            raise ChannelError(
+                f"endpoint {ep.name!r}: primary and all replicas are gone")
+        ch = ep.channel
+        router = self.router
+        orch = router.orch
+        if orch.same_domain(self.client_pid, ch.server_pid):
+            self.target = ch.accept(self.client_pid, self.ring_capacity)
+            self.transport = "cxl"
+            router.n_cxl_connects += 1
+        else:
+            self.target = FallbackConnection(
+                num_pages=router.fallback_pages,
+                page_size=ch.page_size,
+                link_latency_us=router.fallback_link_latency_us,
+                client_pid=self.client_pid,
+                server_pid=ch.server_pid,
+                ring_capacity=router.fallback_ring_capacity,
+                functions=ch.functions,     # the SAME live handler table
+                heap_id=orch.alloc_heap_id())
+            self.transport = "fallback"
+            router.n_fallback_connects += 1
+        self.generation = ep.generation
+
+    def _ensure(self):
+        if self.closed:
+            raise ChannelError("call on closed RoutedConnection")
+        if self.generation != self.endpoint.generation:
+            old, self.target = self.target, None
+            try:
+                if old is not None:
+                    old.close()
+            except Exception:
+                pass  # the dead server's heap may already be reclaimed
+            self.failovers += 1
+            self._attach()
+        return self.target
+
+    def _can_retry(self, arg_addr: int, kw: dict) -> bool:
+        """A mid-call failover may only be retried transparently when the
+        request references nothing in the dead server's heap: a scope or
+        a non-NULL argument pointer indexes pages of the OLD connection
+        heap, which the lease machinery has reclaimed — re-posting it
+        against the replica would seal/read unrelated pages. Those calls
+        surface the ChannelError so the caller can rebuild its arguments
+        (``create_scope``/``new_bytes`` already target the live wire)."""
+        return kw.get("scope") is None and gaddr.is_null(arg_addr) \
+            and self.generation != self.endpoint.generation
+
+    # -- the identical call surface (§5.6) ------------------------------------
+    def call(self, fn_id: int, arg_addr: int = gaddr.NULL, **kw) -> int:
+        target = self._ensure()
+        try:
+            return target.call(fn_id, arg_addr, **kw)
+        except ChannelError:
+            if self._can_retry(arg_addr, kw):
+                # the endpoint failed over mid-call: retry once, re-wired
+                return self._ensure().call(fn_id, arg_addr, **kw)
+            raise
+
+    def call_inline(self, fn_id: int, arg_addr: int = gaddr.NULL,
+                    **kw) -> int:
+        target = self._ensure()
+        try:
+            return target.call_inline(fn_id, arg_addr, **kw)
+        except ChannelError:
+            if self._can_retry(arg_addr, kw):
+                return self._ensure().call_inline(fn_id, arg_addr, **kw)
+            raise
+
+    def call_async(self, fn_id: int, arg_addr: int = gaddr.NULL,
+                   **kw) -> Tuple[int, int]:
+        target = self._ensure()
+        if self.transport != "cxl":
+            raise ChannelError(
+                "call_async needs the CXL ring; the fallback link is "
+                "synchronous request/reply (§5.6 limitation)")
+        return target.call_async(fn_id, arg_addr, **kw)
+
+    def wait(self, token: Tuple[int, int], **kw) -> int:
+        if self.closed:
+            raise ChannelError("wait on closed RoutedConnection")
+        if self.generation != self.endpoint.generation:
+            # the token names a slot of the DEAD server's ring; waiting it
+            # on the re-wired ring would consume someone else's result
+            raise ChannelError(
+                "endpoint failed over: in-flight call_async token is void")
+        return self.target.wait(token, **kw)
+
+    # -- object construction (always against the live target's heap) --------
+    def create_scope(self, size_bytes: int) -> Scope:
+        return self._ensure().create_scope(size_bytes)
+
+    def new_bytes(self, data: bytes, scope: Optional[Scope] = None) -> int:
+        return self._ensure().new_bytes(data, scope)
+
+    def scope_pool(self, scope_pages: int = 1):
+        target = self._ensure()
+        if self.transport != "cxl":
+            raise ChannelError("scope_pool is a CXL-path amortization")
+        return target.scope_pool(scope_pages)
+
+    @property
+    def heap(self):
+        target = self._ensure()
+        return target.heap if self.transport == "cxl" \
+            else target.client.heap
+
+    @property
+    def seals(self):
+        return self._ensure().seals
+
+    @property
+    def n_calls(self) -> int:
+        return 0 if self.target is None else self.target.n_calls
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        if not self.closed:
+            self.closed = True
+            try:
+                if self.target is not None:
+                    self.target.close()
+            finally:
+                self.target = None
+                self.router._drop(self)

@@ -29,8 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import addr as gaddr
-from ..core.channel import BusyWaitPolicy, RPC, RpcError
+from ..core.channel import BusyWaitPolicy, RPC, RpcError, ServerLoop
 from ..core.orchestrator import Orchestrator
+from ..core.router import ClusterRouter
 from ..models.config import ModelConfig
 from ..models.model import build_model
 from .kv_pool import PagedKVPool, PoolConfig
@@ -59,7 +60,8 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, pool_cfg: PoolConfig,
                  max_active: int = 8, backend: Optional[str] = None,
                  sleep_us: Optional[float] = None,
-                 quota_pages: Optional[int] = None):
+                 quota_pages: Optional[int] = None,
+                 pod: str = "pod0", serve_threaded: bool = False):
         check_paged_compatible(cfg)
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -74,11 +76,25 @@ class ServeEngine:
         self.pool = PagedKVPool(self.orch, cfg, pool_cfg, self.client_pid)
         self.conn_id = self.client_pid  # pool pages owned by the client
 
-        # RPCool channel for the handoff
+        # RPCool handoff endpoint, published through the cluster router:
+        # prefill (client) and decode (server) live in the same pod, so
+        # router.connect resolves to the zero-copy CXL ring transport.
+        self.router = ClusterRouter(self.orch)
         srv = RPC(self.orch, pid=self.server_pid)
-        self.channel = srv.open("decode", heap_pages=256)
+        self.endpoint_name = f"/{pod}/decode"
+        self.channel = srv.open(self.endpoint_name, heap_pages=256)
         self.channel.add(FN_ATTACH, self._attach_rpc)
-        self.conn = RPC(self.orch, pid=self.client_pid).connect("decode")
+        self.router.register(self.endpoint_name, self.channel, pod=pod)
+        self.conn = self.router.connect(self.endpoint_name,
+                                        pid=self.client_pid, pod=pod)
+        assert self.conn.transport == "cxl"  # same pod ⇒ shared memory
+        # optionally serve FN_ATTACH from a dedicated ServerLoop thread
+        # (the cluster deployment shape) instead of inline on the caller
+        self.serve_loop: Optional[ServerLoop] = None
+        if serve_threaded:
+            self.serve_loop = ServerLoop([self.channel],
+                                         BusyWaitPolicy(fixed_sleep_us=5.0))
+            self.serve_loop.run_in_thread()
 
         self.policy = BusyWaitPolicy(fixed_sleep_us=sleep_us)
         self.queue: List[Request] = []
@@ -115,10 +131,15 @@ class ServeEngine:
         self.handoff_bytes += len(payload)   # tiny — ints, not KV bytes
         # 2. seal the KV pages themselves (pool heap) for the flight
         req.seal_idxs = self.pool.seal_seq(req.pages, holder=self.client_pid)
-        # 3. the RPC (scope sealed too, sandboxed server)
+        # 3. the RPC (scope sealed too, sandboxed server); with a serving
+        # thread the call crosses threads, otherwise it runs inline
         try:
-            self.conn.call_inline(FN_ATTACH, arg, scope=scope, sealed=True,
-                                  sandboxed=True)
+            if self.serve_loop is not None:
+                self.conn.call(FN_ATTACH, arg, scope=scope, sealed=True,
+                               sandboxed=True, timeout=30.0)
+            else:
+                self.conn.call_inline(FN_ATTACH, arg, scope=scope,
+                                      sealed=True, sandboxed=True)
         finally:
             scope.destroy()
 
@@ -219,3 +240,9 @@ class ServeEngine:
             if time.monotonic() > deadline:
                 raise TimeoutError("engine did not drain")
             self.step()
+
+    def shutdown(self) -> None:
+        """Stop the serving thread (if any); idempotent."""
+        if self.serve_loop is not None:
+            self.serve_loop.stop()
+            self.serve_loop = None

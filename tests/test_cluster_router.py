@@ -1,0 +1,185 @@
+"""ClusterRouter — hierarchical names, pure-pod-metadata routing, the
+ttl/2 lease heartbeat, and the ServerLoop multi-channel sweep."""
+
+import threading
+
+import pytest
+
+from repro.core import (
+    ChannelError,
+    ClusterRouter,
+    Connection,
+    FallbackConnection,
+    Orchestrator,
+    RPC,
+    ServerLoop,
+    Channel,
+)
+
+FN = 1
+
+
+def _mk(lease_ttl=8.0, clock=None):
+    orch = Orchestrator(clock=clock, lease_ttl=lease_ttl)
+    return orch, ClusterRouter(orch)
+
+
+def _open(orch, pid, name, ret):
+    ch = RPC(orch, pid=pid).open(name, heap_pages=128)
+    ch.add(FN, lambda ctx, a: ret)
+    return ch
+
+
+class TestRouting:
+    def test_same_pod_gets_cxl_ring(self):
+        orch, router = _mk()
+        ch = _open(orch, 1, "/pod0/kv/shard3", 42)
+        router.register("/pod0/kv/shard3", ch, pod="pod0")
+        conn = router.connect("/pod0/kv/shard3", pid=2, pod="pod0")
+        assert conn.transport == "cxl"
+        assert isinstance(conn.target, Connection)
+        assert conn.call_inline(FN) == 42
+        assert router.stats()["cxl_connects"] == 1
+
+    def test_cross_pod_gets_fallback(self):
+        orch, router = _mk()
+        ch = _open(orch, 1, "/pod0/kv/shard3", 42)
+        router.register("/pod0/kv/shard3", ch, pod="pod0")
+        conn = router.connect("/pod0/kv/shard3", pid=2, pod="pod1")
+        assert conn.transport == "fallback"
+        assert isinstance(conn.target, FallbackConnection)
+        # bridged onto the SAME live handler table
+        assert conn.target.functions is ch.functions
+        assert conn.call(FN) == 42
+        assert router.stats()["fallback_connects"] == 1
+
+    def test_decision_is_pure_pod_metadata(self):
+        """Re-assigning only the pod flips the transport — nothing else
+        about the endpoint or client changes."""
+        orch, router = _mk()
+        ch = _open(orch, 1, "/pod0/svc", 7)
+        router.register("/pod0/svc", ch, pod="pod0")
+        a = router.connect("/pod0/svc", pid=5, pod="pod0")
+        assert a.transport == "cxl"
+        orch.assign_pod(5, "pod9")  # same pid, new coherence domain
+        b = router.connect("/pod0/svc", pid=5)
+        assert b.transport == "fallback"
+        # unassigned pids are treated as local (single-host default)
+        c = router.connect("/pod0/svc", pid=6)
+        assert c.transport == "cxl"
+
+    def test_hierarchical_names(self):
+        orch, router = _mk()
+        for i, (pid, name) in enumerate([(1, "/pod0/kv/shard0"),
+                                         (2, "/pod0/kv/shard1"),
+                                         (3, "/pod0/web/front"),
+                                         (4, "/pod1/kv/shard0")]):
+            router.register(name, _open(orch, pid, name, i))
+        assert router.list_endpoints("/pod0/kv/") == [
+            "/pod0/kv/shard0", "/pod0/kv/shard1"]
+        assert len(router.list_endpoints("/pod0/")) == 3
+        assert len(router.list_endpoints()) == 4
+        with pytest.raises(ChannelError, match="no endpoint"):
+            router.connect("/pod0/kv/shard9", pid=9)
+        with pytest.raises(ChannelError, match="hierarchical"):
+            router.register("flat-name", _open(orch, 9, "flat", 0))
+
+    def test_register_same_name_appends_replica(self):
+        orch, router = _mk()
+        p = _open(orch, 1, "/pod0/svc", 1)
+        r = _open(orch, 2, "/pod0/svc-r1", 2)
+        ep = router.register("/pod0/svc", p)
+        assert router.register("/pod0/svc", r) is ep
+        assert ep.channel is p and ep.replicas == [r]
+
+
+class TestLeaseHeartbeat:
+    def test_autorenew_at_half_ttl(self):
+        clock = [0.0]
+        orch, router = _mk(lease_ttl=8.0, clock=lambda: clock[0])
+        ch = _open(orch, 1, "/pod0/svc", 0)
+        router.register("/pod0/svc", ch, pod="pod0")
+        conn = router.connect("/pod0/svc", pid=2, pod="pod0")
+        heap_id = conn.target.heap.heap_id
+
+        clock[0] = 3.0          # < ttl/2: nothing is due yet
+        assert router.pump() == 0
+        clock[0] = 4.0          # == ttl/2: both pids renew
+        assert router.pump() == 2
+        # renewed leases now expire at 4+8=12, keep stepping at ttl/2
+        for t in (8.0, 12.0, 16.0, 20.0):
+            clock[0] = t
+            assert router.pump() == 2
+        assert heap_id in orch.heaps
+        assert orch.expired_leases == 0
+
+        # stop the heartbeat: one full ttl later everything lapses
+        router.mark_crashed(1)
+        router.mark_crashed(2)
+        clock[0] = 40.0
+        router.pump()
+        assert heap_id not in orch.heaps
+        assert orch.reclaimed_heaps >= 1
+
+    def test_autorenew_thread_wallclock(self):
+        """The background heartbeat (real clock): leases survive several
+        ttls of wall time without any manual pumping."""
+        orch, router = _mk(lease_ttl=0.2)
+        ch = _open(orch, 1, "/pod0/svc", 0)
+        router.register("/pod0/svc", ch, pod="pod0")
+        conn = router.connect("/pod0/svc", pid=2, pod="pod0")
+        heap_id = conn.target.heap.heap_id
+        router.start_auto_renew()
+        try:
+            ev = threading.Event()
+            ev.wait(0.8)  # 4× the ttl
+            orch.tick()
+            assert heap_id in orch.heaps
+        finally:
+            router.stop_auto_renew()
+        assert router._renew_thread is None
+
+
+class TestServerLoopMultiChannel:
+    def test_one_loop_many_channels_one_compare(self):
+        orch, router = _mk()
+        chans = [_open(orch, 10 + i, f"/pod0/s{i}", i) for i in range(3)]
+        for i, ch in enumerate(chans):
+            router.register(f"/pod0/s{i}", ch, pod="pod0")
+        conns = [router.connect(f"/pod0/s{i}", pid=20 + i, pod="pod0")
+                 for i in range(3)]
+        loop = ServerLoop(chans)
+        # posts on all three channels drain in ONE sweep
+        toks = [c.call_async(FN) for c in conns]
+        assert loop.sweep_once() == 3
+        assert [c.wait(t) for c, t in zip(conns, toks)] == [0, 1, 2]
+        assert loop.sweep_once() == 0
+        assert loop.n_served == 3
+
+    def test_serve_all_threaded_and_doorbell(self):
+        orch, router = _mk()
+        chans = [_open(orch, 10 + i, f"/pod0/t{i}", 100 + i)
+                 for i in range(2)]
+        for i, ch in enumerate(chans):
+            router.register(f"/pod0/t{i}", ch, pod="pod0")
+        loop = Channel.serve_all(chans)
+        try:
+            # attached channels share ONE doorbell event
+            assert chans[0]._event is chans[1]._event is loop._event
+            c0 = router.connect("/pod0/t0", pid=20, pod="pod0")
+            c1 = router.connect("/pod0/t1", pid=21, pod="pod0")
+            for _ in range(25):
+                assert c0.call(FN, timeout=10.0) == 100
+                assert c1.call(FN, timeout=10.0) == 101
+        finally:
+            loop.stop()
+        assert not loop.running
+
+    def test_detach_restores_private_doorbell(self):
+        orch, router = _mk()
+        ch = _open(orch, 1, "/pod0/d", 5)
+        loop = ServerLoop([ch])
+        assert ch._event is loop._event
+        loop.detach(ch)
+        assert ch._event is not loop._event
+        assert loop.channels == []

@@ -1,0 +1,205 @@
+"""Failure injection — Fig. 5 scenarios (a) and (b) as asserted tests.
+
+All clocks are injected, so lease expiry is driven deterministically:
+``router.pump()`` is librpcool's ttl/2 heartbeat + the orchestrator's
+expiry tick, called by hand at chosen timestamps.
+
+(a) server crash: the serving pid stops heartbeating mid-call; its lease
+    lapses, connected clients get the failure callback, the in-flight
+    call still completes (the heap survives on the client's lease), and
+    the router fails the endpoint over to a replica — the client's next
+    call transparently lands there.
+(b) client hoarding: a quota'd client holding connections to dead-ish
+    servers must return a heap before it can map a new one.
+"""
+
+import threading
+
+import pytest
+
+from repro.core import (
+    ChannelError,
+    ClusterRouter,
+    Orchestrator,
+    QuotaExceeded,
+    RPC,
+    ServerLoop,
+)
+
+FN = 1
+
+
+def _mk_cluster(lease_ttl=6.0):
+    clock = [0.0]
+    orch = Orchestrator(clock=lambda: clock[0], lease_ttl=lease_ttl)
+    router = ClusterRouter(orch)
+    return clock, orch, router
+
+
+class TestServerCrashFailover:
+    def test_lease_expiry_mid_call_then_failover(self):
+        clock, orch, router = _mk_cluster(lease_ttl=6.0)
+        primary = RPC(orch, pid=10).open("/pod0/svc", heap_pages=128)
+        replica = RPC(orch, pid=11).open("/pod0/svc-r1", heap_pages=128)
+        entered = threading.Event()
+        release = threading.Event()
+
+        def slow_fn(ctx, a):
+            entered.set()
+            assert release.wait(30.0)
+            return 100
+
+        primary.add(FN, slow_fn)
+        replica.add(FN, lambda ctx, a: 200)
+        router.register("/pod0/svc", primary, pod="pod0")
+        router.register("/pod0/svc", replica, pod="pod0")
+
+        fails = []
+        orch.on_failure(lambda pid, hid: fails.append((pid, hid)))
+
+        conn = router.connect("/pod0/svc", pid=20, pod="pod0")
+        heap_id = conn.target.heap.heap_id
+
+        loop = ServerLoop([primary, replica])
+        loop.run_in_thread()
+        try:
+            result = []
+            caller = threading.Thread(
+                target=lambda: result.append(conn.call(FN, timeout=30.0)),
+                daemon=True)
+            caller.start()
+            assert entered.wait(10.0)
+
+            # mid-call: the server "crashes" (stops heartbeating) and the
+            # clock sails past its lease expiry
+            router.mark_crashed(10)
+            for t in (3.0, 6.0, 9.0, 13.0):
+                clock[0] = t
+                router.pump()
+
+            # Fig. 5a: clients are notified of the server's lapse …
+            assert (10, heap_id) in fails
+            # … but the heap survives while the client's lease is live,
+            # so the in-flight call completes normally
+            assert heap_id in orch.heaps
+            release.set()
+            caller.join(10.0)
+            assert result == [100]
+
+            # the endpoint failed over: the next call transparently lands
+            # on the replica, through a freshly-wired connection
+            assert conn.call(FN, timeout=30.0) == 200
+            assert conn.failovers == 1
+            assert conn.target.channel is replica
+            assert router.n_failovers == 1
+        finally:
+            release.set()
+            loop.stop()
+
+    def test_endpoint_dies_when_every_replica_lapses(self):
+        clock, orch, router = _mk_cluster(lease_ttl=4.0)
+        primary = RPC(orch, pid=10).open("/pod0/kv", heap_pages=128)
+        replica = RPC(orch, pid=11).open("/pod0/kv-r1", heap_pages=128)
+        primary.add(FN, lambda ctx, a: 1)
+        replica.add(FN, lambda ctx, a: 2)
+        router.register("/pod0/kv", primary, pod="pod0")
+        router.register("/pod0/kv", replica, pod="pod0")
+        conn = router.connect("/pod0/kv", pid=20, pod="pod0")
+        assert conn.call_inline(FN) == 1
+
+        # crash the primary; the first re-wired call lands on the replica
+        # (which only now acquires leases of its own)
+        router.mark_crashed(10)
+        for t in (2.0, 4.0, 6.0, 9.0):
+            clock[0] = t
+            router.pump()
+        assert conn.call_inline(FN) == 2
+
+        # now the replica crashes too: the whole endpoint is gone
+        router.mark_crashed(11)
+        for t in (12.0, 15.0, 18.0, 21.0):
+            clock[0] = t
+            router.pump()
+        with pytest.raises(ChannelError, match="replicas are gone"):
+            conn.call_inline(FN)
+        with pytest.raises(ChannelError, match="replicas are gone"):
+            router.connect("/pod0/kv", pid=21, pod="pod0")
+
+        # a fresh registration revives the name (re-deployment)
+        revived = RPC(orch, pid=12).open("/pod0/kv-r2", heap_pages=128)
+        revived.add(FN, lambda ctx, a: 3)
+        router.register("/pod0/kv", revived, pod="pod0")
+        assert router.connect("/pod0/kv", pid=22,
+                              pod="pod0").call_inline(FN) == 3
+
+    def test_inflight_async_token_void_after_failover(self):
+        """A call_async token names a slot of the dead server's ring;
+        waiting it on the re-wired replica ring would consume someone
+        else's result — it must be refused, not re-targeted."""
+        clock, orch, router = _mk_cluster(lease_ttl=4.0)
+        primary = RPC(orch, pid=10).open("/pod0/tok", heap_pages=128)
+        replica = RPC(orch, pid=11).open("/pod0/tok-r1", heap_pages=128)
+        primary.add(FN, lambda ctx, a: 1)
+        replica.add(FN, lambda ctx, a: 2)
+        router.register("/pod0/tok", primary, pod="pod0")
+        router.register("/pod0/tok", replica, pod="pod0")
+        conn = router.connect("/pod0/tok", pid=20, pod="pod0")
+
+        tok = conn.call_async(FN)  # posted to the primary, never served
+        router.mark_crashed(10)
+        for t in (2.0, 4.0, 6.0, 9.0):
+            clock[0] = t
+            router.pump()
+        with pytest.raises(ChannelError, match="token is void"):
+            conn.wait(tok)
+        # fresh calls transparently land on the replica
+        assert conn.call_inline(FN) == 2
+
+    def test_cross_pod_replica_comes_up_on_fallback(self):
+        """Failover re-runs the routing decision: a replica living in a
+        different pod is reached over the fallback transport."""
+        clock, orch, router = _mk_cluster(lease_ttl=4.0)
+        primary = RPC(orch, pid=10).open("/pod0/mix", heap_pages=128)
+        replica = RPC(orch, pid=11).open("/pod1/mix-r1", heap_pages=128)
+        primary.add(FN, lambda ctx, a: 10)
+        replica.add(FN, lambda ctx, a: 20)
+        router.register("/pod0/mix", primary, pod="pod0")
+        router.register("/pod0/mix", replica, pod="pod1")
+        conn = router.connect("/pod0/mix", pid=20, pod="pod0")
+        assert conn.transport == "cxl" and conn.call_inline(FN) == 10
+
+        router.mark_crashed(10)
+        for t in (2.0, 4.0, 6.0, 9.0):
+            clock[0] = t
+            router.pump()
+        assert conn.call(FN) == 20
+        assert conn.transport == "fallback"
+
+
+class TestQuotaForcedReturn:
+    def test_quota_forces_heap_return_with_live_connections(self):
+        """Fig. 5b: a client at its shared-memory quota must return a
+        mapped heap before the orchestrator lets it map another."""
+        _clock, orch, router = _mk_cluster()
+        chans = []
+        for i in range(3):
+            ch = RPC(orch, pid=10 + i).open(f"/pod0/s{i}", heap_pages=64)
+            ch.add(FN, lambda ctx, a, i=i: i)
+            router.register(f"/pod0/s{i}", ch, pod="pod0")
+            chans.append(ch)
+
+        heap_bytes = 64 * 4096
+        orch.set_quota(30, 2 * heap_bytes)
+        c0 = router.connect("/pod0/s0", pid=30, pod="pod0")
+        c1 = router.connect("/pod0/s1", pid=30, pod="pod0")
+        assert c0.call_inline(FN) == 0 and c1.call_inline(FN) == 1
+
+        with pytest.raises(QuotaExceeded):
+            router.connect("/pod0/s2", pid=30, pod="pod0")
+        # existing connections keep working while over-quota is refused
+        assert c0.call_inline(FN) == 0
+
+        c0.close()  # return a heap …
+        c2 = router.connect("/pod0/s2", pid=30, pod="pod0")
+        assert c2.call_inline(FN) == 2  # … and the new mapping fits
+        assert orch.mapped_bytes(30) == 2 * heap_bytes

@@ -1,0 +1,126 @@
+"""Fallback (RDMA/DCN) transport — §5.6 ownership protocol accounting.
+
+* the ownership bitmap flips client→server→client across a call round
+  trip, with fault/miss counters advancing exactly once per flip;
+* ``OwnershipMiss`` surfaces when a node *strictly* touches a page the
+  peer holds mid-flight (the un-serviced page-fault analogue);
+* byte accounting: the fallback moves the descriptor twice plus every
+  faulted page over the wire, while the same payload on the CXL path
+  moves zero wire bytes — the paper's whole point, as an exact equality.
+"""
+
+import pytest
+
+from repro.core import (
+    ClusterRouter,
+    FallbackConnection,
+    Orchestrator,
+    OwnershipMiss,
+    RPC,
+)
+from repro.core import addr as ga
+from repro.core.channel import RING_SLOT_BYTES
+from repro.core.fallback import OWNER_CLIENT, OWNER_SERVER
+
+FN = 1
+
+
+def _mk(**kw):
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("link_latency_us", 0.0)
+    return FallbackConnection(**kw)
+
+
+class TestOwnershipProtocol:
+    def test_bitmap_flips_and_counters_across_roundtrip(self):
+        fb = _mk()
+        sc = fb.create_scope(4096)
+        a = fb.new_bytes(b"q" * 100, sc)
+        page = ga.unpack(a).page
+        assert fb.link.owner[page] == OWNER_CLIENT
+
+        fb.add(FN, lambda ctx, arg: len(bytes(ctx.read(arg, 100))))
+        f0, m0 = fb.link.page_faults, fb.link.ownership_misses
+        assert fb.call(FN, a, scope=sc) == 100
+        # serving faulted the page over: ownership flipped, one fault,
+        # one miss
+        assert fb.link.owner[page] == OWNER_SERVER
+        assert fb.link.page_faults == f0 + 1
+        assert fb.link.ownership_misses == m0 + 1
+
+        # client touches it back: flips again, one more fault+miss
+        fb.client.write(a, b"r" * 4, pid=fb.client_pid)
+        assert fb.link.owner[page] == OWNER_CLIENT
+        assert fb.link.page_faults == f0 + 2
+        assert fb.link.ownership_misses == m0 + 2
+
+        # an owned re-access is free — no phantom faults
+        fb.client.read(a, 4)
+        assert fb.link.page_faults == f0 + 2
+
+    def test_ownership_miss_touching_page_mid_flight(self):
+        """While the server processes the argument (and owns its page),
+        the sender's strict access must raise OwnershipMiss instead of
+        silently reading its stale replica."""
+        fb = _mk()
+        sc = fb.create_scope(4096)
+        a = fb.new_bytes(b"payload!", sc)
+        page = ga.unpack(a).page
+        observed = {}
+
+        def fn(ctx, arg):
+            ctx.read(arg, 8)  # server faults the page in → server owns it
+            with pytest.raises(OwnershipMiss) as e:
+                fb.client.read_owned(arg, 8)  # sender touches mid-flight
+            observed["missed_page"] = e.value.page
+            return 7
+
+        fb.add(FN, fn)
+        assert fb.call(FN, a, scope=sc) == 7
+        assert observed["missed_page"] == page
+        # still true after the call until the client faults it back
+        with pytest.raises(OwnershipMiss):
+            fb.client.read_owned(a, 8)
+        assert bytes(fb.client.read(a, 8)) == b"payload!"  # migrates back
+
+
+class TestByteAccounting:
+    def test_fallback_bytes_exact_vs_cxl_zero_copy(self):
+        payload = b"z" * 3000  # fits one page
+        page_size = 4096
+
+        # --- fallback arm: exact wire accounting ------------------------
+        fb = _mk(page_size=page_size)
+        sc = fb.create_scope(4096)
+        a = fb.new_bytes(payload, sc)
+        fb.add(FN, lambda ctx, arg: len(bytes(ctx.read(arg, len(payload)))))
+        b0, msgs0 = fb.link.bytes_moved, fb.link.msgs
+        assert fb.call(FN, a, scope=sc) == len(payload)
+        moved = fb.link.bytes_moved - b0
+        # descriptor out + completion back + ONE faulted page, exactly
+        assert fb.link.msgs - msgs0 == 2
+        assert moved == 2 * RING_SLOT_BYTES + page_size
+        assert moved > len(payload)  # the copy the CXL path never does
+
+        # --- CXL arm: the identical payload+handler, zero wire bytes ----
+        orch = Orchestrator()
+        router = ClusterRouter(orch)
+        ch = RPC(orch, pid=1).open("/pod0/acct", heap_pages=64)
+        seen = {}
+
+        def fn(ctx, arg):
+            seen["data"] = bytes(ctx.read(arg, len(payload)))
+            return len(payload)
+
+        ch.add(FN, fn)
+        router.register("/pod0/acct", ch, pod="pod0")
+        conn = router.connect("/pod0/acct", pid=2, pod="pod0")
+        assert conn.transport == "cxl"
+        cs = conn.create_scope(4096)
+        ca = conn.new_bytes(payload, cs)
+        assert conn.call_inline(FN, ca, scope=cs) == len(payload)
+        # the handler saw the bytes through the SAME shared heap object —
+        # there is no link, no replica, and nothing to account
+        assert seen["data"] == payload
+        assert conn.target.heap is ch.connections[0].heap
+        assert not hasattr(conn.target, "link")
