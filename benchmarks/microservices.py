@@ -1,10 +1,14 @@
 """Microservice chain latency vs offered load — paper Figs. 12/13.
 
 A DeathStarBench-shaped request: nginx → compose → (user, media, text)
-→ storage, each hop an RPCool call passing the same in-heap document
-(zero copy down the whole chain). Median + P99 latency under a range of
-offered loads, and the Fig. 13 busy-wait sweep (0 / 5 / 150 µs fixed
-sleep vs §5.8 adaptive).
+→ storage, each hop passing the same in-heap document (zero copy down
+the whole chain). The mesh speaks the typed data plane: the client
+``invoke``s a Python document, the marshaller materializes it once in
+the channel heap, and every service hop receives the SAME lazy
+``ArgView`` — ``_text`` dereferences only the ``text`` field, nothing
+is ever deserialized. Median + P99 latency under a range of offered
+loads, and the Fig. 13 busy-wait sweep (0 / 5 / 150 µs fixed sleep vs
+§5.8 adaptive).
 
 Like the paper's finding, most of a request's time goes to the "database"
 stage (simulated work), so RPCool's win shows at the tails and in peak
@@ -20,7 +24,6 @@ import numpy as np
 
 from repro.core import BusyWaitPolicy, ClusterRouter, Orchestrator, RPC, \
     ServerLoop
-from repro.core import containers as C
 
 FN_COMPOSE, FN_USER, FN_MEDIA, FN_TEXT, FN_STORE = 1, 2, 3, 4, 5
 DB_WORK_US = 30.0  # simulated storage work (the paper's 66% critical path)
@@ -41,7 +44,6 @@ class SocialNet:
         self.router.register("/pod0/svc", ch, pod="pod0")
         self.conn = self.router.connect("/pod0/svc", pid=2, pod="pod0")
         assert self.conn.transport == "cxl"
-        self.scope = self.conn.create_scope(1 << 14)
         # threaded: requests are served by one ServerLoop thread instead
         # of inline on the caller (the multi-client deployment shape)
         self.loop: Optional[ServerLoop] = None
@@ -50,43 +52,45 @@ class SocialNet:
             self.loop.run_in_thread()
         self.store: Dict[int, int] = {}
         self._n = 0
-        ch.add(FN_COMPOSE, self._compose)
-        ch.add(FN_USER, lambda ctx, a: 1)
-        ch.add(FN_MEDIA, lambda ctx, a: 1)
-        ch.add(FN_TEXT, self._text)
-        ch.add(FN_STORE, self._store)
+        ch.add_typed(FN_COMPOSE, self._compose)
+        # the downstream services: called with the same document view the
+        # compose hop received (pointer passing down the chain)
+        self._svc = {
+            FN_USER: lambda ctx, doc: 1,
+            FN_MEDIA: lambda ctx, doc: 1,
+            FN_TEXT: self._text,
+            FN_STORE: self._store,
+        }
         self.sleep_us = sleep_us
 
     # the compose service fans out to 3 services then stores — all hops
-    # pass the SAME document pointer
-    def _compose(self, ctx, arg):
+    # pass the SAME document view (one marshalled graph, zero re-copies)
+    def _compose(self, ctx, args):
+        doc = args[0]
         for fn in (FN_USER, FN_MEDIA, FN_TEXT):
-            self.ch.functions[fn](ctx, arg)
-        return self.ch.functions[FN_STORE](ctx, arg)
+            self._svc[fn](ctx, doc)
+        return self._svc[FN_STORE](ctx, doc)
 
-    def _text(self, ctx, arg):
-        doc = C.to_python(ctx, (C.T_MAP, arg))
+    def _text(self, ctx, doc):
+        # lazy: only the text field is ever dereferenced
         return len(doc["text"])
 
-    def _store(self, ctx, arg):
+    def _store(self, ctx, doc):
         t0 = time.perf_counter()
         while (time.perf_counter() - t0) * 1e6 < DB_WORK_US:
             pass  # the database + nginx share of the critical path
         self._n += 1
-        self.store[self._n] = arg
+        self.store[self._n] = doc["ts"]
         return self._n
 
     def compose_post(self) -> float:
-        self.scope.reset()
-        root = C.build_doc(self.scope, {
+        doc = {
             "user": "u42", "text": "hello world " * 4,
             "media": [1, 2, 3], "ts": 12345,
-        }, pid=2)
+        }
         t0 = time.perf_counter()
-        if self.loop is not None:
-            self.conn.call(FN_COMPOSE, root, scope=self.scope, timeout=30.0)
-        else:
-            self.conn.call_inline(FN_COMPOSE, root, scope=self.scope)
+        self.conn.invoke(FN_COMPOSE, doc, timeout=30.0,
+                         inline=self.loop is None)
         return (time.perf_counter() - t0) * 1e6
 
     def shutdown(self) -> None:

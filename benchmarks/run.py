@@ -15,6 +15,11 @@ threads through ONE ServerLoop thread (aggregate throughput + the
 8-vs-1 scaling ratio, gate ≥ 4×) plus the router's same-pod/cross-pod
 connection counts.
 
+The marshal suite writes ``BENCH_marshal.json``: typed pointer-passing
+vs the serializing baseline over the IDENTICAL descriptor ring (the
+Fig. 11 / Table 1a comparison, gate ≥ 2× RTT), plus the cross-pod
+by-value route and the routing decision counters.
+
 Usage:
     python -m benchmarks.run                     # all suites
     python -m benchmarks.run --suite noop        # one suite
@@ -32,6 +37,34 @@ import traceback
 
 NOOP_JSON_DEFAULT = "BENCH_noop.json"
 CLUSTER_JSON_DEFAULT = "BENCH_cluster.json"
+MARSHAL_JSON_DEFAULT = "BENCH_marshal.json"
+
+
+def _write_marshal_json(rows, path: str, iters: int) -> None:
+    by_name = {name: us for name, us, _ in rows}
+    derived = {name: d for name, us, d in rows}
+    speedup = by_name.get("marshal_speedup", 0.0)
+    doc = {
+        "suite": "marshal (Fig. 11 / Table 1a typed data plane)",
+        "iters": iters,
+        "unit": "us_per_call",
+        "rows": by_name,
+        "derived": derived,
+        "speedup_pointer_vs_serialized": speedup,
+        "speedup_vs_build": by_name.get("marshal_speedup_vs_build", 0.0),
+        "target_speedup": 2.0,
+        "meets_target": speedup >= 2.0,
+        "routing": {
+            "cxl_connects": int(by_name.get(
+                "marshal_routing_cxl_connects", 0)),
+            "fallback_connects": int(by_name.get(
+                "marshal_routing_fallback_connects", 0)),
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}: pointer vs serialized {speedup:.2f}x "
+          f"(target 2.0x) routing={doc['routing']}", file=sys.stderr)
 
 
 def _write_cluster_json(rows, path: str, iters: int) -> None:
@@ -108,8 +141,8 @@ def main(argv=None) -> None:
                          "(default BENCH_noop.json)")
     args = ap.parse_args(argv)
 
-    from . import cluster, cooldb, kv_handoff, microservices, noop_rtt, \
-        op_latency, ycsb_kv
+    from . import cluster, cooldb, kv_handoff, marshal, microservices, \
+        noop_rtt, op_latency, ycsb_kv
 
     def noop_bench():
         return noop_rtt.bench(n=args.iters, thr_iters=args.thr_iters)
@@ -119,9 +152,14 @@ def main(argv=None) -> None:
         # 20µs client poll cadence; 3000 is plenty for a stable ratio
         return cluster.bench(iters=min(args.iters, 3000))
 
+    def marshal_bench():
+        # the serialized arm is slow by design; 4000 pairs is plenty
+        return marshal.bench(n=min(args.iters, 4000))
+
     suites = [
         ("noop", "noop_rtt (Table 1a)", noop_bench),
         ("op", "op_latency (Table 1b)", op_latency.bench),
+        ("marshal", "marshal (Fig. 11 typed data plane)", marshal_bench),
         ("cooldb", "cooldb (Fig. 11)", cooldb.bench),
         ("ycsb", "ycsb_kv (Figs. 9/10)", ycsb_kv.bench),
         ("micro", "microservices (Figs. 12/13)", microservices.bench),
@@ -156,6 +194,11 @@ def main(argv=None) -> None:
                                  and args.json != NOOP_JSON_DEFAULT) \
                 else CLUSTER_JSON_DEFAULT
             _write_cluster_json(rows, path, min(args.iters, 3000))
+        elif key == "marshal":
+            path = args.json if (args.suite == "marshal"
+                                 and args.json != NOOP_JSON_DEFAULT) \
+                else MARSHAL_JSON_DEFAULT
+            _write_marshal_json(rows, path, min(args.iters, 4000))
     if failures:
         sys.exit(1)
 

@@ -1,20 +1,22 @@
 """Cluster routing walkthrough — §4.6/§4.7 end to end.
 
-Three acts:
+Three acts, all through ONE typed call surface (``conn.invoke``):
 
 1. a server registers ``/pod0/kv/shard3`` with the cluster router and a
    same-pod client connects by name → the router hands out the CXL ring
-   transport (shared memory, zero copies);
+   transport and invoke passes a pointer to a marshalled graph (zero
+   serialization);
 2. a client in another pod connects to the SAME name → the router wires
-   it over the RDMA-style fallback transport (pages migrate on fault),
-   bridged onto the same live handler table;
+   it over the RDMA-style fallback transport and the SAME invoke
+   transparently serializes the arguments by value (§5.6 copy
+   semantics) — no caller change;
 3. the serving process "crashes" (stops heartbeating), its lease lapses,
-   and the client's next call transparently lands on a replica.
+   and the client's next invoke transparently re-marshals against a
+   replica (plain-value arguments reference nothing in the dead heap,
+   so the retry is safe — something the raw pointer API cannot do).
 
 Run:  PYTHONPATH=src python examples/cluster_demo.py
 """
-
-import struct
 
 from repro.core import Channel, ClusterRouter, Orchestrator, RPC, ServerLoop
 
@@ -22,9 +24,8 @@ FN_GET = 1
 
 
 def handler_for(shard: str):
-    def get(ctx, arg):
-        key = bytes(ctx.read(arg, 8))
-        return struct.unpack("<Q", key)[0] * 2  # the "lookup"
+    def get(ctx, args):
+        return args[0] * 2  # the "lookup"
     get.shard = shard
     return get
 
@@ -36,36 +37,35 @@ def main() -> None:
     router = ClusterRouter(orch)
 
     primary = RPC(orch, pid=10).open("/pod0/kv/shard3", heap_pages=128)
-    primary.add(FN_GET, handler_for("primary"))
+    primary.add_typed(FN_GET, handler_for("primary"))
     router.register("/pod0/kv/shard3", primary, pod="pod0")
 
     replica = RPC(orch, pid=11).open("/pod1/kv/shard3-r1", heap_pages=128)
-    replica.add(FN_GET, handler_for("replica"))
+    replica.add_typed(FN_GET, handler_for("replica"))
     router.register("/pod0/kv/shard3", replica, pod="pod1")
 
     loop = Channel.serve_all([primary, replica])
 
     local = router.connect("/pod0/kv/shard3", pid=20, pod="pod0")
-    key = local.new_bytes(struct.pack("<Q", 21))
     print(f"[pod0 client] transport={local.transport:9s} "
-          f"get(21) -> {local.call(FN_GET, key, timeout=10.0)}")
+          f"invoke get(21) -> {local.invoke(FN_GET, 21, timeout=10.0)} "
+          f"(pointer-passing, {local.marshal_bytes}B marshalled)")
 
-    # -- act 2: cross-pod client → fallback transport ---------------------
+    # -- act 2: cross-pod client, SAME surface → fallback + copy ----------
     remote = router.connect("/pod0/kv/shard3", pid=30, pod="pod7")
-    rkey = remote.new_bytes(struct.pack("<Q", 21))
     print(f"[pod7 client] transport={remote.transport:9s} "
-          f"get(21) -> {remote.call(FN_GET, rkey)} "
-          f"(wire stats: {remote.target.stats()})")
+          f"invoke get(21) -> {remote.invoke(FN_GET, 21)} "
+          f"(serialized by value; wire stats: {remote.target.stats()})")
 
     # -- act 3: primary crashes → lease lapse → failover ------------------
     router.mark_crashed(10)             # pid 10 stops heartbeating
     for t in (2.5, 5.0, 7.5, 10.0):     # librpcool pumps at ttl/2
         clock[0] = t
         router.pump()
-    key2 = local.new_bytes(struct.pack("<Q", 50))  # re-wired under the hood
-    print(f"[pod0 client] after crash: transport={local.transport} "
-          f"failovers={local.failovers} get(50) -> "
-          f"{local.call(FN_GET, key2)}")
+    # plain-value invoke re-marshals against the replica automatically
+    print(f"[pod0 client] after crash: invoke get(50) -> "
+          f"{local.invoke(FN_GET, 50, timeout=10.0)} "
+          f"transport={local.transport} failovers={local.failovers}")
     print(f"[router] {router.stats()}")
 
     loop.stop()

@@ -13,7 +13,11 @@ Layers (bottom-up):
   fallback    two-node software-coherent DSM (RDMA/DCN analogue)
   router      ClusterRouter: hierarchical endpoint names → CXL or
               fallback transport, lease heartbeats, replica failover
-  serial      serializing baseline transport (gRPC analogue, benchmarks)
+  serial      serializing wire format (gRPC analogue: the fallback
+              route's by-value payload + the Fig. 11 baseline)
+  marshal     typed zero-copy data plane: conn.invoke(fn, *values),
+              ArgView handler views, GraphRef pointer reuse,
+              per-route pointer-vs-copy marshalling
 """
 
 from . import addr
@@ -44,12 +48,16 @@ from .channel import (
     RpcError,
     ServerCtx,
     ServerLoop,
+    F_BYVAL,
     F_SANDBOXED,
     F_SEALED,
+    F_TYPED,
 )
 from .fallback import DSMLink, DSMNode, FallbackConnection
 from .router import ClusterRouter, Endpoint, RoutedConnection
 from . import containers, serial
+from . import marshal
+from .marshal import ArgView, GraphRef, build_graph
 
 __all__ = [
     "addr",
@@ -63,8 +71,10 @@ __all__ = [
     "Lease", "Orchestrator",
     "BusyWaitPolicy", "Channel", "Connection", "DescriptorRing",
     "RING_DTYPE", "RPC", "RpcError",
-    "ServerCtx", "ServerLoop", "F_SANDBOXED", "F_SEALED",
+    "ServerCtx", "ServerLoop", "F_BYVAL", "F_SANDBOXED", "F_SEALED",
+    "F_TYPED",
     "DSMLink", "DSMNode", "FallbackConnection",
     "ClusterRouter", "Endpoint", "RoutedConnection",
-    "containers", "serial",
+    "containers", "serial", "marshal",
+    "ArgView", "GraphRef", "build_graph",
 ]

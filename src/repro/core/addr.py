@@ -82,19 +82,34 @@ def offset_of(addr: int) -> int:
     return addr & ((1 << OFF_BITS) - 1)
 
 
+_PAGE_MASK = MAX_PAGES - 1
+_OFF_MASK = MAX_OFFSET - 1
+_HEAP_SHIFT = PAGE_BITS + OFF_BITS
+_HEAP_FIELD = ((1 << HEAP_BITS) - 1) << _HEAP_SHIFT
+
+
 def add(addr: int, nbytes: int, page_size: int) -> int:
     """Pointer arithmetic within a heap: advance ``addr`` by ``nbytes``.
 
     Carries across page boundaries assuming pages are contiguous in the
     heap's linear byte space (true for scopes, which are contiguous page
-    ranges — §5.1).
+    ranges — §5.1). Pure shift/mask arithmetic — this sits under every
+    container dereference on the RPC hot path, so no tuple unpacking.
     """
-    a = unpack(addr)
-    linear = a.page * page_size + a.offset + nbytes
-    return pack(a.heap_id, linear // page_size, linear % page_size)
+    if addr == NULL:
+        raise ValueError("dereference of NULL GlobalAddr")
+    lin = ((addr >> OFF_BITS) & _PAGE_MASK) * page_size \
+        + (addr & _OFF_MASK) + nbytes
+    page = lin // page_size
+    if page >= MAX_PAGES:   # never carry into the heap_id bits
+        raise ValueError(f"address arithmetic past heap end: page {page}")
+    return (addr & _HEAP_FIELD) \
+        | (page << OFF_BITS) | (lin % page_size)
 
 
 def linear(addr: int, page_size: int) -> int:
     """Byte offset of ``addr`` within its heap's linear byte space."""
-    a = unpack(addr)
-    return a.page * page_size + a.offset
+    if addr == NULL:
+        raise ValueError("dereference of NULL GlobalAddr")
+    return ((addr >> OFF_BITS) & _PAGE_MASK) * page_size \
+        + (addr & _OFF_MASK)

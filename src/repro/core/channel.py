@@ -39,8 +39,21 @@ from .errors import ChannelError, SandboxViolation, SealViolation
 from .heap import SharedHeap
 from .orchestrator import Orchestrator
 from .sandbox import SandboxManager
-from .scope import Scope, ScopePool, create_scope
+from .scope import Scope, ScopePool, create_scope, implicit_scope
 from .seal import SealManager
+
+# Lazily-bound marshalling module (core/marshal.py imports this module for
+# the flag constants, so the import direction must stay marshal → channel;
+# the first invoke binds it here and the hot path pays one global load).
+_marshal = None
+
+
+def _get_marshal():
+    global _marshal
+    if _marshal is None:
+        from . import marshal
+        _marshal = marshal
+    return _marshal
 
 # Request-ring slot layout: seq, fn, flags, arg, seal_idx, ret, state,
 # status, scope_start, scope_count (the receiver sandboxes exactly the
@@ -78,6 +91,8 @@ R_ERR = 3
 # flags
 F_SEALED = 1 << 0
 F_SANDBOXED = 1 << 1
+F_TYPED = 1 << 2     # arg is a typed marshalled request (core/marshal.py)
+F_BYVAL = 1 << 3     # typed request travelled by value (serial-encoded)
 
 # RPC status codes
 OK = 0
@@ -258,8 +273,18 @@ class Connection:
         self.closed = False
         self.last_seal_idx = 0  # seal idx of the most recent sealed call
         self._ctx: Optional["ServerCtx"] = ServerCtx(channel, self, 0)
+        # typed data plane (core/marshal.py): pooled argument scopes,
+        # server reply scopes recycled through the client, and the
+        # implicit-allocation scope backing scope-less new_bytes calls.
+        self._marshal_pool: Optional[ScopePool] = None
+        self._reply_free: List[Scope] = []
+        self._reply_live: Dict[int, Scope] = {}
+        self._implicit: Optional[Scope] = None
+        self._implicit_scopes: List[Scope] = []
         # round-trip stats
         self.n_calls = 0
+        self.n_invokes = 0
+        self.marshal_bytes = 0
 
     # -- client-side object construction --------------------------------
     def create_scope(self, size_bytes: int) -> Scope:
@@ -274,9 +299,16 @@ class Connection:
         return self._scope_pool
 
     def new_bytes(self, data: bytes, scope: Optional[Scope] = None) -> int:
-        """``conn->new_<T>(...)`` — allocate an object in the heap/scope."""
+        """``conn->new_<T>(...)`` — allocate an object in the heap/scope.
+
+        With no explicit scope the object goes into a connection-owned
+        implicit scope that is tracked and returned to the heap when the
+        connection closes (historically each scope-less call leaked an
+        untracked single-use scope). Consecutive scope-less allocations
+        share the current implicit scope until it fills.
+        """
         if scope is None:
-            scope = self.create_scope(len(data) or 1)
+            scope = implicit_scope(self, len(data), self.heap.page_size)
         return scope.write_bytes(data, pid=self.client_pid)
 
     # -- the RPC itself ---------------------------------------------------
@@ -290,6 +322,7 @@ class Connection:
         batch_release: bool = False,
         timeout: float = 10.0,
         spin_sleep_us: float = 0.0,
+        flags_extra: int = 0,
     ) -> int:
         """``conn->call<T>(fn_id, arg)``. Returns the ret GlobalAddr/value.
 
@@ -297,8 +330,11 @@ class Connection:
         ``sandboxed``: ask the server to process inside a sandbox (§4.4).
         ``batch_release``: defer the seal release to the scope-pool batch
         (§5.3) rather than releasing on return.
+        ``flags_extra``: extra descriptor flag bits (the typed data plane
+        sets F_TYPED/F_BYVAL here — see core/marshal.py).
         """
-        slot, seal_idx = self._post(fn_id, arg_addr, scope, sealed, sandboxed)
+        slot, seal_idx = self._post(fn_id, arg_addr, scope, sealed, sandboxed,
+                                    flags_extra)
         # spin for the response (client side of §5.8); time.sleep(0) is the
         # CPython GIL-yield stand-in for a hardware pause-loop. The poll is
         # one u64 word load (state|status) with everything hoisted.
@@ -316,25 +352,49 @@ class Connection:
     def call_inline(self, fn_id: int, arg_addr: int = gaddr.NULL,
                     scope: Optional[Scope] = None, sealed: bool = False,
                     sandboxed: bool = False,
-                    batch_release: bool = False) -> int:
+                    batch_release: bool = False,
+                    flags_extra: int = 0) -> int:
         """Same data path as ``call`` but the server half runs on this
         thread immediately after the descriptor is posted — the two-core
         zero-scheduling-noise configuration used for RTT microbenchmarks
         (a dedicated server core picks the descriptor up instantly; CPython
         threads would add GIL handoff latency that the hardware does not
         have)."""
-        slot, seal_idx = self._post(fn_id, arg_addr, scope, sealed, sandboxed)
+        slot, seal_idx = self._post(fn_id, arg_addr, scope, sealed, sandboxed,
+                                    flags_extra)
         self.channel._process(self, slot)
         self.ring.head += 1
         return self._complete(slot, sealed, seal_idx, batch_release)
 
     def call_async(self, fn_id: int, arg_addr: int = gaddr.NULL,
                    scope: Optional[Scope] = None, sealed: bool = False,
-                   sandboxed: bool = False) -> Tuple[int, int]:
+                   sandboxed: bool = False,
+                   flags_extra: int = 0) -> Tuple[int, int]:
         """Post without waiting; returns a (slot, seal_idx) token. Multiple
         RPCs may be in flight on one connection (per-thread MPK permissions
         make this safe in the paper, §5.2)."""
-        return self._post(fn_id, arg_addr, scope, sealed, sandboxed)
+        return self._post(fn_id, arg_addr, scope, sealed, sandboxed,
+                          flags_extra)
+
+    # -- typed data plane (core/marshal.py) -------------------------------
+    def invoke(self, fn_id: int, *args, **kw):
+        """``conn->invoke(fn_id, *values)`` — typed zero-copy RPC.
+
+        Arguments (arbitrary nested Python values, or pre-built
+        ``GraphRef`` container graphs) are materialized ONCE as a
+        ``containers`` graph in a pooled scope and passed as a single
+        GlobalAddr — no serialization. The reply is marshalled back the
+        same way. Handlers must be registered with ``Channel.add_typed``.
+        Keywords: ``sealed``, ``sandboxed``, ``batch_release``,
+        ``timeout``, ``inline`` (use the two-core inline data path).
+        """
+        return _get_marshal().invoke_cxl(self, fn_id, args, **kw)
+
+    def invoke_serialized(self, fn_id: int, *args, **kw):
+        """The Fig. 11 serializing baseline over the SAME descriptor ring:
+        args are ``serial.encode``d, copied into a scope, decoded by the
+        receiver — everything the typed pointer path avoids."""
+        return _get_marshal().invoke_serialized(self, fn_id, args, **kw)
 
     def wait(self, token: Tuple[int, int], sealed: bool = False,
              batch_release: bool = False, timeout: float = 10.0) -> int:
@@ -351,7 +411,8 @@ class Connection:
         return self._complete(slot, sealed, seal_idx, batch_release)
 
     # -- data-path halves ---------------------------------------------------
-    def _post(self, fn_id, arg_addr, scope, sealed, sandboxed):
+    def _post(self, fn_id, arg_addr, scope, sealed, sandboxed,
+              flags_extra=0):
         if self.closed:
             raise ChannelError("call on closed connection")
         ring = self.ring
@@ -375,14 +436,15 @@ class Connection:
             if sealed:
                 raise SealViolation("sealed call requires a scope (§4.5)")
             self._next_seq = seq + 1
-            ring.arr[slot] = (seq, fn_id, F_SANDBOXED if sandboxed else 0,
+            ring.arr[slot] = (seq, fn_id,
+                              (F_SANDBOXED if sandboxed else 0) | flags_extra,
                               arg_addr, 0, 0, R_REQ, OK, 0, 0)
             ch = self.channel
             if ch._parked:  # doorbell only when the server is waiting on it
                 ch._event.set()
             return slot, 0
 
-        flags = 0
+        flags = flags_extra
         seal_idx = 0
         sc_start, sc_count = scope.page_range()
         if sealed:
@@ -418,6 +480,25 @@ class Connection:
     def close(self) -> None:
         if not self.closed:
             self.closed = True
+            # return every connection-owned page range to the heap: the
+            # implicit new_bytes scopes, the marshal scope pool, and any
+            # reply scopes the server handed back through this client.
+            for s in self._implicit_scopes:
+                if s.live:
+                    s.destroy()
+            self._implicit_scopes.clear()
+            self._implicit = None
+            if self._marshal_pool is not None:
+                self._marshal_pool.drain()
+                self._marshal_pool = None
+            for s in self._reply_free:
+                if s.live:
+                    s.destroy()
+            self._reply_free.clear()
+            for s in self._reply_live.values():
+                if s.live:
+                    s.destroy()
+            self._reply_live.clear()
             self.channel._drop_connection(self)
 
 
@@ -448,6 +529,15 @@ class Channel:
     # -- server API (Fig. 6 left) -------------------------------------------
     def add(self, fn_id: int, fn: Callable[["ServerCtx", int], int]) -> None:
         self.functions[fn_id] = fn
+
+    def add_typed(self, fn_id: int, fn) -> None:
+        """Register a typed handler: ``fn(ctx, args)`` receives an
+        ``ArgView`` (lazy, bounds-checked when sandboxed) over the
+        marshalled argument tuple and returns a Python value, which is
+        marshalled back to the caller. Serves both the pointer-passing
+        (``invoke``) and the serialized (``invoke_serialized`` /
+        fallback-route) forms of the request."""
+        self.functions[fn_id] = _get_marshal().typed_handler(fn)
 
     def accept(self, client_pid: int, ring_capacity: int = 256) -> Connection:
         """Create the connection object for a connecting client."""
@@ -796,6 +886,18 @@ class ServerCtx:
         if self.sandbox is not None:
             return self.sandbox.read(a, nbytes)
         return self.conn.heap.read(a, nbytes)
+
+    def write(self, a: int, data) -> None:
+        """Handler-facing store: sandbox-confined exactly like ``read``
+        — a sandboxed handler must not write outside its pages (§4.4)."""
+        if self.sandbox is not None:
+            self.sandbox.check(a, SharedHeap._payload_nbytes(data))
+        self.conn.heap.write(a, data)
+
+    def _daemon_write(self, a: int, data) -> None:
+        """Privileged runtime store (reply marshalling): librpcool writes
+        the reply outside the handler's sandbox, after SB_END semantics."""
+        self.conn.heap.write(a, data)
 
     def heap(self) -> SharedHeap:
         return self.conn.heap

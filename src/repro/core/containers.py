@@ -12,8 +12,12 @@ Encoding (all little-endian, 8-byte aligned):
     - T_VEC             payload = GlobalAddr of a Vec node
     - T_MAP             payload = GlobalAddr of a Map node
 * String node           = ``[u32 T_STR][u32 len][len bytes]``
+* Bytes node            = ``[u32 T_BYTES][u32 len][len bytes]``
 * Vec node              = ``[u32 T_VEC][u32 len][len × Value]``
 * Map node (assoc list) = ``[u32 T_MAP][u32 n][n × (key GlobalAddr, Value)]``
+  — a map entry's Value uses its pad word to cache the key's byte
+  length, so ``map_get`` scans the entry table with ONE read and only
+  dereferences length-matching keys (a hash-free point lookup).
 
 Every pointer is a ``GlobalAddr`` — valid in any process that maps the heap
 (§4.1 globally-unique address spaces). Reads go through a *reader*: either
@@ -41,6 +45,7 @@ T_F64 = 2
 T_STR = 3
 T_VEC = 4
 T_MAP = 5
+T_BYTES = 6   # raw byte string — same node layout as T_STR
 
 _VALUE_FMT = "<IIQ"
 VALUE_SIZE = struct.calcsize(_VALUE_FMT)  # 16
@@ -77,6 +82,10 @@ def build_value(scope: Scope, obj: Any, pid: int = 0,
     if isinstance(obj, bool):
         return (T_I64, int(obj))
     if isinstance(obj, int):
+        # the value domain is signed 64-bit, same as the serial wire
+        # format — both routes must reject the same inputs (§5.6)
+        if not -(1 << 63) <= obj < (1 << 63):
+            raise TypeError(f"int out of i64 range: {obj}")
         return (T_I64, obj & 0xFFFFFFFFFFFFFFFF)
     if isinstance(obj, float):
         return (T_F64, _pack_f64(obj))
@@ -85,6 +94,11 @@ def build_value(scope: Scope, obj: Any, pid: int = 0,
         a = scope.alloc(HDR_SIZE + len(raw))
         w(a, struct.pack(_HDR_FMT, T_STR, len(raw)) + raw)
         return (T_STR, a)
+    if isinstance(obj, (bytes, bytearray)):
+        raw = bytes(obj)
+        a = scope.alloc(HDR_SIZE + len(raw))
+        w(a, struct.pack(_HDR_FMT, T_BYTES, len(raw)) + raw)
+        return (T_BYTES, a)
     if isinstance(obj, (list, tuple)):
         vals = [build_value(scope, v, pid, fast) for v in obj]
         a = scope.alloc(HDR_SIZE + len(vals) * VALUE_SIZE)
@@ -96,17 +110,37 @@ def build_value(scope: Scope, obj: Any, pid: int = 0,
     if isinstance(obj, dict):
         entries = []
         for k, v in obj.items():
-            kt, ka = build_value(scope, str(k), pid, fast)
+            raw = str(k).encode()   # encode ONCE: node bytes + length
+            ka = scope.alloc(HDR_SIZE + len(raw))
+            w(ka, struct.pack(_HDR_FMT, T_STR, len(raw)) + raw)
             vt, vp = build_value(scope, v, pid, fast)
-            entries.append((ka, vt, vp))
+            entries.append((ka, vt, len(raw), vp))
         a = scope.alloc(HDR_SIZE + len(entries) * _ENTRY_SIZE)
         body = struct.pack(_HDR_FMT, T_MAP, len(entries)) + b"".join(
-            struct.pack("<Q", ka) + struct.pack(_VALUE_FMT, vt, 0, vp)
-            for ka, vt, vp in entries
+            struct.pack("<Q", ka) + struct.pack(_VALUE_FMT, vt, klen, vp)
+            for ka, vt, klen, vp in entries
         )
         w(a, body)
         return (T_MAP, a)
     raise TypeError(f"unsupported object type {type(obj)}")
+
+
+def build_vec(scope: Scope, vals: List[Value], pid: int = 0,
+              fast: bool = False) -> Value:
+    """Assemble a Vec node from *pre-built* Values.
+
+    The marshaller uses this for the RPC argument tuple: each argument is
+    built (or pointer-embedded, for same-heap graphs) independently, then
+    the tuple node references them — no re-serialization of the elements.
+    """
+    w = scope.heap.write_fast if fast else \
+        (lambda a, d: scope.heap.write(a, d, pid=pid))
+    a = scope.alloc(HDR_SIZE + len(vals) * VALUE_SIZE)
+    body = struct.pack(_HDR_FMT, T_VEC, len(vals)) + b"".join(
+        struct.pack(_VALUE_FMT, t, 0, p) for t, p in vals
+    )
+    w(a, body)
+    return (T_VEC, a)
 
 
 def build_doc(scope: Scope, obj: dict, pid: int = 0,
@@ -177,6 +211,13 @@ def read_str(reader, a: int) -> str:
     return bytes(reader.read(gaddr.add(a, HDR_SIZE, _psize(reader)), n)).decode()
 
 
+def read_bytes(reader, a: int) -> bytes:
+    tag, n = _read_hdr(reader, a)
+    if tag != T_BYTES:
+        raise InvalidPointer(f"expected bytes node at {a:#x}, tag={tag}")
+    return bytes(reader.read(gaddr.add(a, HDR_SIZE, _psize(reader)), n))
+
+
 def vec_len(reader, a: int) -> int:
     tag, n = _read_hdr(reader, a)
     if tag != T_VEC:
@@ -194,40 +235,54 @@ def vec_get(reader, a: int, i: int) -> Value:
     return (t, p)
 
 
+def map_len(reader, a: int) -> int:
+    tag, n = _read_hdr(reader, a)
+    if tag != T_MAP:
+        raise InvalidPointer(f"expected map node at {a:#x}, tag={tag}")
+    return n
+
+
 def map_items(reader, a: int) -> Iterator[Tuple[str, Value]]:
     tag, n = _read_hdr(reader, a)
     if tag != T_MAP:
         raise InvalidPointer(f"expected map node at {a:#x}, tag={tag}")
     ps = _psize(reader)
+    # the whole entry table in one checked read, then in-memory scan
+    table = bytes(reader.read(gaddr.add(a, HDR_SIZE, ps), n * _ENTRY_SIZE))
     for i in range(n):
-        off = HDR_SIZE + i * _ENTRY_SIZE
-        raw = bytes(reader.read(gaddr.add(a, off, ps), _ENTRY_SIZE))
-        ka = struct.unpack("<Q", raw[:8])[0]
-        vt, _, vp = struct.unpack(_VALUE_FMT, raw[8:])
+        off = i * _ENTRY_SIZE
+        ka = struct.unpack_from("<Q", table, off)[0]
+        vt, _, vp = struct.unpack_from(_VALUE_FMT, table, off + 8)
         yield read_str(reader, ka), (vt, vp)
 
 
 def map_get(reader, a: int, key: str) -> Union[Value, None]:
-    """Path lookup: compares raw key bytes (length first) — only the
-    matching key is ever decoded, the rest are length-skipped."""
+    """Point lookup: ONE read of the entry table, then a length-filtered
+    scan — only keys whose cached byte length matches are dereferenced
+    and compared, the rest are skipped without touching their nodes."""
     tag, n = _read_hdr(reader, a)
     if tag != T_MAP:
         raise InvalidPointer(f"expected map node at {a:#x}, tag={tag}")
     ps = _psize(reader)
     kb = key.encode()
     want_len = len(kb)
+    table = bytes(reader.read(gaddr.add(a, HDR_SIZE, ps), n * _ENTRY_SIZE))
     for i in range(n):
-        off = HDR_SIZE + i * _ENTRY_SIZE
-        raw = bytes(reader.read(gaddr.add(a, off, ps), _ENTRY_SIZE))
-        ka = struct.unpack_from("<Q", raw)[0]
-        ktag, klen = _read_hdr(reader, ka)
-        if ktag != T_STR:
-            raise InvalidPointer(f"map key at {ka:#x} is not a string")
+        off = i * _ENTRY_SIZE
+        vt, klen, vp = struct.unpack_from(_VALUE_FMT, table, off + 8)
         if klen != want_len:
             continue
-        if bytes(reader.read(gaddr.add(ka, HDR_SIZE, ps), klen)) != kb:
+        ka = struct.unpack_from("<Q", table, off)[0]
+        # ONE read covers the key node's header AND bytes; the header is
+        # validated against the entry's cached length so a corrupt or
+        # hostile map surfaces InvalidPointer instead of a silent miss
+        raw = bytes(reader.read(ka, HDR_SIZE + klen))
+        ktag, klen2 = struct.unpack_from(_HDR_FMT, raw)
+        if ktag != T_STR or klen2 != klen:
+            raise InvalidPointer(f"map key at {ka:#x} is not a string "
+                                 f"of the cached length")
+        if raw[HDR_SIZE:] != kb:
             continue
-        vt, _, vp = struct.unpack_from(_VALUE_FMT, raw, 8)
         return (vt, vp)
     return None
 
@@ -242,6 +297,8 @@ def to_python(reader, value: Value) -> Any:
         return _unpack_f64(p)
     if tag == T_STR:
         return read_str(reader, p)
+    if tag == T_BYTES:
+        return read_bytes(reader, p)
     if tag == T_VEC:
         return [to_python(reader, vec_get(reader, p, i))
                 for i in range(vec_len(reader, p))]

@@ -49,7 +49,7 @@ from .channel import (
 from .errors import ChannelError, OwnershipMiss, SandboxViolation, SealViolation
 from .heap import SharedHeap
 from .sandbox import SandboxManager
-from .scope import Scope, create_scope
+from .scope import Scope, create_scope, implicit_scope
 from .seal import SealManager
 
 OWNER_CLIENT = 0
@@ -196,7 +196,15 @@ class FallbackConnection:
         # dispatches to (§5.6 "interfaces are identical").
         self.functions: Dict[int, Callable[["FallbackServerCtx", int], int]] \
             = functions if functions is not None else {}
+        # typed data plane bookkeeping (core/marshal.py) + tracked
+        # implicit scopes (scope-less new_bytes must not leak pages)
+        self._reply_free: List[Scope] = []
+        self._reply_live: Dict[int, Scope] = {}
+        self._implicit: Optional[Scope] = None
+        self._implicit_scopes: List[Scope] = []
         self.n_calls = 0
+        self.n_invokes = 0
+        self.marshal_bytes = 0
         self.closed = False
 
     # -- client-side API (identical shape to Connection) -----------------
@@ -206,7 +214,9 @@ class FallbackConnection:
 
     def new_bytes(self, data: bytes, scope: Optional[Scope] = None) -> int:
         if scope is None:
-            scope = self.create_scope(len(data) or 1)
+            # same contract as Connection.new_bytes: implicit allocations
+            # share a tracked connection-owned scope, freed on close
+            scope = implicit_scope(self, len(data), self.link.page_size)
         # client writes fault pages back to the client side if needed
         a = scope.alloc(len(data))
         self.client.write(a, data, pid=self.client_pid)
@@ -215,16 +225,30 @@ class FallbackConnection:
     def add(self, fn_id: int, fn) -> None:
         self.functions[fn_id] = fn
 
+    def add_typed(self, fn_id: int, fn) -> None:
+        """Typed handler registration — same contract as
+        ``Channel.add_typed`` (§5.6: identical programmer-facing API)."""
+        from .marshal import typed_handler
+        self.functions[fn_id] = typed_handler(fn)
+
+    def invoke(self, fn_id: int, *args, **kw):
+        """Typed invoke: the SAME surface as ``Connection.invoke``, but
+        the arguments travel by value over the link — ``serial.encode``
+        into one blob, a single copy across, decode on the far side (the
+        §5.6 copy semantics instead of pointer passing)."""
+        from .marshal import invoke_fallback
+        return invoke_fallback(self, fn_id, args, **kw)
+
     def call(self, fn_id: int, arg_addr: int = gaddr.NULL,
              scope: Optional[Scope] = None, sealed: bool = False,
              sandboxed: bool = False, batch_release: bool = False,
-             **_ignored) -> int:
+             flags_extra: int = 0, **_ignored) -> int:
         """Mirrors ``Connection.call``; extra CXL-tuning kwargs (timeouts,
         spin intervals) are accepted and ignored — the fallback call is
         synchronous request/reply over the link."""
         if self.closed:
             raise ChannelError("call on closed connection")
-        flags = 0
+        flags = flags_extra
         seal_idx = 0
         sc_start = sc_count = 0
         if scope is not None:
@@ -272,7 +296,18 @@ class FallbackConnection:
     call_inline = call
 
     def close(self) -> None:
-        self.closed = True
+        if not self.closed:
+            self.closed = True
+            for s in self._implicit_scopes:
+                if s.live:
+                    s.destroy()
+            self._implicit_scopes.clear()
+            self._implicit = None
+            for s in (*self._reply_free, *self._reply_live.values()):
+                if s.live:
+                    s.destroy()
+            self._reply_free.clear()
+            self._reply_live.clear()
 
     # -- server half (shares the CXL-path descriptor format) --------------
     def _serve(self, slot: int) -> None:
@@ -284,7 +319,7 @@ class FallbackConnection:
         if fn is None:
             raise ChannelError(f"no function {fn_id}")
 
-        ctx = FallbackServerCtx(self)
+        ctx = FallbackServerCtx(self, flags)
         if flags & F_SEALED and not self.seals.is_sealed(seal_idx):
             raise SealViolation("receiver found region unsealed")
         try:
@@ -316,14 +351,30 @@ class FallbackConnection:
 class FallbackServerCtx:
     """Server view: reads fault pages across the link (§5.6)."""
 
-    def __init__(self, conn: FallbackConnection):
+    def __init__(self, conn: FallbackConnection, flags: int = 0):
         self.conn = conn
+        self.flags = flags
         self.sandbox = None
 
     def read(self, a: int, nbytes: int):
         if self.sandbox is not None:
             self.sandbox.check(a, nbytes)
         return self.conn.server.read(a, nbytes)
+
+    def write(self, a: int, data) -> None:
+        """Handler-facing store: sandbox-confined like ``read`` (§4.4)."""
+        if self.sandbox is not None:
+            self.sandbox.check(a, SharedHeap._payload_nbytes(data))
+        self.conn.server.write(a, data, pid=self.conn.server_pid)
+
+    def _daemon_write(self, a: int, data) -> None:
+        """Privileged runtime store (reply marshalling): faults pages
+        over. Reply scopes are carved from the link's single allocator
+        (the client replica) mid-request, so the allocator metadata is
+        propagated first — the same tiny control message the request
+        path sends (§5.6)."""
+        self.conn.link.sync_meta(to=OWNER_SERVER)
+        self.conn.server.write(a, data, pid=self.conn.server_pid)
 
     def heap(self) -> SharedHeap:
         return self.conn.server.heap

@@ -142,6 +142,11 @@ class SharedHeap:
             self.owner[start : start + count] = 0
             self.perm[start : start + count] = 0
             self.seal_holder[start : start + count] = 0
+            # freeing drops the MPK key assignment (unmap ⇒ no key): a
+            # cached sandbox binding over these pages is void from here —
+            # SandboxManager._still_valid sees the cleared key even if
+            # the range is immediately reallocated to someone else
+            self.key[start : start + count] = 0
             self._insert_free(Extent(start, count))
 
     def _insert_free(self, ext: Extent) -> None:

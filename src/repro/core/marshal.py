@@ -1,0 +1,604 @@
+"""Typed zero-copy argument marshalling — the unified data plane.
+
+The paper's headline claim is serialization *avoidance* (§4.1, Fig. 11):
+an RPC passes a pointer to a pointer-rich structure living in shared
+memory; seals and sandboxes restore the isolation that copying used to
+provide. This module is the layer that makes that the *default calling
+convention* instead of a bytes-in/int-out one:
+
+* ``conn.invoke(fn_id, *values)`` — arguments (arbitrary nested Python
+  values, or pre-built ``GraphRef`` container graphs) are materialized
+  ONCE as a ``containers`` graph inside a pooled scope, optionally
+  sealed, and passed as a single GlobalAddr. Zero serialization.
+* On a ``FallbackConnection`` the *same surface* transparently routes by
+  value: ``serial.encode`` → one blob copy over the link → decode (the
+  §5.6 ``copy_from`` semantics). ``RoutedConnection`` therefore picks
+  pointer-passing vs copy per route with no caller change.
+* Handler side, ``Channel.add_typed`` handlers receive an ``ArgView``:
+  a lazy view that chases pointers on demand. Under a sandboxed request
+  every dereference goes through a bounds-checked reader (the §4.3
+  wild-pointer attack path surfaces as ``SandboxViolation`` → E_SANDBOX,
+  never as server memory disclosure); replies are marshalled back into a
+  recycled reply scope the same way.
+* ``invoke_serialized`` runs the gRPC-analogue baseline over the SAME
+  descriptor ring, so benchmarks/marshal.py measures exactly the
+  serialize+copy+deserialize delta of Fig. 11 / Table 1a.
+
+Reply protocol: the ring's 64-bit ``ret`` word carries the GlobalAddr of
+either a 16-byte boxed Value (pointer route) or a ``[u32 len][bytes]``
+blob (by-value route). Reply scopes are popped from a per-connection
+freelist by the server and pushed back by the client after decoding —
+the steady state allocates nothing.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from . import addr as gaddr
+from . import containers as C
+from . import serial
+from .channel import Connection, F_BYVAL, F_SANDBOXED, F_SEALED, F_TYPED
+from .errors import AllocationError, ChannelError, InvalidPointer, \
+    SandboxViolation
+from .scope import Scope, ScopePool, create_scope
+
+# Pooled argument scopes: 4 pages (16 KiB with the default page size)
+# covers typical pointer-rich documents; bigger argument sets fall back
+# to a dedicated right-sized scope.
+MARSHAL_SCOPE_PAGES = 4
+REPLY_SCOPE_PAGES = 1
+_REPLY_FREELIST_MAX = 4
+# replies the client never consumed (timeouts, decode errors) are capped:
+# past this many live reply scopes the oldest is reclaimed — invoke is
+# synchronous, so anything that old is garbage, not in flight
+_REPLY_LIVE_MAX = 64
+
+_BOX = struct.Struct("<IIQ")      # boxed reply Value (= containers layout)
+_BLOB_HDR = struct.Struct("<I")   # length prefix of a by-value payload
+
+_MISSING = object()
+
+
+class GraphRef:
+    """A pre-built argument-tuple graph resident in a connection's heap.
+
+    ``build_graph(conn, *values)`` materializes the argument tuple once;
+    passing the ref to ``invoke`` afterwards is pure pointer passing —
+    zero per-call marshalling, the paper's steady-state hot path. On a
+    copy-route connection (no shared heap) the ref simply retains the
+    plain values and each invoke serializes them, keeping the surface
+    identical across routes.
+    """
+
+    __slots__ = ("scope", "value", "plain")
+
+    def __init__(self, scope: Optional[Scope], value: Optional[C.Value],
+                 plain: Optional[list] = None):
+        self.scope = scope
+        self.value = value
+        self.plain = plain
+
+    @property
+    def root(self) -> int:
+        return self.value[1]
+
+    @property
+    def heap(self):
+        return None if self.scope is None else self.scope.heap
+
+    def to_python(self) -> list:
+        """The argument tuple as plain values (§5.6 copy-out half)."""
+        if self.scope is None:
+            return list(self.plain)
+        return C.to_python(self.scope.heap, self.value)
+
+    def destroy(self) -> None:
+        if self.scope is not None and self.scope.live:
+            self.scope.destroy()
+
+
+class ArgView:
+    """Uniform lazy view over typed RPC arguments.
+
+    Graph-backed (pointer route): every access walks the ``containers``
+    graph through a reader — the connection heap when trusted, a
+    bounds-checked sandbox reader when the request is sandboxed. Nothing
+    is deserialized; the handler touches only what it dereferences.
+
+    Python-backed (by-value route): wraps the already-decoded object so
+    the same handler code serves both routes.
+
+    Scalars (ints, floats, strings, None) unwrap to Python values on
+    access; Vec/Map nodes come back as nested ``ArgView``s.
+    """
+
+    __slots__ = ("_reader", "_val", "_py")
+
+    def __init__(self, reader, val: Optional[C.Value], py=_MISSING):
+        self._reader = reader
+        self._val = val
+        self._py = py
+
+    # -- constructors ----------------------------------------------------
+    @classmethod
+    def graph(cls, reader, value: C.Value) -> "ArgView":
+        return cls(reader, value)
+
+    @classmethod
+    def python(cls, obj) -> "ArgView":
+        return cls(None, None, obj)
+
+    # -- wrapping --------------------------------------------------------
+    def _wrap(self, v: C.Value):
+        tag, p = v
+        if tag == C.T_NULL:
+            return None
+        if tag == C.T_I64:
+            return p - (1 << 64) if p >= (1 << 63) else p
+        if tag == C.T_F64:
+            return C._unpack_f64(p)
+        if tag == C.T_STR:
+            return C.read_str(self._reader, p)
+        if tag == C.T_BYTES:
+            return C.read_bytes(self._reader, p)
+        return ArgView(self._reader, v)
+
+    @staticmethod
+    def _wrap_py(obj):
+        if isinstance(obj, (dict, list, tuple)):
+            return ArgView.python(obj)
+        return obj
+
+    # -- the access surface ----------------------------------------------
+    def __len__(self) -> int:
+        if self._reader is None:
+            return len(self._py)
+        tag, p = self._val
+        if tag == C.T_VEC:
+            return C.vec_len(self._reader, p)
+        if tag == C.T_MAP:
+            return C.map_len(self._reader, p)
+        raise InvalidPointer(f"len() of non-container value tag {tag}")
+
+    def __getitem__(self, key):
+        if self._reader is None:
+            return self._wrap_py(self._py[key])
+        tag, p = self._val
+        if isinstance(key, str):
+            if tag != C.T_MAP:
+                raise InvalidPointer(f"string index into value tag {tag}")
+            v = C.map_get(self._reader, p, key)
+            if v is None:
+                raise KeyError(key)
+            return self._wrap(v)
+        if tag != C.T_VEC:
+            raise InvalidPointer(f"integer index into value tag {tag}")
+        n = C.vec_len(self._reader, p)
+        if key < 0:
+            key += n
+        return self._wrap(C.vec_get(self._reader, p, key))
+
+    def get(self, key: str, default=None):
+        if self._reader is None:
+            return self._wrap_py(self._py.get(key, default))
+        tag, p = self._val
+        if tag != C.T_MAP:
+            raise InvalidPointer(f"get() on value tag {tag}")
+        v = C.map_get(self._reader, p, key)
+        return default if v is None else self._wrap(v)
+
+    def keys(self) -> List[str]:
+        if self._reader is None:
+            return list(self._py.keys())
+        tag, p = self._val
+        if tag != C.T_MAP:
+            raise InvalidPointer(f"keys() on value tag {tag}")
+        return [k for k, _ in C.map_items(self._reader, p)]
+
+    def __iter__(self) -> Iterator:
+        if self._reader is None:
+            if isinstance(self._py, dict):
+                return iter(self._py.keys())
+            return (self._wrap_py(v) for v in self._py)
+        tag, p = self._val
+        if tag == C.T_MAP:
+            return iter(self.keys())
+        if tag == C.T_VEC:
+            return (self._wrap(C.vec_get(self._reader, p, i))
+                    for i in range(C.vec_len(self._reader, p)))
+        raise InvalidPointer(f"iteration over value tag {tag}")
+
+    def __contains__(self, key: str) -> bool:
+        if self._reader is None:
+            if not isinstance(self._py, dict):
+                raise InvalidPointer("`in` requires a map value")
+            return key in self._py
+        tag, p = self._val
+        if tag != C.T_MAP:
+            raise InvalidPointer(f"`in` on value tag {tag}")
+        return C.map_get(self._reader, p, key) is not None
+
+    def to_python(self):
+        """Materialize the whole subtree (the explicit opt-in to a full
+        deserialize — what the lazy surface otherwise avoids)."""
+        if self._reader is None:
+            obj = self._py
+            if isinstance(obj, tuple):
+                return list(obj)
+            return obj
+        return C.to_python(self._reader, self._val)
+
+
+# ---------------------------------------------------------------------------
+# argument marshalling (client side)
+# ---------------------------------------------------------------------------
+def _build_arg(scope: Scope, v, pid: int, force_copy: bool) -> C.Value:
+    """One argument → Value in ``scope``.
+
+    A ``GraphRef`` living in the same heap is pointer-embedded for free
+    (the whole point); one in a foreign heap — or any graph under a
+    sandboxed call, whose sandbox covers only the call scope — is
+    ``deep_copy``'d into the scope (§5.6 ``copy_from``).
+    """
+    if isinstance(v, GraphRef):
+        if v.scope is None:   # plain ref: rebuild its retained values
+            return C.build_value(scope, v.plain, pid)
+        if v.scope.heap is scope.heap and not force_copy:
+            return v.value
+        return C.deep_copy(v.scope.heap, scope, v.value, pid)
+    return C.build_value(scope, v, pid)
+
+
+def marshal_args(scope: Scope, args: Tuple, pid: int = 0,
+                 force_copy: bool = False) -> int:
+    """Materialize the argument tuple as a Vec graph; returns its root."""
+    vals = [_build_arg(scope, v, pid, force_copy) for v in args]
+    return C.build_vec(scope, vals, pid)[1]
+
+
+def build_graph(conn, *values) -> GraphRef:
+    """Materialize an argument tuple once in ``conn``'s heap.
+
+    The returned ``GraphRef`` can be passed to ``invoke`` any number of
+    times — each call is then pure pointer passing. Works on CXL and
+    routed connections (``RoutedConnection.build_graph`` delegates here
+    against the live target); a copy-route target gets a plain-value ref
+    since there is no shared heap to materialize into."""
+    heap = getattr(conn, "heap", None)
+    if heap is None:  # FallbackConnection: the route copies either way
+        return GraphRef(None, None, plain=[_to_plain(v) for v in values])
+    pages = MARSHAL_SCOPE_PAGES
+    while True:
+        scope = conn.create_scope(pages * heap.page_size)
+        try:
+            root = marshal_args(scope, values, pid=conn.client_pid)
+            return GraphRef(scope, (C.T_VEC, root))
+        except AllocationError:
+            scope.destroy()
+            if pages > (1 << 16):
+                raise
+            pages *= 4
+        except BaseException:
+            scope.destroy()   # unsupported value etc. — no page leak
+            raise
+
+
+def _marshal_pool(conn: Connection) -> ScopePool:
+    pool = conn._marshal_pool
+    if pool is None or pool.scope_pages != MARSHAL_SCOPE_PAGES:
+        pool = conn._marshal_pool = ScopePool(
+            conn.heap, MARSHAL_SCOPE_PAGES, owner=conn.client_pid,
+            seals=conn.seals)
+    return pool
+
+
+def _pooled_marshal(conn: Connection, args: Tuple, pid: int,
+                    force_copy: bool) -> Tuple[int, Scope, bool]:
+    """(root, scope, pooled?) — pooled fast path, dedicated on overflow."""
+    pool = _marshal_pool(conn)
+    scope = pool.pop()
+    try:
+        return marshal_args(scope, args, pid, force_copy), scope, True
+    except AllocationError:
+        pool.push(scope)
+    except BaseException:
+        pool.push(scope)      # bad value (TypeError, …) — no scope leak
+        raise
+    pages = MARSHAL_SCOPE_PAGES * 4
+    while True:
+        scope = create_scope(conn.heap, pages * conn.heap.page_size,
+                             owner=pid)
+        try:
+            return marshal_args(scope, args, pid, force_copy), scope, False
+        except AllocationError:
+            scope.destroy()
+            if pages > (1 << 16):
+                raise
+            pages *= 4
+        except BaseException:
+            scope.destroy()
+            raise
+
+
+# ---------------------------------------------------------------------------
+# reply marshalling (server side) + decoding (client side)
+# ---------------------------------------------------------------------------
+def _reply_heap(conn):
+    heap = getattr(conn, "heap", None)
+    return heap if heap is not None else conn.client.heap
+
+
+def _pop_reply_scope(conn, nbytes: int) -> Tuple[Scope, bool]:
+    heap = _reply_heap(conn)
+    if nbytes <= REPLY_SCOPE_PAGES * heap.page_size:
+        free = conn._reply_free
+        if free:
+            s = free.pop()
+            s.reset()
+            return s, True
+        return create_scope(heap, REPLY_SCOPE_PAGES * heap.page_size), True
+    return create_scope(heap, nbytes), False
+
+
+def _release_reply_scope(conn, scope: Scope) -> None:
+    """The one push-or-destroy policy for reply scopes."""
+    if scope.num_pages == REPLY_SCOPE_PAGES and \
+            len(conn._reply_free) < _REPLY_FREELIST_MAX:
+        conn._reply_free.append(scope)
+    elif scope.live:
+        scope.destroy()
+
+
+def _track_reply(conn, addr: int, scope: Scope) -> None:
+    live = conn._reply_live
+    if len(live) >= _REPLY_LIVE_MAX:
+        # a client that errored before decoding (timeout, link failure)
+        # strands its reply scope here; reclaim the oldest so repeated
+        # errors cannot pin the channel heap
+        oldest = next(iter(live))
+        _release_reply_scope(conn, live.pop(oldest))
+    live[addr] = scope
+
+
+def _recycle_reply(conn, addr: int) -> None:
+    scope = conn._reply_live.pop(addr, None)
+    if scope is not None:
+        _release_reply_scope(conn, scope)
+
+
+def _write_reply_graph(ctx, ret) -> int:
+    """Marshal a handler's return value as a boxed Value + graph."""
+    conn = ctx.conn
+    scope, _pooled = _pop_reply_scope(conn, REPLY_SCOPE_PAGES)
+    heap = _reply_heap(conn)
+    nbytes = REPLY_SCOPE_PAGES * heap.page_size
+    while True:
+        try:
+            val = C.build_value(scope, ret)
+            box = scope.alloc(C.VALUE_SIZE)
+            scope.heap.write(box, _BOX.pack(val[0], 0, val[1]))
+            break
+        except AllocationError:
+            # big reply: retry in a geometrically larger dedicated scope
+            # (serial length is NOT a bound — e.g. None is 1 B on the
+            # wire but a 16 B containers Value)
+            _release_reply_scope(conn, scope)
+            nbytes *= 8
+            if nbytes > heap.num_pages * heap.page_size:
+                raise
+            scope, _pooled = _pop_reply_scope(conn, nbytes)
+    _track_reply(conn, box, scope)
+    return box
+
+
+def _read_reply_graph(conn, box: int):
+    heap = conn.heap
+    tag, _, payload = _BOX.unpack(bytes(heap.read(box, C.VALUE_SIZE)))
+    out = C.to_python(heap, (tag, payload))
+    _recycle_reply(conn, box)
+    return out
+
+
+def _write_reply_blob(ctx, raw: bytes) -> int:
+    conn = ctx.conn
+    scope, _pooled = _pop_reply_scope(conn, _BLOB_HDR.size + len(raw))
+    a = scope.alloc(_BLOB_HDR.size + len(raw))
+    # privileged runtime store — the reply lands outside the handler's
+    # sandbox, like librpcool writing after SB_END
+    ctx._daemon_write(a, _BLOB_HDR.pack(len(raw)) + raw)
+    _track_reply(conn, a, scope)
+    return a
+
+
+def _read_blob(reader, a: int, psize: int) -> bytes:
+    n = _BLOB_HDR.unpack(bytes(reader.read(a, _BLOB_HDR.size)))[0]
+    return bytes(reader.read(gaddr.add(a, _BLOB_HDR.size, psize), n))
+
+
+# ---------------------------------------------------------------------------
+# the typed handler wrapper (receiver half)
+# ---------------------------------------------------------------------------
+def _reader_for(ctx):
+    """The §4.4 contract: a sandboxed request chases pointers through a
+    bounds-checked reader (one range check per dereference — the MMU
+    fault check under the MPK cost model); a trusted request gets the
+    raw-view reader over the whole heap (hardware loads cost nothing
+    extra once the mapping exists). A fallback-route ctx reads through
+    itself so page faults keep migrating pages."""
+    sb = ctx.sandbox
+    if sb is not None:
+        return C.fast_reader_for_sandbox(sb)
+    heap = ctx.heap()
+    if getattr(ctx, "conn", None) is not None and \
+            getattr(ctx.conn, "server", None) is not None:
+        return ctx   # DSM node: reads must fault pages across the link
+    return C.FastReader(heap)
+
+
+def typed_handler(fn):
+    """Wrap ``fn(ctx, args: ArgView) -> value`` as a raw ring handler.
+
+    The wrapper dispatches on the descriptor flags, so ONE registration
+    serves both routes: F_TYPED alone = pointer-passing (graph view),
+    F_TYPED|F_BYVAL = serialized by-value (fallback route / baseline).
+    """
+    def wrapper(ctx, arg: int) -> int:
+        flags = ctx.flags
+        if not flags & F_TYPED:
+            raise ChannelError(
+                "typed handler called through the raw data path "
+                "(use conn.invoke, not conn.call)")
+        if flags & F_BYVAL:
+            heap = ctx.heap()
+            raw = _read_blob(ctx, arg, heap.page_size)
+            view = ArgView.python(serial.decode(raw))   # full deserialize
+            ret = fn(ctx, view)
+            return _write_reply_blob(ctx, serial.encode(ret))
+        view = ArgView.graph(_reader_for(ctx), (C.T_VEC, arg))
+        try:
+            ret = fn(ctx, view)
+        except InvalidPointer as e:
+            if ctx.sandbox is not None:
+                # the §4.3 wild-pointer attack path: a bad pointer inside
+                # a sandboxed request is a sandbox fault (→ E_SANDBOX
+                # reply), never an exception class that leaks less intent
+                raise SandboxViolation(str(e)) from e
+            raise
+        return _write_reply_graph(ctx, ret)
+
+    wrapper.__wrapped__ = fn
+    wrapper.typed = True
+    return wrapper
+
+
+# ---------------------------------------------------------------------------
+# invoke — CXL route (pointer passing)
+# ---------------------------------------------------------------------------
+def invoke_cxl(conn: Connection, fn_id: int, args: Tuple,
+               sealed: bool = False, sandboxed: bool = False,
+               batch_release: bool = False, timeout: float = 10.0,
+               inline: bool = False, spin_sleep_us: float = 0.0):
+    """Typed invoke on the shared-memory ring: materialize-once, pass a
+    pointer, decode the marshalled reply."""
+    caller = conn.call_inline if inline else conn.call
+    kw: Dict[str, Any] = {} if inline else \
+        {"timeout": timeout, "spin_sleep_us": spin_sleep_us}
+
+    # steady-state hot path: a single pre-built graph in this heap is
+    # passed by pointer — zero marshalling work per call
+    if len(args) == 1 and isinstance(args[0], GraphRef):
+        g = args[0]
+        if g.scope is not None and g.scope.heap is conn.heap:
+            conn.n_invokes += 1
+            ret = caller(fn_id, g.root, scope=g.scope, sealed=sealed,
+                         sandboxed=sandboxed, batch_release=batch_release,
+                         flags_extra=F_TYPED, **kw)
+            return _read_reply_graph(conn, ret)
+        # foreign-heap / plain ref: deep-copy the tuple across (§5.6)
+        args = tuple(g.to_python())
+
+    pid = conn.client_pid
+    # sandboxed: the sandbox covers only the call scope, so embedded
+    # graphs must be copied into it; sealed: the seal likewise protects
+    # only the call scope — a pointer-embedded graph would stay sender-
+    # writable mid-flight, the exact §4.5 TOCTOU sealing prevents
+    root, scope, pooled = _pooled_marshal(conn, args, pid,
+                                          force_copy=sandboxed or sealed)
+    conn.n_invokes += 1
+    conn.marshal_bytes += scope.used_bytes()
+    try:
+        ret = caller(fn_id, root, scope=scope, sealed=sealed,
+                     sandboxed=sandboxed, batch_release=batch_release,
+                     flags_extra=F_TYPED, **kw)
+    finally:
+        if not pooled:
+            scope.destroy()
+        elif sealed and batch_release:
+            # pages stay write-protected until the batch flush (§5.3)
+            conn._marshal_pool.push_sealed(scope, conn.last_seal_idx)
+        else:
+            conn._marshal_pool.push(scope)
+    return _read_reply_graph(conn, ret)
+
+
+# ---------------------------------------------------------------------------
+# invoke — serialized routes (fallback transport + Fig. 11 baseline)
+# ---------------------------------------------------------------------------
+def _to_plain(v):
+    """§5.6 copy semantics for a graph crossing a coherence boundary:
+    the structural traversal materializes it (the ``deep_copy`` read
+    half) and the result travels by value."""
+    if isinstance(v, GraphRef):
+        return v.to_python()
+    return v
+
+
+def _args_to_plain(args: Tuple) -> list:
+    if len(args) == 1 and isinstance(args[0], GraphRef):
+        return args[0].to_python()   # the ref IS the argument tuple
+    return [_to_plain(v) for v in args]
+
+
+def invoke_fallback(conn, fn_id: int, args: Tuple, sealed: bool = False,
+                    sandboxed: bool = False, batch_release: bool = False,
+                    timeout: float = 10.0, inline: bool = False,
+                    **_ignored):
+    """Typed invoke over the software-coherent link: same surface, but
+    the arguments are serial-encoded and travel by value (one blob copy
+    over the wire instead of N page ping-pongs chasing pointers)."""
+    payload = serial.encode(_args_to_plain(args))
+    nbytes = _BLOB_HDR.size + len(payload)
+    scope = conn.create_scope(nbytes)
+    conn.n_invokes += 1
+    conn.marshal_bytes += len(payload)
+    try:
+        a = scope.alloc(nbytes)
+        conn.client.write(a, _BLOB_HDR.pack(len(payload)) + payload,
+                          pid=conn.client_pid)
+        ret = conn.call(fn_id, a, scope=scope, sealed=sealed,
+                        sandboxed=sandboxed, batch_release=batch_release,
+                        flags_extra=F_TYPED | F_BYVAL)
+        # the reply blob faults its pages back over the link — the copy
+        raw = _read_blob(conn.client, ret, conn.client.page_size)
+        _recycle_reply(conn, ret)
+        return serial.decode(raw)
+    finally:
+        scope.destroy()
+
+
+def invoke_serialized(conn: Connection, fn_id: int, args: Tuple,
+                      sealed: bool = False, sandboxed: bool = False,
+                      timeout: float = 10.0, inline: bool = False,
+                      spin_sleep_us: float = 0.0):
+    """The serializing baseline on the SAME CXL descriptor ring: encode,
+    copy the blob through shared memory, full decode on the receiver,
+    encode+decode the reply. Everything Fig. 11 shows RPCool avoiding,
+    with the ring machinery held identical."""
+    caller = conn.call_inline if inline else conn.call
+    kw: Dict[str, Any] = {} if inline else \
+        {"timeout": timeout, "spin_sleep_us": spin_sleep_us}
+    payload = serial.encode(_args_to_plain(args))
+    nbytes = _BLOB_HDR.size + len(payload)
+
+    pid = conn.client_pid
+    pooled = nbytes <= MARSHAL_SCOPE_PAGES * conn.heap.page_size
+    if pooled:
+        scope = _marshal_pool(conn).pop()
+    else:
+        scope = create_scope(conn.heap, nbytes, owner=pid)
+    try:
+        a = scope.alloc(nbytes)
+        conn.heap.write(a, _BLOB_HDR.pack(len(payload)) + payload, pid=pid)
+        ret = caller(fn_id, a, scope=scope, sealed=sealed,
+                     sandboxed=sandboxed, flags_extra=F_TYPED | F_BYVAL,
+                     **kw)
+    finally:
+        if pooled:
+            conn._marshal_pool.push(scope)
+        else:
+            scope.destroy()
+    raw = _read_blob(conn.heap, ret, conn.heap.page_size)
+    _recycle_reply(conn, ret)
+    return serial.decode(raw)

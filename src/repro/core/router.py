@@ -254,6 +254,9 @@ class RoutedConnection:
         self.generation = -1
         self.failovers = 0
         self.closed = False
+        # heaps of targets this handle abandoned on failover/re-route:
+        # GraphRefs built against them are stale (lease-reclaimed)
+        self._dead_heaps: List = []
         self._attach()
 
     # -- wiring -------------------------------------------------------------
@@ -288,6 +291,9 @@ class RoutedConnection:
             raise ChannelError("call on closed RoutedConnection")
         if self.generation != self.endpoint.generation:
             old, self.target = self.target, None
+            old_heap = getattr(old, "heap", None)
+            if old_heap is not None and old_heap not in self._dead_heaps:
+                self._dead_heaps.append(old_heap)
             try:
                 if old is not None:
                     old.close()
@@ -328,6 +334,50 @@ class RoutedConnection:
             if self._can_retry(arg_addr, kw):
                 return self._ensure().call_inline(fn_id, arg_addr, **kw)
             raise
+
+    def invoke(self, fn_id: int, *args, **kw):
+        """Typed invoke bound to the endpoint *name*: same-pod targets get
+        pointer-passing over the CXL ring, cross-pod targets the
+        serialized fallback route — decided per route, with no caller
+        change (§5.6). Unlike raw ``call``, plain-value argument sets are
+        safe to retry across a failover: they reference nothing in the
+        dead server's heap and are simply re-marshalled against the
+        replica. Pre-built ``GraphRef`` args pin the request to the heap
+        they live in, so those surface the error instead."""
+        target = self._ensure()
+        self._check_graph_args(target, args)
+        try:
+            return target.invoke(fn_id, *args, **kw)
+        except ChannelError:
+            from .marshal import GraphRef
+            if self.generation != self.endpoint.generation and \
+                    not any(isinstance(a, GraphRef) for a in args):
+                return self._ensure().invoke(fn_id, *args, **kw)
+            raise
+
+    def _check_graph_args(self, target, args) -> None:
+        """A GraphRef built in the heap of a target this handle has since
+        failed away from is stale: that heap is lease-reclaimed, and
+        silently deep-copying out of it would read memory whose
+        ownership lapsed. Surface it — callers rebuild with
+        ``build_graph`` against the live target. Refs in OTHER live
+        heaps are fine: the marshal layer deep-copies (CXL) or
+        serializes (fallback) them per §5.6."""
+        from .marshal import GraphRef
+        for a in args:
+            if isinstance(a, GraphRef) and a.scope is not None and \
+                    any(a.scope.heap is h for h in self._dead_heaps):
+                raise ChannelError(
+                    "stale GraphRef: the graph lives in a failed-over "
+                    "target's heap — rebuild it with build_graph() "
+                    "against the live target")
+
+    def build_graph(self, *values):
+        """Materialize an argument tuple once against the live target's
+        heap (see ``marshal.build_graph``). The ref dies with the target:
+        after a failover, invoke it again to build against the replica."""
+        from .marshal import build_graph
+        return build_graph(self._ensure(), *values)
 
     def call_async(self, fn_id: int, arg_addr: int = gaddr.NULL,
                    **kw) -> Tuple[int, int]:
@@ -374,6 +424,14 @@ class RoutedConnection:
     @property
     def n_calls(self) -> int:
         return 0 if self.target is None else self.target.n_calls
+
+    @property
+    def n_invokes(self) -> int:
+        return 0 if self.target is None else self.target.n_invokes
+
+    @property
+    def marshal_bytes(self) -> int:
+        return 0 if self.target is None else self.target.marshal_bytes
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:

@@ -31,7 +31,7 @@ import numpy as np
 
 from . import addr as gaddr
 from .errors import SandboxViolation
-from .heap import SharedHeap
+from .heap import SharedHeap, USED
 
 NUM_KEYS = 16
 KEY_PRIVATE = 0        # process private memory
@@ -149,6 +149,9 @@ class SandboxManager:
         self._lru: List[Tuple[int, int]] = []
         self._free_keys = list(range(FIRST_SANDBOX_KEY, NUM_KEYS))
         self._active_keys: Dict[int, int] = {}  # key -> active count
+        # keys whose binding was invalidated while still ACTIVE: they
+        # return to the free list on their final deactivation
+        self._orphaned: set = set()
         self._temps: Dict[int, _TempHeap] = {}
         self._bitmaps: Dict[int, np.ndarray] = {}  # key -> page bitmap
         self._tls = threading.local()
@@ -170,6 +173,13 @@ class SandboxManager:
         rng = (start_page, num_pages)
         with self._lock:
             key = self._cache.get(rng)
+            if key is not None and not self._still_valid(rng, key):
+                # the pages were freed (and possibly recycled to another
+                # owner) since the key was assigned — a stale cache hit
+                # here would grant the sandbox access to whoever holds
+                # those pages now. Invalidate and take the miss path.
+                self._invalidate(rng, key)
+                key = None
             if key is not None:
                 self.cache_hits += 1
                 cached = True
@@ -205,6 +215,35 @@ class SandboxManager:
         self._lru.append(rng)
         return key
 
+    def _still_valid(self, rng: Tuple[int, int], key: int) -> bool:
+        """A cached (range → key) binding is only honourable while every
+        page is still allocated AND still carries the key — free/realloc
+        or a key reassignment voids it."""
+        start, count = rng
+        sl = slice(start, start + count)
+        return bool(np.all(self.heap.state[sl] == USED)
+                    and np.all(self.heap.key[sl] == key))
+
+    def _invalidate(self, rng: Tuple[int, int], key: int) -> None:
+        start, count = rng
+        self._cache.pop(rng, None)
+        if rng in self._lru:
+            self._lru.remove(rng)
+        # scrub the key off any page in the range that still carries it
+        sl = slice(start, start + count)
+        keys = self.heap.key[sl]
+        keys[keys == key] = KEY_SHARED
+        if self._active_keys.get(key, 0) == 0:
+            self._bitmaps.pop(key, None)
+            self._temps.pop(key, None)
+            if key not in self._free_keys:
+                self._free_keys.append(key)
+        else:
+            # still active somewhere: reclaim on final deactivation —
+            # dropping it here would lose the key forever (it is in
+            # neither _cache nor _free_keys)
+            self._orphaned.add(key)
+
     def _evict_one(self) -> int:
         for i, rng in enumerate(self._lru):
             key = self._cache[rng]
@@ -212,7 +251,11 @@ class SandboxManager:
                 self._lru.pop(i)
                 del self._cache[rng]
                 start, count = rng
-                self.heap.key[start : start + count] = KEY_SHARED
+                # scrub only pages still carrying THIS key: a stale range
+                # whose pages were recycled into another live sandbox
+                # must not have that binding's key clobbered
+                keys = self.heap.key[start : start + count]
+                keys[keys == key] = KEY_SHARED
                 return key
         raise SandboxViolation(
             "all 14 sandbox keys active; no key available to recycle"
@@ -229,12 +272,29 @@ class SandboxManager:
     def _activate(self, sb: Sandbox) -> None:
         # PKRU write: drop every key except the sandbox's (§5.2).
         with self._lock:
+            rng = (sb.start_page, sb.num_pages)
+            # a held Sandbox whose key was recycled to another region (or
+            # whose pages were freed) must never re-enter: its key now
+            # guards someone else's pages
+            if self._cache.get(rng) != sb.key or \
+                    not self._still_valid(rng, sb.key):
+                raise SandboxViolation(
+                    f"stale sandbox: key {sb.key} no longer guards pages "
+                    f"[{sb.start_page},{sb.start_page + sb.num_pages})"
+                )
             self._active_keys[sb.key] = self._active_keys.get(sb.key, 0) + 1
         self._tls.mask = 1 << sb.key
 
     def _deactivate(self, sb: Sandbox) -> None:
         with self._lock:
             self._active_keys[sb.key] -= 1
+            if self._active_keys[sb.key] == 0 and \
+                    sb.key in self._orphaned:
+                self._orphaned.discard(sb.key)
+                self._bitmaps.pop(sb.key, None)
+                self._temps.pop(sb.key, None)
+                if sb.key not in self._free_keys:
+                    self._free_keys.append(sb.key)
         self._tls.mask = (1 << KEY_PRIVATE) | (1 << KEY_SHARED)
 
     def in_sandbox(self) -> bool:

@@ -90,6 +90,10 @@ class Scope:
     def used_bytes(self) -> int:
         return self._bump
 
+    def remaining_bytes(self) -> int:
+        """Bytes still allocatable (from the next aligned offset)."""
+        return max(0, self.size_bytes - _align(self._bump))
+
     # -- lifecycle (§5.1) ----------------------------------------------
     def reset(self) -> None:
         """Reuse the scope: all objects allocated within are lost."""
@@ -116,6 +120,20 @@ def create_scope(heap: SharedHeap, size_bytes: int, owner: int = 0) -> Scope:
     pages = max(1, (size_bytes + heap.page_size - 1) // heap.page_size)
     start = heap.alloc_pages(pages, owner=owner)
     return Scope(heap, start, pages, owner=owner)
+
+
+def implicit_scope(conn, nbytes: int, page_size: int) -> Scope:
+    """The one implicit-allocation policy behind scope-less ``new_bytes``
+    on every transport: consecutive allocations share the connection's
+    current implicit scope until it fills, every scope is tracked on the
+    connection and returned to the heap at close (scope-less allocations
+    historically leaked an untracked single-use scope each)."""
+    s = conn._implicit
+    if s is None or s.remaining_bytes() < nbytes:
+        s = conn.create_scope(max(nbytes or 1, page_size))
+        conn._implicit_scopes.append(s)
+        conn._implicit = s
+    return s
 
 
 class ScopePool:

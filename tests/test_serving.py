@@ -70,12 +70,14 @@ class TestEngine:
         eng.run_until_drained()
         kv_bytes = (2 * cfg.num_layers * 16 * cfg.num_kv_heads
                     * cfg.head_dim * 2)
-        assert eng.handoff_bytes < 100            # a few pointers
+        # a few marshalled pointers (typed invoke: 16B containers Values
+        # — the args vec + the page-pointer vec), never KV bytes
+        assert eng.handoff_bytes < 200
         assert kv_bytes > 10 * eng.handoff_bytes  # ≫ copied (smoke dims)
         # at yi-9b full scale the same handoff is 2·48·16·4·128·2 ≈ 1.5 MB
-        # of KV vs the same 48 pointer bytes — a ~32000× reduction
+        # of KV vs the same ~hundred pointer bytes — a ~10000× reduction
         full_kv = 2 * 48 * 16 * 4 * 128 * 2
-        assert full_kv > 10_000 * eng.handoff_bytes
+        assert full_kv > 5_000 * eng.handoff_bytes
 
     def test_seals_protect_inflight_pages(self, small_lm):
         """While a request is active its pages are sealed: the pool heap
