@@ -23,17 +23,52 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import BusyWaitPolicy, ClusterRouter, Orchestrator, RPC, \
-    ServerLoop
+    ServerLoop, method, service
 
-FN_COMPOSE, FN_USER, FN_MEDIA, FN_TEXT, FN_STORE = 1, 2, 3, 4, 5
 DB_WORK_US = 30.0  # simulated storage work (the paper's 66% critical path)
 
 
+@service(name="socialnet")
+class SocialNetService:
+    """The DeathStarBench-shaped mesh as a declarative service: the
+    client calls ``compose`` by name through a stub; compose fans out to
+    the in-process user/media/text/store hops, every hop receiving the
+    SAME lazy document view (one marshalled graph, zero re-copies)."""
+
+    def __init__(self):
+        self.store_map: Dict[int, int] = {}
+        self._n = 0
+
+    @method(deadline=30.0)
+    def compose(self, ctx, doc):
+        for hop in (self.user, self.media, self.text):
+            hop(ctx, doc)
+        return self.store(ctx, doc)
+
+    def user(self, ctx, doc):
+        return 1
+
+    def media(self, ctx, doc):
+        return 1
+
+    def text(self, ctx, doc):
+        # lazy: only the text field is ever dereferenced
+        return len(doc["text"])
+
+    def store(self, ctx, doc):
+        t0 = time.perf_counter()
+        while (time.perf_counter() - t0) * 1e6 < DB_WORK_US:
+            pass  # the database + nginx share of the critical path
+        self._n += 1
+        self.store_map[self._n] = doc["ts"]
+        return self._n
+
+
 class SocialNet:
-    """The service mesh, published through the cluster router: clients
-    resolve ``/pod0/svc`` by name and the router hands them the same-pod
-    CXL ring transport (the cross-pod arm is benchmarked in the cluster
-    suite)."""
+    """The mesh, published through the cluster router: clients resolve
+    ``/pod0/svc`` by name, ``router.stub`` hands them a typed proxy over
+    the same-pod CXL ring transport (the cross-pod arm is benchmarked in
+    the cluster suite)."""
 
     def __init__(self, sleep_us: Optional[float] = None,
                  threaded: bool = False):
@@ -41,8 +76,12 @@ class SocialNet:
         self.router = ClusterRouter(self.orch)
         ch = RPC(self.orch, pid=1).open("/pod0/svc", heap_pages=1 << 12)
         self.ch = ch
+        self.svc = SocialNetService()
+        ch.serve(self.svc)
         self.router.register("/pod0/svc", ch, pod="pod0")
-        self.conn = self.router.connect("/pod0/svc", pid=2, pod="pod0")
+        self.stub = self.router.stub("/pod0/svc", SocialNetService,
+                                     pid=2, pod="pod0")
+        self.conn = self.stub.connection
         assert self.conn.transport == "cxl"
         # threaded: requests are served by one ServerLoop thread instead
         # of inline on the caller (the multi-client deployment shape)
@@ -50,38 +89,11 @@ class SocialNet:
         if threaded:
             self.loop = ServerLoop([ch])
             self.loop.run_in_thread()
-        self.store: Dict[int, int] = {}
-        self._n = 0
-        ch.add_typed(FN_COMPOSE, self._compose)
-        # the downstream services: called with the same document view the
-        # compose hop received (pointer passing down the chain)
-        self._svc = {
-            FN_USER: lambda ctx, doc: 1,
-            FN_MEDIA: lambda ctx, doc: 1,
-            FN_TEXT: self._text,
-            FN_STORE: self._store,
-        }
         self.sleep_us = sleep_us
 
-    # the compose service fans out to 3 services then stores — all hops
-    # pass the SAME document view (one marshalled graph, zero re-copies)
-    def _compose(self, ctx, args):
-        doc = args[0]
-        for fn in (FN_USER, FN_MEDIA, FN_TEXT):
-            self._svc[fn](ctx, doc)
-        return self._svc[FN_STORE](ctx, doc)
-
-    def _text(self, ctx, doc):
-        # lazy: only the text field is ever dereferenced
-        return len(doc["text"])
-
-    def _store(self, ctx, doc):
-        t0 = time.perf_counter()
-        while (time.perf_counter() - t0) * 1e6 < DB_WORK_US:
-            pass  # the database + nginx share of the critical path
-        self._n += 1
-        self.store[self._n] = doc["ts"]
-        return self._n
+    @property
+    def store(self) -> Dict[int, int]:
+        return self.svc.store_map
 
     def compose_post(self) -> float:
         doc = {
@@ -89,8 +101,7 @@ class SocialNet:
             "media": [1, 2, 3], "ts": 12345,
         }
         t0 = time.perf_counter()
-        self.conn.invoke(FN_COMPOSE, doc, timeout=30.0,
-                         inline=self.loop is None)
+        self.stub.compose(doc, timeout=30.0, inline=self.loop is None)
         return (time.perf_counter() - t0) * 1e6
 
     def shutdown(self) -> None:

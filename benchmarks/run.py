@@ -4,32 +4,27 @@ Prints ``name,us_per_call,derived`` CSV. Roofline terms come from the
 dry-run artifacts (see repro.roofline.analysis / EXPERIMENTS.md) — this
 harness measures the host-side RPCool control plane for real.
 
-The noop suite additionally writes ``BENCH_noop.json``: every row plus
-the legacy-vs-current speedups for ``noop_rtt_rpcool`` and
-``noop_throughput_rpcool`` (the pre-refactor struct-ring path is re-run
-in the same process — see ``benchmarks/legacy_ring.py``), proving the
-before/after delta of the descriptor-ring refactor on this machine.
+Four suites additionally write JSON trajectory artifacts, all carrying
+the shared schema fields ``suite`` / ``gate`` / ``measured`` (validated
+by ``--check-schema`` and tests/test_bench_schema.py):
 
-The cluster suite writes ``BENCH_cluster.json``: 1→8 concurrent client
-threads through ONE ServerLoop thread (aggregate throughput + the
-8-vs-1 scaling ratio, gate ≥ 4×) plus the router's same-pod/cross-pod
-connection counts.
-
-The marshal suite writes ``BENCH_marshal.json``: typed pointer-passing
-vs the serializing baseline over the IDENTICAL descriptor ring (the
-Fig. 11 / Table 1a comparison, gate ≥ 2× RTT), plus the cross-pod
-by-value route and the routing decision counters.
+  noop     → BENCH_noop.json      legacy-vs-current ring speedups
+  cluster  → BENCH_cluster.json   1→8 clients through one ServerLoop
+  marshal  → BENCH_marshal.json   typed pointer-passing vs serializing
+  pipeline → BENCH_pipeline.json  depth-8 futures vs sequential invoke
 
 Usage:
     python -m benchmarks.run                     # all suites
+    python -m benchmarks.run --list-suites       # the suite registry
     python -m benchmarks.run --suite noop        # one suite
     python -m benchmarks.run --suite noop --iters 2000 --json out.json
-    python -m benchmarks.run --suite cluster     # writes BENCH_cluster.json
+    python -m benchmarks.run --check-schema      # validate BENCH_*.json
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import sys
 import time
@@ -38,6 +33,26 @@ import traceback
 NOOP_JSON_DEFAULT = "BENCH_noop.json"
 CLUSTER_JSON_DEFAULT = "BENCH_cluster.json"
 MARSHAL_JSON_DEFAULT = "BENCH_marshal.json"
+PIPELINE_JSON_DEFAULT = "BENCH_pipeline.json"
+
+# The suite registry — the single source of truth for suite names
+# (--suite validation, --list-suites, CI smoke steps). Keys are the CLI
+# names; titles are what the progress lines print.
+SUITES = [
+    ("noop", "noop_rtt (Table 1a)"),
+    ("op", "op_latency (Table 1b)"),
+    ("marshal", "marshal (Fig. 11 typed data plane)"),
+    ("pipeline", "pipeline (depth-8 futures vs sequential invoke)"),
+    ("cooldb", "cooldb (Fig. 11)"),
+    ("ycsb", "ycsb_kv (Figs. 9/10)"),
+    ("micro", "microservices (Figs. 12/13)"),
+    ("kv", "kv_handoff (pod-scale)"),
+    ("cluster", "cluster (§4.6 router + ServerLoop)"),
+]
+SUITE_NAMES = [k for k, _ in SUITES]
+
+# every BENCH_*.json artifact must carry these fields (CI checks them)
+SCHEMA_FIELDS = ("suite", "gate", "measured")
 
 
 def _write_marshal_json(rows, path: str, iters: int) -> None:
@@ -54,6 +69,9 @@ def _write_marshal_json(rows, path: str, iters: int) -> None:
         "speedup_vs_build": by_name.get("marshal_speedup_vs_build", 0.0),
         "target_speedup": 2.0,
         "meets_target": speedup >= 2.0,
+        "gate": {"metric": "speedup_pointer_vs_serialized", "op": ">=",
+                 "target": 2.0},
+        "measured": {"speedup_pointer_vs_serialized": speedup},
         "routing": {
             "cxl_connects": int(by_name.get(
                 "marshal_routing_cxl_connects", 0)),
@@ -65,6 +83,32 @@ def _write_marshal_json(rows, path: str, iters: int) -> None:
         json.dump(doc, f, indent=1, sort_keys=True)
     print(f"# wrote {path}: pointer vs serialized {speedup:.2f}x "
           f"(target 2.0x) routing={doc['routing']}", file=sys.stderr)
+
+
+def _write_pipeline_json(rows, path: str, iters: int) -> None:
+    by_name = {name: us for name, us, _ in rows}
+    derived = {name: d for name, us, d in rows}
+    cxl = by_name.get("pipeline_cxl_speedup", 0.0)
+    fb = by_name.get("pipeline_fallback_speedup", 0.0)
+    doc = {
+        "suite": "pipeline (depth-8 futures vs sequential invoke)",
+        "iters": iters,
+        "unit": "us_per_call",
+        "rows": by_name,
+        "derived": derived,
+        "depth": 8,
+        "speedup_cxl": cxl,
+        "speedup_fallback": fb,
+        "target_speedup": 3.0,
+        "meets_target": cxl >= 3.0 and fb >= 3.0,
+        "gate": {"metric": "min(speedup_cxl, speedup_fallback)",
+                 "op": ">=", "target": 3.0},
+        "measured": {"speedup_cxl": cxl, "speedup_fallback": fb},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}: depth-8 pipelining cxl={cxl:.2f}x "
+          f"fallback={fb:.2f}x (target 3.0x both)", file=sys.stderr)
 
 
 def _write_cluster_json(rows, path: str, iters: int) -> None:
@@ -86,6 +130,8 @@ def _write_cluster_json(rows, path: str, iters: int) -> None:
         "scaling_8v1": scaling,
         "target_scaling": 4.0,
         "meets_target": scaling >= 4.0,
+        "gate": {"metric": "scaling_8v1", "op": ">=", "target": 4.0},
+        "measured": {"scaling_8v1": scaling},
         "routing": {
             "cxl_connects": int(by_name.get(
                 "cluster_routing_cxl_connects", 0)),
@@ -119,6 +165,9 @@ def _write_noop_json(rows, path: str, iters: int) -> None:
         "target_speedup": 2.0,
         "meets_target": bool(speedup) and
             all(v >= 2.0 for v in speedup.values()),
+        "gate": {"metric": "speedup_vs_legacy (both rows)", "op": ">=",
+                 "target": 2.0},
+        "measured": dict(speedup),
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
@@ -127,11 +176,40 @@ def _write_noop_json(rows, path: str, iters: int) -> None:
           file=sys.stderr)
 
 
+def check_schema(pattern: str = "BENCH_*.json") -> int:
+    """Validate that every benchmark artifact carries the shared schema
+    fields. Returns the number of files checked; raises SystemExit on a
+    malformed artifact."""
+    paths = sorted(glob.glob(pattern))
+    bad = []
+    for p in paths:
+        try:
+            with open(p) as f:
+                doc = json.load(f)
+        except Exception as e:
+            bad.append((p, f"unreadable: {e!r}"))
+            continue
+        missing = [k for k in SCHEMA_FIELDS if k not in doc]
+        if missing:
+            bad.append((p, f"missing fields {missing}"))
+    if bad:
+        for p, why in bad:
+            print(f"schema check FAILED: {p}: {why}", file=sys.stderr)
+        sys.exit(1)
+    print(f"# schema check ok: {len(paths)} artifact(s) carry "
+          f"{list(SCHEMA_FIELDS)}", file=sys.stderr)
+    return len(paths)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--suite", default=None,
-                    help="run only this suite (noop, op, cooldb, ycsb, "
-                         "micro, kv, cluster)")
+                    help="run only this suite "
+                         f"({', '.join(SUITE_NAMES)})")
+    ap.add_argument("--list-suites", action="store_true",
+                    help="print the suite registry and exit")
+    ap.add_argument("--check-schema", action="store_true",
+                    help="validate BENCH_*.json schema fields and exit")
     ap.add_argument("--iters", type=int, default=20_000,
                     help="iteration count for the noop RTT rows")
     ap.add_argument("--thr-iters", type=int, default=30_000,
@@ -141,8 +219,16 @@ def main(argv=None) -> None:
                          "(default BENCH_noop.json)")
     args = ap.parse_args(argv)
 
+    if args.list_suites:
+        for key, title in SUITES:
+            print(f"{key:10s} {title}")
+        return
+    if args.check_schema:
+        check_schema()
+        return
+
     from . import cluster, cooldb, kv_handoff, marshal, microservices, \
-        noop_rtt, op_latency, ycsb_kv
+        noop_rtt, op_latency, pipeline, ycsb_kv
 
     def noop_bench():
         return noop_rtt.bench(n=args.iters, thr_iters=args.thr_iters)
@@ -156,16 +242,23 @@ def main(argv=None) -> None:
         # the serialized arm is slow by design; 4000 pairs is plenty
         return marshal.bench(n=min(args.iters, 4000))
 
-    suites = [
-        ("noop", "noop_rtt (Table 1a)", noop_bench),
-        ("op", "op_latency (Table 1b)", op_latency.bench),
-        ("marshal", "marshal (Fig. 11 typed data plane)", marshal_bench),
-        ("cooldb", "cooldb (Fig. 11)", cooldb.bench),
-        ("ycsb", "ycsb_kv (Figs. 9/10)", ycsb_kv.bench),
-        ("micro", "microservices (Figs. 12/13)", microservices.bench),
-        ("kv", "kv_handoff (pod-scale)", kv_handoff.bench),
-        ("cluster", "cluster (§4.6 router + ServerLoop)", cluster_bench),
-    ]
+    def pipeline_bench():
+        # the sequential arms pay a back-off/link latency per call by
+        # design; 1500 per-arm calls give a stable median-of-pairs
+        return pipeline.bench(iters=min(args.iters, 1500))
+
+    benches = {
+        "noop": noop_bench,
+        "op": op_latency.bench,
+        "marshal": marshal_bench,
+        "pipeline": pipeline_bench,
+        "cooldb": cooldb.bench,
+        "ycsb": ycsb_kv.bench,
+        "micro": microservices.bench,
+        "kv": kv_handoff.bench,
+        "cluster": cluster_bench,
+    }
+    suites = [(k, title, benches[k]) for k, title in SUITES]
     if args.suite is not None:
         suites = [s for s in suites if s[0] == args.suite]
         if not suites:
@@ -199,6 +292,11 @@ def main(argv=None) -> None:
                                  and args.json != NOOP_JSON_DEFAULT) \
                 else MARSHAL_JSON_DEFAULT
             _write_marshal_json(rows, path, min(args.iters, 4000))
+        elif key == "pipeline":
+            path = args.json if (args.suite == "pipeline"
+                                 and args.json != NOOP_JSON_DEFAULT) \
+                else PIPELINE_JSON_DEFAULT
+            _write_pipeline_json(rows, path, min(args.iters, 1500))
     if failures:
         sys.exit(1)
 

@@ -1,71 +1,95 @@
-"""Cluster routing walkthrough — §4.6/§4.7 end to end.
+"""Cluster routing walkthrough — §4.6/§4.7 end to end, on service stubs.
 
-Three acts, all through ONE typed call surface (``conn.invoke``):
+Four acts, all through ONE declarative surface (``router.stub``):
 
 1. a server registers ``/pod0/kv/shard3`` with the cluster router and a
-   same-pod client connects by name → the router hands out the CXL ring
-   transport and invoke passes a pointer to a marshalled graph (zero
-   serialization);
-2. a client in another pod connects to the SAME name → the router wires
-   it over the RDMA-style fallback transport and the SAME invoke
+   same-pod client gets a stub by name → the router hands out the CXL
+   ring transport and ``stub.get(21)`` passes a pointer to a marshalled
+   graph (zero serialization);
+2. a client in another pod stubs the SAME name → the router wires it
+   over the RDMA-style fallback transport and the SAME method call
    transparently serializes the arguments by value (§5.6 copy
    semantics) — no caller change;
-3. the serving process "crashes" (stops heartbeating), its lease lapses,
-   and the client's next invoke transparently re-marshals against a
+3. pipelined futures: ``stub.get.future(...)`` keeps 4 requests in
+   flight and ``gather`` drains them as they complete — on the fallback
+   route the whole batch crosses the wire in one flight;
+4. the serving process "crashes" (stops heartbeating), its lease lapses,
+   and the client's next call transparently re-marshals against a
    replica (plain-value arguments reference nothing in the dead heap,
    so the retry is safe — something the raw pointer API cannot do).
 
 Run:  PYTHONPATH=src python examples/cluster_demo.py
 """
 
-from repro.core import Channel, ClusterRouter, Orchestrator, RPC, ServerLoop
+from repro.core import (
+    Channel,
+    ClusterRouter,
+    Orchestrator,
+    RPC,
+    gather,
+    service,
+)
 
-FN_GET = 1
 
+@service(name="kv")
+class KVShard:
+    """A shard service: method names are the wire identity, so every
+    replica that serves this class answers the same stable fn ids."""
 
-def handler_for(shard: str):
-    def get(ctx, args):
-        return args[0] * 2  # the "lookup"
-    get.shard = shard
-    return get
+    def __init__(self, shard: str):
+        self.shard = shard
+
+    def get(self, ctx, key):
+        return key * 2  # the "lookup"
 
 
 def main() -> None:
-    # -- act 1: same-pod client → CXL ring -------------------------------
+    # -- act 1: same-pod stub → CXL ring ---------------------------------
     clock = [0.0]
     orch = Orchestrator(clock=lambda: clock[0], lease_ttl=5.0)
     router = ClusterRouter(orch)
 
     primary = RPC(orch, pid=10).open("/pod0/kv/shard3", heap_pages=128)
-    primary.add_typed(FN_GET, handler_for("primary"))
+    primary.serve(KVShard("primary"))
     router.register("/pod0/kv/shard3", primary, pod="pod0")
 
     replica = RPC(orch, pid=11).open("/pod1/kv/shard3-r1", heap_pages=128)
-    replica.add_typed(FN_GET, handler_for("replica"))
+    replica.serve(KVShard("replica"))
     router.register("/pod0/kv/shard3", replica, pod="pod1")
 
     loop = Channel.serve_all([primary, replica])
 
-    local = router.connect("/pod0/kv/shard3", pid=20, pod="pod0")
-    print(f"[pod0 client] transport={local.transport:9s} "
-          f"invoke get(21) -> {local.invoke(FN_GET, 21, timeout=10.0)} "
-          f"(pointer-passing, {local.marshal_bytes}B marshalled)")
+    local = router.stub("/pod0/kv/shard3", KVShard, pid=20, pod="pod0")
+    print(f"[pod0 client] transport={local.connection.transport:9s} "
+          f"stub.get(21) -> {local.get(21, timeout=10.0)} "
+          f"(pointer-passing, {local.connection.marshal_bytes}B marshalled)")
 
-    # -- act 2: cross-pod client, SAME surface → fallback + copy ----------
-    remote = router.connect("/pod0/kv/shard3", pid=30, pod="pod7")
-    print(f"[pod7 client] transport={remote.transport:9s} "
-          f"invoke get(21) -> {remote.invoke(FN_GET, 21)} "
-          f"(serialized by value; wire stats: {remote.target.stats()})")
+    # -- act 2: cross-pod stub, SAME surface → fallback + copy ------------
+    remote = router.stub("/pod0/kv/shard3", KVShard, pid=30, pod="pod7")
+    print(f"[pod7 client] transport={remote.connection.transport:9s} "
+          f"stub.get(21) -> {remote.get(21)} "
+          f"(serialized by value; wire stats: "
+          f"{remote.connection.target.stats()})")
 
-    # -- act 3: primary crashes → lease lapse → failover ------------------
+    # -- act 3: pipelined futures on both routes --------------------------
+    futs = [local.get.future(i) for i in range(4)]
+    print(f"[pod0 client] 4 futures in flight -> {gather(futs)}")
+    flights0 = remote.connection.target.n_flushes
+    futs = [remote.get.future(i) for i in range(4)]
+    print(f"[pod7 client] 4 futures in flight -> {gather(futs)} "
+          f"(batch crossed in "
+          f"{remote.connection.target.n_flushes - flights0} wire flight)")
+
+    # -- act 4: primary crashes → lease lapse → failover ------------------
     router.mark_crashed(10)             # pid 10 stops heartbeating
     for t in (2.5, 5.0, 7.5, 10.0):     # librpcool pumps at ttl/2
         clock[0] = t
         router.pump()
-    # plain-value invoke re-marshals against the replica automatically
-    print(f"[pod0 client] after crash: invoke get(50) -> "
-          f"{local.invoke(FN_GET, 50, timeout=10.0)} "
-          f"transport={local.transport} failovers={local.failovers}")
+    # plain-value stub calls re-marshal against the replica automatically
+    print(f"[pod0 client] after crash: stub.get(50) -> "
+          f"{local.get(50, timeout=10.0)} "
+          f"transport={local.connection.transport} "
+          f"failovers={local.connection.failovers}")
     print(f"[router] {router.stats()}")
 
     loop.stop()

@@ -1,13 +1,13 @@
 """Quickstart: the RPCool core API in five minutes.
 
-Mirrors the paper's Fig. 6 ping-pong on the typed data plane: the
-client ``invoke``s plain Python values, the marshaller materializes them
-once as a pointer-rich ``containers`` graph in shared memory, and the
-handler receives a lazy ``ArgView`` — it dereferences only what it
-touches, with every dereference bounds-checked when sandboxed. Then the
-lower-level machinery the typed surface rides on: seals against sender
-tampering, the sandbox wild-pointer trap, and the raw pointer calling
-convention.
+Top layer first: a ``@service`` class served on a channel, driven from
+a typed stub — sync calls, pipelined futures, per-method options. Then
+the layers the stub rides on, downward: the typed data plane (lazy
+``ArgView`` views over a marshalled ``containers`` graph — the paper's
+Fig. 6 ping-pong with zero serialization), and finally the raw
+machinery: seals against sender tampering, the sandbox wild-pointer
+trap, and the raw integer-``fn_id`` pointer calling convention — the
+documented low-level escape hatch.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -19,15 +19,51 @@ from repro.core import (
     RPC,
     RpcError,
     SealedPageError,
+    ServiceStub,
     build_graph,
+    gather,
+    method,
+    service,
+    service_def,
 )
 from repro.core import containers as C
+
+
+@service
+class PingService:
+    """Method names ARE the wire identity (stable hashed fn ids); the
+    options live with the method, not at every call site."""
+
+    def bump(self, ctx, doc):
+        assert doc["op"] == "ping"     # lazy view: ONE field dereferenced
+        return doc["n"] + 1
+
+    @method(sealed=True, sandboxed=True, deadline=5.0)
+    def secure_bump(self, ctx, doc):
+        return doc["n"] + 1
 
 
 def main() -> None:
     orch = Orchestrator()
 
-    # ---- server (Fig. 6 left) -------------------------------------------
+    # ---- the service layer (the five-line version) ----------------------
+    channel0 = RPC(orch, pid=101).open("pingsvc")
+    channel0.serve(PingService())
+    conn0 = RPC(orch, pid=201).connect("pingsvc")
+    stub = ServiceStub(conn0, service_def(PingService))
+
+    print("stub sync call:",
+          stub.bump({"op": "ping", "n": 41}, inline=True))
+    print("stub sealed+sandboxed method:",
+          stub.secure_bump({"op": "ping", "n": 41}, inline=True))
+
+    # pipelined futures: 8 in flight on one connection, drained as they
+    # complete (the server here is this thread, so serve_many drains)
+    futs = [stub.bump.future({"op": "ping", "n": i}) for i in range(8)]
+    channel0.serve_many()
+    print("8 pipelined futures:", gather(futs))
+
+    # ---- the typed data plane underneath (Fig. 6) -----------------------
     server = RPC(orch, pid=100)
     channel = server.open("mychannel")
 
@@ -42,8 +78,8 @@ def main() -> None:
     client = RPC(orch, pid=200)
     conn = client.connect("mychannel")
 
-    # typed zero-copy RPC: the document is materialized once in shared
-    # memory and the argument on the wire is a single pointer
+    # typed zero-copy RPC on a raw fn id: the document is materialized
+    # once in shared memory and the argument on the wire is one pointer
     ret = conn.invoke(100, {"op": "ping", "n": 41,
                             "payload": list(range(32))},
                       sealed=True, sandboxed=True, inline=True)

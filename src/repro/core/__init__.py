@@ -24,6 +24,7 @@ from . import addr
 from .errors import (
     AllocationError,
     ChannelError,
+    DeadlineExceeded,
     InvalidPointer,
     LeaseExpired,
     OwnershipMiss,
@@ -48,20 +49,40 @@ from .channel import (
     RpcError,
     ServerCtx,
     ServerLoop,
+    E_DEADLINE,
     F_BYVAL,
+    F_DEADLINE,
     F_SANDBOXED,
     F_SEALED,
     F_TYPED,
 )
 from .fallback import DSMLink, DSMNode, FallbackConnection
-from .router import ClusterRouter, Endpoint, RoutedConnection
+from .router import ClusterRouter, Endpoint, RoutedConnection, \
+    RoutedRpcFuture
 from . import containers, serial
 from . import marshal
-from .marshal import ArgView, GraphRef, build_graph
+from .marshal import ArgView, FallbackRpcFuture, GraphRef, RpcFuture, \
+    build_graph, gather
+from . import service as service_mod
+from .service import (
+    DeadlineEnforcer,
+    Interceptor,
+    MethodSpec,
+    RetryInterceptor,
+    ServiceDef,
+    ServiceStub,
+    StatsInterceptor,
+    StubMethod,
+    method,
+    service,
+    service_def,
+    stable_fn_id,
+)
 
 __all__ = [
     "addr",
-    "AllocationError", "ChannelError", "InvalidPointer", "LeaseExpired",
+    "AllocationError", "ChannelError", "DeadlineExceeded",
+    "InvalidPointer", "LeaseExpired",
     "OwnershipMiss", "QuotaExceeded", "RPCoolError", "SandboxViolation",
     "SealedPageError", "SealViolation",
     "PERM_SEALED", "SharedHeap",
@@ -71,10 +92,14 @@ __all__ = [
     "Lease", "Orchestrator",
     "BusyWaitPolicy", "Channel", "Connection", "DescriptorRing",
     "RING_DTYPE", "RPC", "RpcError",
-    "ServerCtx", "ServerLoop", "F_BYVAL", "F_SANDBOXED", "F_SEALED",
-    "F_TYPED",
+    "ServerCtx", "ServerLoop", "E_DEADLINE", "F_BYVAL", "F_DEADLINE",
+    "F_SANDBOXED", "F_SEALED", "F_TYPED",
     "DSMLink", "DSMNode", "FallbackConnection",
-    "ClusterRouter", "Endpoint", "RoutedConnection",
+    "ClusterRouter", "Endpoint", "RoutedConnection", "RoutedRpcFuture",
     "containers", "serial", "marshal",
-    "ArgView", "GraphRef", "build_graph",
+    "ArgView", "FallbackRpcFuture", "GraphRef", "RpcFuture",
+    "build_graph", "gather",
+    "DeadlineEnforcer", "Interceptor", "MethodSpec", "RetryInterceptor",
+    "ServiceDef", "ServiceStub", "StatsInterceptor", "StubMethod",
+    "method", "service", "service_def", "stable_fn_id",
 ]

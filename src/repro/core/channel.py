@@ -35,7 +35,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from . import addr as gaddr
-from .errors import ChannelError, SandboxViolation, SealViolation
+from .errors import ChannelError, DeadlineExceeded, SandboxViolation, \
+    SealViolation
 from .heap import SharedHeap
 from .orchestrator import Orchestrator
 from .sandbox import SandboxManager
@@ -93,6 +94,10 @@ F_SEALED = 1 << 0
 F_SANDBOXED = 1 << 1
 F_TYPED = 1 << 2     # arg is a typed marshalled request (core/marshal.py)
 F_BYVAL = 1 << 3     # typed request travelled by value (serial-encoded)
+F_DEADLINE = 1 << 4  # the slot's ret word carries the request deadline
+                     # (µs, monotonic clock) at post time; the receiver
+                     # drops expired requests with E_DEADLINE before
+                     # touching the arguments
 
 # RPC status codes
 OK = 0
@@ -100,6 +105,19 @@ E_UNSEALED = 1      # receiver demanded a seal, region was not sealed
 E_SANDBOX = 2       # sandbox violation while processing (SIGSEGV→error)
 E_NOFUNC = 3
 E_EXCEPTION = 4
+E_DEADLINE = 5      # request deadline lapsed (dropped server-side, or a
+                    # handler raised DeadlineExceeded mid-flight)
+
+
+def _now_us() -> int:
+    """Descriptor deadline clock: µs on the monotonic clock (all
+    endpoints are in-process, so one clock serves the whole 'cluster')."""
+    return int(time.monotonic() * 1e6)
+
+
+# client-side wait: GIL-yield polls spent before the §5.8 policy back-off
+# kicks in (a reply that lands promptly never pays a real sleep)
+_WAIT_SPIN_POLLS = 256
 
 
 class BusyWaitPolicy:
@@ -211,10 +229,14 @@ class DescriptorRing:
 
     # -- hot-path scalar ops -------------------------------------------
     def post(self, slot: int, seq: int, fn: int, flags: int, arg: int,
-             seal_idx: int, sc_start: int, sc_count: int) -> None:
-        """Publish a request: one record store (state=R_REQ included)."""
+             seal_idx: int, sc_start: int, sc_count: int,
+             ret: int = 0) -> None:
+        """Publish a request: one record store (state=R_REQ included).
+        ``ret`` is dead weight until completion, so a posted deadline
+        (F_DEADLINE) travels there — zero extra layout, zero extra
+        stores."""
         self.arr[slot] = (seq, fn, flags, arg, seal_idx,
-                          0, R_REQ, OK, sc_start, sc_count)
+                          ret, R_REQ, OK, sc_start, sc_count)
 
     def load(self, slot: int) -> Tuple:
         """Full-slot load as a tuple of Python scalars."""
@@ -255,6 +277,24 @@ class RpcError(ChannelError):
         self.status = status
 
 
+class _Pending:
+    """Client-side record of one tracked async token (``invoke_async``
+    futures; raw ``call_async`` tokens stay registry-free so the no-op
+    hot path pays nothing). Exists so ``close()`` can drain a pending
+    future's scopes exactly once and the reaper can recycle the reply
+    of a cancelled/abandoned token when its completion lands."""
+
+    __slots__ = ("sealed", "seal_idx", "typed", "cleanup")
+
+    def __init__(self, sealed: bool = False, seal_idx: int = 0,
+                 typed: bool = False,
+                 cleanup: Optional[Callable[[], None]] = None):
+        self.sealed = sealed
+        self.seal_idx = seal_idx
+        self.typed = typed
+        self.cleanup = cleanup
+
+
 class Connection:
     """One client's connection: heap + ring + seal/sandbox managers."""
 
@@ -281,6 +321,16 @@ class Connection:
         self._reply_live: Dict[int, Scope] = {}
         self._implicit: Optional[Scope] = None
         self._implicit_scopes: List[Scope] = []
+        # pipelined-futures bookkeeping: every async token is tracked so
+        # close() fails its waiter instead of stranding it, and abandoned
+        # tokens (timeout/cancel) are reaped once their reply lands
+        self._pending_async: Dict[int, _Pending] = {}
+        self._abandoned: Dict[int, _Pending] = {}
+        # §5.8 back-off for client-side waits (shared across this
+        # connection's in-flight futures — one poll duty cycle). Public:
+        # assign a BusyWaitPolicy(fixed_sleep_us=...) to pin the client
+        # poll cadence, exactly like passing a policy to listen().
+        self.wait_policy = BusyWaitPolicy()
         # round-trip stats
         self.n_calls = 0
         self.n_invokes = 0
@@ -323,6 +373,7 @@ class Connection:
         timeout: float = 10.0,
         spin_sleep_us: float = 0.0,
         flags_extra: int = 0,
+        deadline_us: int = 0,
     ) -> int:
         """``conn->call<T>(fn_id, arg)``. Returns the ret GlobalAddr/value.
 
@@ -332,9 +383,11 @@ class Connection:
         (§5.3) rather than releasing on return.
         ``flags_extra``: extra descriptor flag bits (the typed data plane
         sets F_TYPED/F_BYVAL here — see core/marshal.py).
+        ``deadline_us``: absolute request deadline (µs, monotonic); the
+        receiver drops the request with E_DEADLINE once it lapses.
         """
         slot, seal_idx = self._post(fn_id, arg_addr, scope, sealed, sandboxed,
-                                    flags_extra)
+                                    flags_extra, deadline_us)
         # spin for the response (client side of §5.8); time.sleep(0) is the
         # CPython GIL-yield stand-in for a hardware pause-loop. The poll is
         # one u64 word load (state|status) with everything hoisted.
@@ -343,8 +396,16 @@ class Connection:
         widx = ring._w0 + slot * _SLOT_WORDS + _W_STATE
         sleep_s = spin_sleep_us * 1e-6 if spin_sleep_us else 0
         deadline = time.monotonic() + timeout
+        dl_s = deadline_us * 1e-6 if deadline_us else 0.0
+        if dl_s and dl_s < deadline:
+            deadline = dl_s
         while words[widx] & _M32 < R_DONE:
             if time.monotonic() > deadline:
+                if dl_s and deadline == dl_s:
+                    # the REQUEST deadline lapsed, not the caller's
+                    # patience: terminal, never retryable (the budget
+                    # is gone — retrying would mint a fresh one)
+                    raise DeadlineExceeded("RPC deadline lapsed")
                 raise ChannelError(f"RPC {fn_id} timed out")
             time.sleep(sleep_s)
         return self._complete(slot, sealed, seal_idx, batch_release)
@@ -353,7 +414,8 @@ class Connection:
                     scope: Optional[Scope] = None, sealed: bool = False,
                     sandboxed: bool = False,
                     batch_release: bool = False,
-                    flags_extra: int = 0) -> int:
+                    flags_extra: int = 0,
+                    deadline_us: int = 0) -> int:
         """Same data path as ``call`` but the server half runs on this
         thread immediately after the descriptor is posted — the two-core
         zero-scheduling-noise configuration used for RTT microbenchmarks
@@ -361,7 +423,7 @@ class Connection:
         threads would add GIL handoff latency that the hardware does not
         have)."""
         slot, seal_idx = self._post(fn_id, arg_addr, scope, sealed, sandboxed,
-                                    flags_extra)
+                                    flags_extra, deadline_us)
         self.channel._process(self, slot)
         self.ring.head += 1
         return self._complete(slot, sealed, seal_idx, batch_release)
@@ -369,12 +431,25 @@ class Connection:
     def call_async(self, fn_id: int, arg_addr: int = gaddr.NULL,
                    scope: Optional[Scope] = None, sealed: bool = False,
                    sandboxed: bool = False,
-                   flags_extra: int = 0) -> Tuple[int, int]:
+                   flags_extra: int = 0,
+                   deadline_us: int = 0) -> Tuple[int, int]:
         """Post without waiting; returns a (slot, seal_idx) token. Multiple
         RPCs may be in flight on one connection (per-thread MPK permissions
-        make this safe in the paper, §5.2)."""
+        make this safe in the paper, §5.2). Closing the connection fails
+        every outstanding ``wait`` with ``ChannelError`` instead of
+        leaving it to spin on a destroyed ring."""
         return self._post(fn_id, arg_addr, scope, sealed, sandboxed,
-                          flags_extra)
+                          flags_extra, deadline_us)
+
+    def _track_async(self, token: Tuple[int, int], sealed: bool = False,
+                     typed: bool = False,
+                     cleanup: Optional[Callable[[], None]] = None
+                     ) -> "_Pending":
+        """Register close()/reap bookkeeping for an async token (the
+        futures layer calls this; raw tokens stay registry-free)."""
+        p = _Pending(sealed, token[1], typed, cleanup)
+        self._pending_async[token[0]] = p
+        return p
 
     # -- typed data plane (core/marshal.py) -------------------------------
     def invoke(self, fn_id: int, *args, **kw):
@@ -390,31 +465,116 @@ class Connection:
         """
         return _get_marshal().invoke_cxl(self, fn_id, args, **kw)
 
+    def invoke_async(self, fn_id: int, *args, **kw):
+        """Pipelined typed invoke: post now, settle later. Returns an
+        ``RpcFuture``; N futures may be in flight on one connection and
+        complete out of order (``marshal.gather`` drains them as they
+        land). Keywords: ``sealed``, ``sandboxed``, ``deadline``
+        (seconds of budget, propagated into the descriptor), ``timeout``."""
+        return _get_marshal().invoke_async_cxl(self, fn_id, args, **kw)
+
     def invoke_serialized(self, fn_id: int, *args, **kw):
         """The Fig. 11 serializing baseline over the SAME descriptor ring:
         args are ``serial.encode``d, copied into a scope, decoded by the
         receiver — everything the typed pointer path avoids."""
         return _get_marshal().invoke_serialized(self, fn_id, args, **kw)
 
+    def serve(self, instance, interceptors=()):
+        """Register every method of a ``@service``-decorated instance as
+        a typed handler on this connection's channel (see
+        core/service.py). The raw integer ``add``/``add_typed`` API stays
+        as the low-level escape hatch."""
+        return self.channel.serve(instance, interceptors)
+
+    def poll(self, token: Tuple[int, int]) -> bool:
+        """Non-blocking completion probe for an async token (one word
+        load). True once the result may be consumed with ``wait``."""
+        ring = self.ring
+        return ring._words[ring._w0 + token[0] * _SLOT_WORDS + _W_STATE] \
+            & _M32 >= R_DONE
+
     def wait(self, token: Tuple[int, int], sealed: bool = False,
              batch_release: bool = False, timeout: float = 10.0) -> int:
+        if self.closed:
+            raise ChannelError("wait on closed connection")
         slot, seal_idx = token
         ring = self.ring
         words = ring._words
         widx = ring._w0 + slot * _SLOT_WORDS + _W_STATE
-        if words[widx] & _M32 < R_DONE:  # not already done: spin
+        if words[widx] & _M32 < R_DONE:  # not already done: back-off spin
+            # §5.8 on the client side, through the same BusyWaitPolicy
+            # the serve loops use: a bounded GIL-yield spin absorbs
+            # promptly-landing replies (the pipelined steady state pays
+            # nothing beyond the old hard spin), then the policy back-off
+            # takes over so a stalled wait stops burning a core. The
+            # policy's duty sample is one bit per wait — did this wait
+            # overrun its spin budget? — so sustained stalls escalate to
+            # the 5µs/150µs naps while a healthy pipeline keeps spinning.
+            # A fixed-cadence policy (wait_policy with fixed_sleep_us)
+            # skips the spin budget: the caller pinned the poll interval.
+            policy = self.wait_policy
             deadline = time.monotonic() + timeout
+            spins = _WAIT_SPIN_POLLS if policy.fixed is None else 0
+            overran = spins == 0
             while words[widx] & _M32 < R_DONE:
                 if time.monotonic() > deadline:
                     raise ChannelError("RPC timed out")
-                time.sleep(0)
+                if self.closed:
+                    raise ChannelError("connection closed while waiting")
+                if spins:
+                    spins -= 1
+                    time.sleep(0)
+                    continue
+                if not overran:
+                    overran = True
+                    policy.record(True)
+                time.sleep(policy.delay_s())
+            if not overran:
+                policy.record(False)
+        if self._pending_async:
+            self._pending_async.pop(slot, None)
         return self._complete(slot, sealed, seal_idx, batch_release)
+
+    # -- abandoned-token reaping (timeout / cancel hygiene) ----------------
+    def _abandon(self, token: Tuple[int, int], pending: "_Pending") -> None:
+        """Give up on an async token (future cancelled or its waiter timed
+        out for good): the slot cannot be un-posted from an SPSC ring, so
+        it is parked and reaped — consumed, reply scope recycled, seal
+        released — as soon as the server's completion lands."""
+        slot = token[0]
+        self._pending_async.pop(slot, None)
+        self._abandoned[slot] = pending
+        self._reap_abandoned()
+
+    def _reap_abandoned(self) -> None:
+        if not self._abandoned:
+            return
+        ring = self.ring
+        for slot in list(self._abandoned):
+            if ring.state_of(slot) < R_DONE:
+                continue   # still in flight; reap on a later pass
+            p = self._abandoned.pop(slot)
+            ret, state, _status = ring.consume(slot)
+            if p.sealed:
+                try:
+                    self.seals.release(p.seal_idx, holder=self.client_pid)
+                except SealViolation:
+                    pass
+            if p.typed and state == R_DONE:
+                _get_marshal()._recycle_reply(self, ret)
+            if p.cleanup is not None:
+                p.cleanup()
+                p.cleanup = None
 
     # -- data-path halves ---------------------------------------------------
     def _post(self, fn_id, arg_addr, scope, sealed, sandboxed,
-              flags_extra=0):
+              flags_extra=0, deadline_us=0):
         if self.closed:
             raise ChannelError("call on closed connection")
+        if self._abandoned:
+            self._reap_abandoned()   # free slots stranded by cancel/timeout
+        if deadline_us:
+            flags_extra |= F_DEADLINE
         ring = self.ring
         seq = self._next_seq
         slot = seq % ring.capacity
@@ -438,7 +598,7 @@ class Connection:
             self._next_seq = seq + 1
             ring.arr[slot] = (seq, fn_id,
                               (F_SANDBOXED if sandboxed else 0) | flags_extra,
-                              arg_addr, 0, 0, R_REQ, OK, 0, 0)
+                              arg_addr, 0, deadline_us, R_REQ, OK, 0, 0)
             ch = self.channel
             if ch._parked:  # doorbell only when the server is waiting on it
                 ch._event.set()
@@ -456,7 +616,7 @@ class Connection:
 
         self._next_seq = seq + 1
         ring.post(slot, seq, fn_id, flags, arg_addr, seal_idx,
-                  sc_start, sc_count)
+                  sc_start, sc_count, ret=deadline_us)
         ch = self.channel
         if ch._parked:
             ch._event.set()
@@ -473,6 +633,8 @@ class Connection:
                 self.seals.release(seal_idx, holder=self.client_pid)
 
         if state == R_ERR:
+            if status == E_DEADLINE:
+                raise DeadlineExceeded("RPC deadline lapsed")
             raise RpcError(status)
         return ret
 
@@ -480,6 +642,18 @@ class Connection:
     def close(self) -> None:
         if not self.closed:
             self.closed = True
+            # drain every tracked in-flight future FIRST: ``closed`` makes
+            # a later wait()/result() raise ChannelError instead of
+            # spinning on a torn-down ring, and each token's marshal
+            # scope is drained exactly once (the cleanup callback is
+            # one-shot) before the pools it belongs to are destroyed
+            # below.
+            for p in (*self._pending_async.values(),
+                      *self._abandoned.values()):
+                if p.cleanup is not None:
+                    p.cleanup()
+                    p.cleanup = None
+            self._abandoned.clear()
             # return every connection-owned page range to the heap: the
             # implicit new_bytes scopes, the marshal scope pool, and any
             # reply scopes the server handed back through this client.
@@ -538,6 +712,17 @@ class Channel:
         (``invoke``) and the serialized (``invoke_serialized`` /
         fallback-route) forms of the request."""
         self.functions[fn_id] = _get_marshal().typed_handler(fn)
+
+    def serve(self, instance, interceptors=()):
+        """Register every method of a ``@service``-decorated instance
+        (or anything carrying a ``ServiceDef``) as a typed handler —
+        the declarative face of ``add_typed`` (core/service.py). Returns
+        the ``ServiceDef``. The raw integer ``fn_id`` API above remains
+        the documented low-level escape hatch."""
+        from .service import service_def
+        sdef = service_def(instance)
+        sdef.serve(self, instance, interceptors)
+        return sdef
 
     def accept(self, client_pid: int, ring_capacity: int = 256) -> Connection:
         """Create the connection object for a connecting client."""
@@ -676,6 +861,17 @@ class Channel:
             ring.complete(slot, 0, R_ERR, E_NOFUNC)
             return
 
+        # Deadline gate (pipelined futures): a request whose propagated
+        # deadline lapsed while queued is dropped before its seal/args
+        # are even touched — the client already gave up on it.
+        deadline_us = 0
+        if flags & F_DEADLINE:
+            deadline_us = int(
+                ring._words[ring._w0 + slot * _SLOT_WORDS + _W_RET])
+            if _now_us() > deadline_us:
+                ring.complete(slot, 0, R_ERR, E_DEADLINE)
+                return
+
         # Fig. 8 step 4: verify the seal before touching the arguments.
         if flags & F_SEALED:
             if not conn.seals.is_sealed(seal_idx):
@@ -692,6 +888,7 @@ class Channel:
             conn._ctx = None
             ctx.flags = flags
             ctx.sandbox = None
+        ctx.deadline_us = deadline_us
         try:
             if flags & F_SANDBOXED and not gaddr.is_null(arg):
                 if sc_count:
@@ -708,6 +905,10 @@ class Channel:
         except SandboxViolation:
             # the SIGSEGV→error-reply path (§4.4)
             ret, status, state = 0, E_SANDBOX, R_ERR
+        except DeadlineExceeded:
+            # a handler/interceptor aborting past the budget keeps the
+            # dedicated status so clients see a deadline, not a crash
+            ret, status, state = 0, E_DEADLINE, R_ERR
         except Exception:
             ret, status, state = 0, E_EXCEPTION, R_ERR
 
@@ -874,13 +1075,14 @@ class ServerLoop:
 class ServerCtx:
     """What an RPC handler sees: checked access to the connection heap."""
 
-    __slots__ = ("channel", "conn", "flags", "sandbox")
+    __slots__ = ("channel", "conn", "flags", "sandbox", "deadline_us")
 
     def __init__(self, channel: Channel, conn: Connection, flags: int):
         self.channel = channel
         self.conn = conn
         self.flags = flags
         self.sandbox = None  # set when sandboxed
+        self.deadline_us = 0  # propagated request deadline (0 = none)
 
     def read(self, a: int, nbytes: int):
         if self.sandbox is not None:

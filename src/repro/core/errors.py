@@ -49,6 +49,14 @@ class ChannelError(RPCoolError):
     pass
 
 
+class DeadlineExceeded(ChannelError):
+    """An RPC's propagated deadline lapsed — either the server found the
+    descriptor's deadline word already expired (E_DEADLINE reply, the
+    request is dropped without running the handler) or a handler/
+    interceptor raised past the budget. Not retryable: the budget is
+    gone, so retry layers must let this one through."""
+
+
 class OwnershipMiss(RPCoolError):
     def __init__(self, page: int, msg: str = ""):
         super().__init__(msg or f"page {page} not owned by this node")

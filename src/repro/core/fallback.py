@@ -38,15 +38,22 @@ from . import addr as gaddr
 from .channel import (
     DescriptorRing,
     RING_SLOT_BYTES,
+    F_DEADLINE,
     F_SANDBOXED,
     F_SEALED,
     OK,
     R_DONE,
+    R_EMPTY,
     R_ERR,
     R_REQ,
+    E_DEADLINE,
     E_EXCEPTION,
+    _now_us,
+    _SLOT_WORDS,
+    _W_RET,
 )
-from .errors import ChannelError, OwnershipMiss, SandboxViolation, SealViolation
+from .errors import ChannelError, DeadlineExceeded, OwnershipMiss, \
+    SandboxViolation, SealViolation
 from .heap import SharedHeap
 from .sandbox import SandboxManager
 from .scope import Scope, create_scope, implicit_scope
@@ -54,6 +61,18 @@ from .seal import SealManager
 
 OWNER_CLIENT = 0
 OWNER_SERVER = 1
+
+
+class _FlightEntry:
+    """One staged (posted, not yet flown) pipelined invoke."""
+
+    __slots__ = ("slot", "scope", "sealed", "seal_idx")
+
+    def __init__(self, slot: int, scope, sealed: bool, seal_idx: int):
+        self.slot = slot
+        self.scope = scope
+        self.sealed = sealed
+        self.seal_idx = seal_idx
 
 
 class DSMLink:
@@ -87,6 +106,21 @@ class DSMLink:
         """An explicit message (RPC descriptor / completion) on the wire."""
         self.msgs += 1
         self._wire(nbytes)
+
+    def send_batch(self, count: int, nbytes: int) -> None:
+        """``count`` messages pipelined into ONE wire flight (the cMPI
+        amortization: in-flight requests share the link latency; only
+        the bytes scale with the batch)."""
+        self.msgs += count
+        self._wire(nbytes)
+
+    def claim(self, pages: List[int], to: int) -> None:
+        """Metadata-only ownership flip for pages the claimant is about
+        to fully overwrite (fresh allocations, reply blobs): a real DSM
+        write-allocates such extents without fetching the stale remote
+        copy, so no bytes and no latency go on the wire."""
+        if pages:
+            self.owner[np.asarray(pages)] = to
 
     def migrate(self, pages: List[int], to: int) -> int:
         """Fetch ``pages`` to node ``to`` (§5.6 page-fault service path).
@@ -202,15 +236,28 @@ class FallbackConnection:
         self._reply_live: Dict[int, Scope] = {}
         self._implicit: Optional[Scope] = None
         self._implicit_scopes: List[Scope] = []
+        # pipelined-flight state (invoke_async): descriptors posted but
+        # not yet flown; flush() pipelines them in one wire flight
+        self._flight: List["_FlightEntry"] = []
+        self._flight_errors: Dict[int, BaseException] = {}
+        self._fb_abandoned: List["_FlightEntry"] = []
         self.n_calls = 0
         self.n_invokes = 0
         self.marshal_bytes = 0
+        self.n_flushes = 0
         self.closed = False
 
     # -- client-side API (identical shape to Connection) -----------------
     def create_scope(self, size_bytes: int) -> Scope:
-        return create_scope(self.client.heap, size_bytes,
-                            owner=self.client_pid)
+        scope = create_scope(self.client.heap, size_bytes,
+                             owner=self.client_pid)
+        # write-allocate: a fresh scope's pages have no remote content
+        # worth fetching, so ownership flips by metadata alone — without
+        # this, a page the server owned in a previous life would page-
+        # fault back over the wire just to be overwritten
+        s, n = scope.page_range()
+        self.link.claim(list(range(s, s + n)), to=OWNER_CLIENT)
+        return scope
 
     def new_bytes(self, data: bytes, scope: Optional[Scope] = None) -> int:
         if scope is None:
@@ -239,13 +286,12 @@ class FallbackConnection:
         from .marshal import invoke_fallback
         return invoke_fallback(self, fn_id, args, **kw)
 
-    def call(self, fn_id: int, arg_addr: int = gaddr.NULL,
-             scope: Optional[Scope] = None, sealed: bool = False,
-             sandboxed: bool = False, batch_release: bool = False,
-             flags_extra: int = 0, **_ignored) -> int:
-        """Mirrors ``Connection.call``; extra CXL-tuning kwargs (timeouts,
-        spin intervals) are accepted and ignored — the fallback call is
-        synchronous request/reply over the link."""
+    def _post(self, fn_id: int, arg_addr: int, scope: Optional[Scope],
+              sealed: bool, sandboxed: bool, flags_extra: int,
+              deadline_us: int) -> Tuple[int, int]:
+        """Shared posting half of ``call`` and ``post_async``: claim a
+        ring slot (overflow-checked, seq claimed only on success) and
+        publish the descriptor record. Nothing goes on the wire yet."""
         if self.closed:
             raise ChannelError("call on closed connection")
         flags = flags_extra
@@ -256,19 +302,35 @@ class FallbackConnection:
         if sealed:
             if scope is None:
                 raise SealViolation("sealed call requires a scope")
-            seal_idx = self.seals.seal(scope, holder=self.client_pid)
-            flags |= F_SEALED
         if sandboxed:
             flags |= F_SANDBOXED
+        if deadline_us:
+            flags |= F_DEADLINE
 
         ring = self.ring
         seq = self._next_seq
-        self._next_seq = seq + 1
         slot = seq % ring.capacity
-        if ring.state_of(slot) == R_REQ:
+        if ring.state_of(slot) != R_EMPTY:
             raise ChannelError("ring overflow: too many in-flight RPCs")
+        if sealed:   # seal only after every rejecting path
+            seal_idx = self.seals.seal(scope, holder=self.client_pid)
+            flags |= F_SEALED
+        self._next_seq = seq + 1
         ring.post(slot, seq, fn_id, flags, arg_addr, seal_idx,
-                  sc_start, sc_count)
+                  sc_start, sc_count, ret=deadline_us)
+        return slot, seal_idx
+
+    def call(self, fn_id: int, arg_addr: int = gaddr.NULL,
+             scope: Optional[Scope] = None, sealed: bool = False,
+             sandboxed: bool = False, batch_release: bool = False,
+             flags_extra: int = 0, deadline_us: int = 0,
+             **_ignored) -> int:
+        """Mirrors ``Connection.call``; extra CXL-tuning kwargs (timeouts,
+        spin intervals) are accepted and ignored — the fallback call is
+        synchronous request/reply over the link."""
+        slot, seal_idx = self._post(fn_id, arg_addr, scope, sealed,
+                                    sandboxed, flags_extra, deadline_us)
+        ring = self.ring
         # the descriptor record goes over the wire (§5.6)
         self.link.send_msg(RING_SLOT_BYTES)
         self.link.sync_meta(to=OWNER_SERVER)
@@ -295,9 +357,122 @@ class FallbackConnection:
     # variant is the same entry point (RoutedConnection relies on this)
     call_inline = call
 
+    def invoke_async(self, fn_id: int, *args, **kw):
+        """Pipelined typed invoke over the link: the descriptor and its
+        by-value payload are staged locally and ``flush()``ed in ONE wire
+        flight with every other staged invoke — the cMPI amortization
+        (in-flight requests share the link latency). Same future surface
+        as ``Connection.invoke_async``."""
+        from .marshal import invoke_async_fallback
+        return invoke_async_fallback(self, fn_id, args, **kw)
+
+    def serve(self, instance, interceptors=()):
+        """Declarative service registration — mirror of
+        ``Channel.serve`` (§5.6: identical programmer-facing API)."""
+        from .service import service_def
+        sdef = service_def(instance)
+        sdef.serve(self, instance, interceptors)
+        return sdef
+
+    # -- the pipelined flight (client half of invoke_async) ---------------
+    def post_async(self, fn_id: int, arg_addr: int, scope: Scope,
+                   sealed: bool = False, sandboxed: bool = False,
+                   flags_extra: int = 0, deadline_us: int = 0) -> int:
+        """Stage a descriptor for the next flight; returns its slot."""
+        slot, seal_idx = self._post(fn_id, arg_addr, scope, sealed,
+                                    sandboxed, flags_extra, deadline_us)
+        self._flight.append(_FlightEntry(slot, scope, sealed, seal_idx))
+        return slot
+
+    def in_flight(self, slot: int) -> bool:
+        return any(e.slot == slot for e in self._flight)
+
+    def flush(self) -> int:
+        """Fly the staged batch: ONE descriptor flight out, ONE bulk
+        migration of every argument scope, serve each slot, ONE bulk
+        migration of every reply blob back, ONE completion flight. The
+        link latency is paid per *flight*, not per RPC — that is the
+        entire pipelining win on this transport. Returns the number of
+        RPCs served."""
+        entries, self._flight = self._flight, []
+        if not entries:
+            return 0
+        self.n_flushes += 1
+        link = self.link
+        link.send_batch(len(entries), len(entries) * RING_SLOT_BYTES)
+        link.sync_meta(to=OWNER_SERVER)
+        # requests pipeline: every staged argument scope crosses in one
+        # bulk fetch instead of one page-fault round trip per RPC
+        arg_pages = [p for e in entries
+                     for p in range(e.scope.start_page,
+                                    e.scope.start_page + e.scope.num_pages)
+                     if link.owner[p] != OWNER_SERVER]
+        if arg_pages:
+            link.migrate(arg_pages, to=OWNER_SERVER)
+        ring = self.ring
+        reply_pages: List[int] = []
+        for e in entries:
+            try:
+                self._serve(e.slot)
+            except BaseException as exc:
+                self._flight_errors[e.slot] = exc
+                status = E_DEADLINE if isinstance(exc, DeadlineExceeded) \
+                    else E_EXCEPTION
+                ring.complete(e.slot, 0, R_ERR, status)
+                continue
+            ret = ring._words[ring._w0 + e.slot * _SLOT_WORDS + _W_RET]
+            scope = self._reply_live.get(int(ret))
+            if scope is not None:
+                reply_pages.extend(range(scope.start_page,
+                                         scope.start_page + scope.num_pages))
+        link.send_batch(len(entries), len(entries) * RING_SLOT_BYTES)
+        # replies pipeline back the same way
+        reply_pages = [p for p in reply_pages
+                       if link.owner[p] != OWNER_CLIENT]
+        if reply_pages:
+            link.migrate(reply_pages, to=OWNER_CLIENT)
+        self._reap_abandoned_flight()
+        return len(entries)
+
+    def abandon_flight_entry(self, slot: int, scope: Scope, sealed: bool,
+                             seal_idx: int) -> None:
+        """A flight future was cancelled: its slot is reaped (consumed,
+        reply recycled, scope destroyed) after the next flush serves it."""
+        self._fb_abandoned.append(_FlightEntry(slot, scope, sealed,
+                                               seal_idx))
+
+    def _reap_abandoned_flight(self) -> None:
+        still = []
+        for e in self._fb_abandoned:
+            if self.ring.state_of(e.slot) < R_DONE:
+                still.append(e)
+                continue
+            ret, state, _status = self.ring.consume(e.slot)
+            self._flight_errors.pop(e.slot, None)
+            if e.sealed:
+                try:
+                    self.seals.release(e.seal_idx, holder=self.client_pid)
+                except SealViolation:
+                    pass
+            if state == R_DONE:
+                from .marshal import _recycle_reply
+                _recycle_reply(self, ret)
+            if e.scope.live:
+                e.scope.destroy()
+        self._fb_abandoned = still
+
     def close(self) -> None:
         if not self.closed:
             self.closed = True
+            # fail the staged flight: every unsettled future sees a
+            # ChannelError (its result() checks closed first) and each
+            # staged argument scope is drained exactly once
+            for e in (*self._flight, *self._fb_abandoned):
+                if e.scope.live:
+                    e.scope.destroy()
+            self._flight.clear()
+            self._fb_abandoned.clear()
+            self._flight_errors.clear()
             for s in self._implicit_scopes:
                 if s.live:
                     s.destroy()
@@ -318,6 +493,12 @@ class FallbackConnection:
         fn = self.functions.get(fn_id)
         if fn is None:
             raise ChannelError(f"no function {fn_id}")
+
+        # deadline gate: a request that expired on the wire is dropped
+        # before the server touches a single argument page
+        if flags & F_DEADLINE and _now_us() > _ret:
+            raise DeadlineExceeded(
+                f"RPC {fn_id} deadline lapsed on the link")
 
         ctx = FallbackServerCtx(self, flags)
         if flags & F_SEALED and not self.seals.is_sealed(seal_idx):
@@ -368,13 +549,20 @@ class FallbackServerCtx:
         self.conn.server.write(a, data, pid=self.conn.server_pid)
 
     def _daemon_write(self, a: int, data) -> None:
-        """Privileged runtime store (reply marshalling): faults pages
-        over. Reply scopes are carved from the link's single allocator
-        (the client replica) mid-request, so the allocator metadata is
-        propagated first — the same tiny control message the request
-        path sends (§5.6)."""
-        self.conn.link.sync_meta(to=OWNER_SERVER)
-        self.conn.server.write(a, data, pid=self.conn.server_pid)
+        """Privileged runtime store (reply marshalling): reply scopes are
+        carved from the link's single allocator (the client replica)
+        mid-request, so the allocator metadata is propagated first — the
+        same tiny control message the request path sends (§5.6). The
+        reply extent itself is write-allocated: the blob fully overwrites
+        its single-tenant scope, so ownership flips by metadata instead
+        of fetching the stale client copy just to clobber it."""
+        conn = self.conn
+        conn.link.sync_meta(to=OWNER_SERVER)
+        node = conn.server
+        nbytes = SharedHeap._payload_nbytes(data)
+        p0, p1 = node._page_range(a, max(1, nbytes))
+        conn.link.claim(list(range(p0, p1 + 1)), to=OWNER_SERVER)
+        node.write(a, data, pid=conn.server_pid)
 
     def heap(self) -> SharedHeap:
         return self.conn.server.heap

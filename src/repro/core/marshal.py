@@ -36,12 +36,15 @@ from __future__ import annotations
 import struct
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
+import time
+
 from . import addr as gaddr
 from . import containers as C
 from . import serial
-from .channel import Connection, F_BYVAL, F_SANDBOXED, F_SEALED, F_TYPED
-from .errors import AllocationError, ChannelError, InvalidPointer, \
-    SandboxViolation
+from .channel import Connection, E_DEADLINE, F_BYVAL, F_SANDBOXED, \
+    F_SEALED, F_TYPED, R_DONE, R_ERR, RpcError, _now_us
+from .errors import AllocationError, ChannelError, DeadlineExceeded, \
+    InvalidPointer, SandboxViolation
 from .scope import Scope, ScopePool, create_scope
 
 # Pooled argument scopes: 4 pages (16 KiB with the default page size)
@@ -474,17 +477,248 @@ def typed_handler(fn):
 
 
 # ---------------------------------------------------------------------------
+# pipelined futures (invoke_async / gather)
+# ---------------------------------------------------------------------------
+_PENDING, _DONE, _FAILED, _CANCELLED = range(4)
+
+
+def _deadline_word(deadline: Optional[float]) -> int:
+    """Relative seconds of budget → the descriptor's absolute-µs word."""
+    return 0 if deadline is None else _now_us() + int(deadline * 1e6)
+
+
+class RpcFuture:
+    """One in-flight typed RPC on a CXL ring connection.
+
+    Many futures may be outstanding on one connection (the whole point of
+    per-thread MPK permissions, §5.2) and they complete in whatever order
+    the server drains slots; ``gather`` consumes them as they land. A
+    future owns its marshal scope until settlement: ``result`` releases
+    it back to the pool, ``cancel``/terminal errors release it exactly
+    once, and a wait timeout leaves it alive (the server may still be
+    reading the arguments mid-flight).
+    """
+
+    __slots__ = ("conn", "fn_id", "token", "_scope", "_pooled", "_sealed",
+                 "_timeout", "_deadline_us", "_state", "_value", "_exc",
+                 "_scope_released")
+
+    def __init__(self, conn, fn_id: int, token: Tuple[int, int],
+                 scope: Optional[Scope], pooled: bool, sealed: bool,
+                 timeout: float, deadline_us: int):
+        self.conn = conn
+        self.fn_id = fn_id
+        self.token = token
+        self._scope = scope
+        self._pooled = pooled
+        self._sealed = sealed
+        self._timeout = timeout
+        self._deadline_us = deadline_us
+        self._state = _PENDING
+        self._value = None
+        self._exc: Optional[BaseException] = None
+        self._scope_released = scope is None
+
+    # -- scope hygiene (the one-shot close()/reap cleanup hook) ----------
+    def _release_scope_once(self) -> None:
+        if self._scope_released:
+            return
+        self._scope_released = True
+        scope = self._scope
+        if self._pooled:
+            self.conn._marshal_pool.push(scope)
+        elif scope.live:
+            scope.destroy()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._state = _FAILED
+        self._exc = exc
+        self._release_scope_once()
+
+    # -- the future surface ----------------------------------------------
+    def done(self) -> bool:
+        """Non-blocking: True once ``result`` will not wait."""
+        return self._state != _PENDING or self.conn.poll(self.token)
+
+    def _kick(self) -> None:
+        """Transport hook: push any batched flight onto the wire (no-op
+        on the CXL ring — the descriptor was posted at invoke time)."""
+
+    def cancel(self) -> bool:
+        """Abandon the call. Best-effort (an SPSC slot cannot be
+        un-posted, so the server may still execute the handler); the
+        reply scope and ring slot are reaped the moment the completion
+        lands, and the marshal scope is recycled exactly once."""
+        if self._state != _PENDING:
+            return False
+        conn = self.conn
+        pending = conn._pending_async.get(self.token[0])
+        self._state = _CANCELLED
+        self._exc = ChannelError("future cancelled")
+        if pending is not None:
+            pending.cleanup = self._release_scope_once
+            conn._abandon(self.token, pending)
+        else:
+            self._release_scope_once()
+        return True
+
+    def result(self, timeout: Optional[float] = None):
+        """Block (with the §5.8 client back-off) until the reply lands;
+        returns the decoded value or raises the RPC's error. A timeout
+        raises ``ChannelError`` but leaves the future pending — call
+        again, or ``cancel()`` to hand the slot to the reaper."""
+        if self._state == _DONE:
+            return self._value
+        if self._state != _PENDING:
+            raise self._exc
+        conn = self.conn
+        tmo = self._timeout if timeout is None else timeout
+        if self._deadline_us:
+            tmo = min(tmo, max(0.0,
+                               self._deadline_us * 1e-6 - time.monotonic()))
+        try:
+            ret = conn.wait(self.token, sealed=self._sealed, timeout=tmo)
+        except (DeadlineExceeded, RpcError) as e:
+            self._fail(e)
+            raise
+        except ChannelError as e:
+            if not conn.closed and \
+                    self.token[0] in conn._pending_async:
+                if self._deadline_us and _now_us() > self._deadline_us:
+                    # the REQUEST deadline lapsed mid-wait: terminal.
+                    # The slot cannot be un-posted, so hand it to the
+                    # reaper (scope recycled when the completion lands)
+                    # instead of leaving a zombie waiter.
+                    exc = DeadlineExceeded("RPC deadline lapsed")
+                    self._state = _FAILED
+                    self._exc = exc
+                    pending = conn._pending_async[self.token[0]]
+                    pending.cleanup = self._release_scope_once
+                    conn._abandon(self.token, pending)
+                    raise exc from e
+                raise   # pure wait timeout: still in flight, retryable
+            self._fail(e)
+            raise
+        self._release_scope_once()
+        self._value = _read_reply_graph(conn, ret)
+        self._state = _DONE
+        return self._value
+
+
+def invoke_async_cxl(conn: Connection, fn_id: int, args: Tuple,
+                     sealed: bool = False, sandboxed: bool = False,
+                     deadline: Optional[float] = None,
+                     timeout: float = 10.0) -> RpcFuture:
+    """Pipelined typed invoke on the shared-memory ring: marshal (or
+    pointer-pass a prebuilt graph), post, return — the reply is decoded
+    whenever the future is settled. Up to ring-capacity invokes may be
+    in flight per connection."""
+    deadline_us = _deadline_word(deadline)
+
+    if len(args) == 1 and isinstance(args[0], GraphRef):
+        g = args[0]
+        if g.scope is not None and g.scope.heap is conn.heap:
+            conn.n_invokes += 1
+            token = conn.call_async(fn_id, g.root, scope=g.scope,
+                                    sealed=sealed, sandboxed=sandboxed,
+                                    flags_extra=F_TYPED,
+                                    deadline_us=deadline_us)
+            fut = RpcFuture(conn, fn_id, token, None, False, sealed,
+                            timeout, deadline_us)
+            conn._track_async(token, sealed=sealed, typed=True)
+            return fut
+        args = tuple(g.to_python())
+
+    root, scope, pooled = _pooled_marshal(conn, args, conn.client_pid,
+                                          force_copy=sandboxed or sealed)
+    try:
+        token = conn.call_async(fn_id, root, scope=scope, sealed=sealed,
+                                sandboxed=sandboxed, flags_extra=F_TYPED,
+                                deadline_us=deadline_us)
+    except BaseException:
+        if pooled:
+            conn._marshal_pool.push(scope)
+        else:
+            scope.destroy()
+        raise
+    conn.n_invokes += 1
+    conn.marshal_bytes += scope.used_bytes()
+    fut = RpcFuture(conn, fn_id, token, scope, pooled, sealed,
+                    timeout, deadline_us)
+    # close()/reap cleanup hook: drain this future's scope exactly once
+    conn._track_async(token, sealed=sealed, typed=True,
+                      cleanup=fut._release_scope_once)
+    return fut
+
+
+def gather(futures, timeout: float = 10.0) -> list:
+    """Settle a batch of futures, consuming completions **as they land**
+    (out-of-order draining — a slow first RPC never blocks the reaping
+    of the seven behind it). Returns results in the order given; the
+    first failed future raises after everything already completed was
+    drained."""
+    results = [None] * len(futures)
+    pending = dict(enumerate(futures))
+    failed: Optional[BaseException] = None
+    deadline = time.monotonic() + timeout
+    while pending:
+        progressed = False
+        for i, f in list(pending.items()):
+            if not f.done():
+                continue
+            del pending[i]
+            progressed = True
+            try:
+                results[i] = f.result(timeout=timeout)
+            except BaseException as e:
+                failed = failed or e
+        if not pending:
+            break
+        if failed is not None:
+            break   # drain what's already done, then surface the error
+        if time.monotonic() > deadline:
+            raise ChannelError(f"gather timed out with {len(pending)} "
+                               "futures unsettled")
+        if not progressed:
+            # nothing ready: block on the oldest pending future in a
+            # bounded slice (its result() waits through the connection's
+            # §5.8 wait policy — no busy-poll here) after kicking any
+            # batched flight onto the wire
+            i, f = next(iter(pending.items()))
+            f._kick()
+            slice_s = min(0.05, max(0.005,
+                                    deadline - time.monotonic()))
+            try:
+                results[i] = f.result(timeout=slice_s)
+                del pending[i]
+            except (DeadlineExceeded, RpcError) as e:
+                failed = failed or e
+                del pending[i]
+            except ChannelError:
+                pass   # wait-timeout slice: still in flight, re-loop
+            except BaseException as e:
+                failed = failed or e
+                del pending[i]
+    if failed is not None:
+        raise failed
+    return results
+
+
+# ---------------------------------------------------------------------------
 # invoke — CXL route (pointer passing)
 # ---------------------------------------------------------------------------
 def invoke_cxl(conn: Connection, fn_id: int, args: Tuple,
                sealed: bool = False, sandboxed: bool = False,
                batch_release: bool = False, timeout: float = 10.0,
-               inline: bool = False, spin_sleep_us: float = 0.0):
+               inline: bool = False, spin_sleep_us: float = 0.0,
+               deadline: Optional[float] = None):
     """Typed invoke on the shared-memory ring: materialize-once, pass a
     pointer, decode the marshalled reply."""
     caller = conn.call_inline if inline else conn.call
     kw: Dict[str, Any] = {} if inline else \
         {"timeout": timeout, "spin_sleep_us": spin_sleep_us}
+    if deadline is not None:
+        kw["deadline_us"] = _deadline_word(deadline)
 
     # steady-state hot path: a single pre-built graph in this heap is
     # passed by pointer — zero marshalling work per call
@@ -544,7 +778,7 @@ def _args_to_plain(args: Tuple) -> list:
 def invoke_fallback(conn, fn_id: int, args: Tuple, sealed: bool = False,
                     sandboxed: bool = False, batch_release: bool = False,
                     timeout: float = 10.0, inline: bool = False,
-                    **_ignored):
+                    deadline: Optional[float] = None, **_ignored):
     """Typed invoke over the software-coherent link: same surface, but
     the arguments are serial-encoded and travel by value (one blob copy
     over the wire instead of N page ping-pongs chasing pointers)."""
@@ -559,7 +793,8 @@ def invoke_fallback(conn, fn_id: int, args: Tuple, sealed: bool = False,
                           pid=conn.client_pid)
         ret = conn.call(fn_id, a, scope=scope, sealed=sealed,
                         sandboxed=sandboxed, batch_release=batch_release,
-                        flags_extra=F_TYPED | F_BYVAL)
+                        flags_extra=F_TYPED | F_BYVAL,
+                        deadline_us=_deadline_word(deadline))
         # the reply blob faults its pages back over the link — the copy
         raw = _read_blob(conn.client, ret, conn.client.page_size)
         _recycle_reply(conn, ret)
@@ -568,10 +803,121 @@ def invoke_fallback(conn, fn_id: int, args: Tuple, sealed: bool = False,
         scope.destroy()
 
 
+class FallbackRpcFuture:
+    """A pipelined invoke on the software-coherent link. Same surface as
+    ``RpcFuture``; underneath, the descriptor+payload are *staged* and
+    the whole flight crosses the wire on the first settlement (or an
+    explicit ``conn.flush()``) — N staged invokes share one link-latency
+    round trip instead of paying it N times."""
+
+    __slots__ = ("conn", "fn_id", "slot", "_scope", "_sealed", "_seal_idx",
+                 "_deadline_us", "_state", "_value", "_exc")
+
+    def __init__(self, conn, fn_id: int, slot: int, scope: Scope,
+                 sealed: bool, seal_idx: int, deadline_us: int):
+        self.conn = conn
+        self.fn_id = fn_id
+        self.slot = slot
+        self._scope = scope
+        self._sealed = sealed
+        self._seal_idx = seal_idx
+        self._deadline_us = deadline_us
+        self._state = _PENDING
+        self._value = None
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        if self._state != _PENDING:
+            return True
+        return not self.conn.in_flight(self.slot) and \
+            self.conn.ring.state_of(self.slot) >= R_DONE
+
+    def _kick(self) -> None:
+        self.conn.flush()
+
+    def cancel(self) -> bool:
+        if self._state != _PENDING:
+            return False
+        self._state = _CANCELLED
+        self._exc = ChannelError("future cancelled")
+        self.conn.abandon_flight_entry(self.slot, self._scope,
+                                       self._sealed, self._seal_idx)
+        return True
+
+    def result(self, timeout: Optional[float] = None):
+        if self._state == _DONE:
+            return self._value
+        if self._state != _PENDING:
+            raise self._exc
+        conn = self.conn
+        if conn.closed:
+            self._state = _FAILED
+            self._exc = ChannelError(
+                "connection closed with the RPC in flight")
+            raise self._exc
+        if conn.in_flight(self.slot):
+            conn.flush()
+        ret, state, status = conn.ring.consume(self.slot)
+        if self._sealed:
+            conn.seals.release(self._seal_idx, holder=conn.client_pid)
+        try:
+            exc = conn._flight_errors.pop(self.slot, None)
+            if exc is not None:
+                raise exc
+            if state == R_ERR:
+                raise DeadlineExceeded("RPC deadline lapsed") \
+                    if status == E_DEADLINE else RpcError(status)
+            # the reply pages were bulk-migrated back by the flush; this
+            # read is local (a straggler still faults correctly)
+            raw = _read_blob(conn.client, ret, conn.client.page_size)
+            _recycle_reply(conn, ret)
+            self._value = serial.decode(raw)
+        except BaseException as e:
+            self._state = _FAILED
+            self._exc = e
+            raise
+        finally:
+            if self._scope.live:
+                self._scope.destroy()
+            conn.n_calls += 1
+        self._state = _DONE
+        return self._value
+
+
+def invoke_async_fallback(conn, fn_id: int, args: Tuple,
+                          sealed: bool = False, sandboxed: bool = False,
+                          deadline: Optional[float] = None,
+                          timeout: float = 10.0,
+                          **_ignored) -> FallbackRpcFuture:
+    """Stage a typed by-value invoke for the next pipelined flight (§5.6
+    copy semantics, cMPI-style latency amortization)."""
+    payload = serial.encode(_args_to_plain(args))
+    nbytes = _BLOB_HDR.size + len(payload)
+    scope = conn.create_scope(nbytes)
+    deadline_us = _deadline_word(deadline)
+    try:
+        a = scope.alloc(nbytes)
+        conn.client.write(a, _BLOB_HDR.pack(len(payload)) + payload,
+                          pid=conn.client_pid)
+        slot = conn.post_async(fn_id, a, scope, sealed=sealed,
+                               sandboxed=sandboxed,
+                               flags_extra=F_TYPED | F_BYVAL,
+                               deadline_us=deadline_us)
+    except BaseException:
+        scope.destroy()
+        raise
+    conn.n_invokes += 1
+    conn.marshal_bytes += len(payload)
+    seal_idx = conn.ring.seal_idx[slot]
+    return FallbackRpcFuture(conn, fn_id, slot, scope, sealed,
+                             int(seal_idx), deadline_us)
+
+
 def invoke_serialized(conn: Connection, fn_id: int, args: Tuple,
                       sealed: bool = False, sandboxed: bool = False,
                       timeout: float = 10.0, inline: bool = False,
-                      spin_sleep_us: float = 0.0):
+                      spin_sleep_us: float = 0.0,
+                      deadline: Optional[float] = None):
     """The serializing baseline on the SAME CXL descriptor ring: encode,
     copy the blob through shared memory, full decode on the receiver,
     encode+decode the reply. Everything Fig. 11 shows RPCool avoiding,
@@ -579,6 +925,8 @@ def invoke_serialized(conn: Connection, fn_id: int, args: Tuple,
     caller = conn.call_inline if inline else conn.call
     kw: Dict[str, Any] = {} if inline else \
         {"timeout": timeout, "spin_sleep_us": spin_sleep_us}
+    if deadline is not None:
+        kw["deadline_us"] = _deadline_word(deadline)
     payload = serial.encode(_args_to_plain(args))
     nbytes = _BLOB_HDR.size + len(payload)
 

@@ -41,7 +41,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from . import addr as gaddr
 from .channel import Channel, Connection
-from .errors import ChannelError
+from .errors import ChannelError, DeadlineExceeded
 from .fallback import FallbackConnection
 from .orchestrator import Orchestrator
 from .scope import Scope
@@ -143,6 +143,20 @@ class ClusterRouter:
             self._conns.append(rc)
             self._track(pid)
         return rc
+
+    def stub(self, name: str, service, pid: int, ring_capacity: int = 256,
+             pod: Optional[str] = None, interceptors=()):
+        """Connect ``pid`` to endpoint ``name`` and wrap the routed
+        connection in a typed ``ServiceStub`` for ``service`` (a
+        ``@service`` class/instance or a ``ServiceDef``): every method
+        becomes a callable proxy (``stub.get(k)`` / ``stub.get.future(k)``)
+        that rides the route the registry picked — CXL pointer passing in
+        pod, by-value fallback across pods, transparent failover in
+        between. The raw ``connect``+``invoke`` surface stays underneath
+        as the escape hatch (``stub.connection``)."""
+        from .service import ServiceStub, service_def
+        conn = self.connect(name, pid, ring_capacity, pod)
+        return ServiceStub(conn, service_def(service), interceptors)
 
     def stats(self) -> Dict[str, int]:
         return {
@@ -355,6 +369,38 @@ class RoutedConnection:
                 return self._ensure().invoke(fn_id, *args, **kw)
             raise
 
+    def invoke_serialized(self, fn_id: int, *args, **kw):
+        """The by-value form bound to the endpoint name: the Fig. 11
+        serializing baseline on a CXL route, the native copy semantics on
+        a fallback route. Always failover-retryable (a serialized request
+        references nothing in any heap)."""
+        target = self._ensure()
+        try:
+            if self.transport == "cxl":
+                return target.invoke_serialized(fn_id, *args, **kw)
+            return target.invoke(fn_id, *args, **kw)
+        except DeadlineExceeded:
+            raise
+        except ChannelError:
+            if self.generation != self.endpoint.generation:
+                return self.invoke_serialized(fn_id, *args, **kw)
+            raise
+
+    def invoke_async(self, fn_id: int, *args, **kw):
+        """Pipelined typed invoke bound to the endpoint *name* — the same
+        future surface on every route (CXL ring posts now / fallback
+        stages a flight). The returned future is failover-aware: if the
+        endpoint fails over while the call is in flight and the arguments
+        are plain values (nothing pinned in the dead heap), settling the
+        future transparently re-invokes against the replica."""
+        target = self._ensure()
+        self._check_graph_args(target, args)
+        from .marshal import GraphRef
+        retryable = not any(isinstance(a, GraphRef) for a in args)
+        return RoutedRpcFuture(self, fn_id, args, kw,
+                               target.invoke_async(fn_id, *args, **kw),
+                               retryable)
+
     def _check_graph_args(self, target, args) -> None:
         """A GraphRef built in the heap of a target this handle has since
         failed away from is stale: that heap is lease-reclaimed, and
@@ -443,3 +489,70 @@ class RoutedConnection:
             finally:
                 self.target = None
                 self.router._drop(self)
+
+
+class RoutedRpcFuture:
+    """A pipelined invoke bound to an endpoint *name*: wraps the live
+    target's future and, on a failover mid-flight, re-invokes plain-value
+    argument sets against the replica (re-running the routing decision)
+    instead of surfacing the dead server's error. GraphRef-pinned calls
+    and lapsed deadlines surface — the first references a reclaimed heap,
+    the second has no budget left to retry with."""
+
+    __slots__ = ("rc", "fn_id", "args", "kw", "inner", "retryable",
+                 "_settled", "_value")
+
+    def __init__(self, rc: RoutedConnection, fn_id: int, args, kw,
+                 inner, retryable: bool):
+        self.rc = rc
+        self.fn_id = fn_id
+        self.args = args
+        self.kw = kw
+        self.inner = inner
+        self.retryable = retryable
+        self._settled = False
+        self._value = None
+
+    def done(self) -> bool:
+        return self._settled or self.inner.done()
+
+    def _kick(self) -> None:
+        self.inner._kick()
+
+    def cancel(self) -> bool:
+        if self._settled:
+            return False
+        cancelled = self.inner.cancel()
+        if cancelled:
+            # a cancelled call must never re-run: without this, a
+            # failover between cancel() and result() would swallow the
+            # inner 'future cancelled' error and re-invoke the RPC
+            self.retryable = False
+        return cancelled
+
+    def result(self, timeout: Optional[float] = None):
+        if self._settled:
+            return self._value
+        rc = self.rc
+        try:
+            if self.retryable and not rc.closed and \
+                    rc.generation != rc.endpoint.generation:
+                # the endpoint already failed over: give the dead ring
+                # one brief drain chance (the reply may have landed
+                # pre-crash), then fall through to the replica retry
+                # instead of burning the full wait timeout
+                self._value = self.inner.result(0.05)
+            else:
+                self._value = self.inner.result(timeout)
+        except DeadlineExceeded:
+            raise
+        except ChannelError:
+            if not self.retryable or rc.closed or \
+                    rc.generation == rc.endpoint.generation:
+                raise
+            # mid-flight failover: the token names the dead server's
+            # ring — re-marshal against the replica (sync; the pipeline
+            # is gone with the old ring anyway)
+            self._value = rc.invoke(self.fn_id, *self.args, **self.kw)
+        self._settled = True
+        return self._value

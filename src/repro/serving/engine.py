@@ -30,6 +30,7 @@ import numpy as np
 from ..core.channel import BusyWaitPolicy, RPC, RpcError, ServerLoop
 from ..core.orchestrator import Orchestrator
 from ..core.router import ClusterRouter
+from ..core.service import method, service, service_def
 from ..models.config import ModelConfig
 from ..models.model import build_model
 from .kv_pool import PagedKVPool, PoolConfig
@@ -39,7 +40,31 @@ from .paged_model import (
     prefill_kv,
 )
 
+# the raw-fn_id escape hatch id the service method is ALSO pinned to,
+# so pre-stub clients (and tests) keep calling the same wire id
 FN_ATTACH = 100
+
+
+@service(name="decode")
+class DecodeService:
+    """The decode worker's RPC surface: one sealed+sandboxed method that
+    adopts a prefilled request by pointer set (§4.5 handoff). Declared
+    as a service so clients drive it through a stub by *name*; the fn id
+    is pinned to the historical FN_ATTACH for raw-API back-compat."""
+
+    def __init__(self, engine: "ServeEngine"):
+        self._engine = engine
+
+    @method(fn_id=FN_ATTACH, sealed=True, sandboxed=True, deadline=30.0)
+    def attach(self, ctx, rid, prompt_len, pages):
+        """Verify + adopt. Runs sandboxed over the scope — every
+        block-table dereference is bounds-checked (§4.3)."""
+        engine = self._engine
+        pages = pages.to_python()     # the block table — no KV copied
+        req = engine._pending_attach
+        assert req.rid == rid and req.pages == pages
+        engine.active.append(req)
+        return 0
 
 
 @dataclass
@@ -81,10 +106,15 @@ class ServeEngine:
         srv = RPC(self.orch, pid=self.server_pid)
         self.endpoint_name = f"/{pod}/decode"
         self.channel = srv.open(self.endpoint_name, heap_pages=256)
-        self.channel.add_typed(FN_ATTACH, self._attach_rpc)
+        self.service = DecodeService(self)
+        self.channel.serve(self.service)   # registers decode.attach
         self.router.register(self.endpoint_name, self.channel, pod=pod)
-        self.conn = self.router.connect(self.endpoint_name,
-                                        pid=self.client_pid, pod=pod)
+        # the prefill worker drives the decode worker through a service
+        # stub resolved by NAME; the router picks the transport (same
+        # pod ⇒ the zero-copy CXL ring)
+        self.stub = self.router.stub(self.endpoint_name, DecodeService,
+                                     pid=self.client_pid, pod=pod)
+        self.conn = self.stub.connection
         assert self.conn.transport == "cxl"  # same pod ⇒ shared memory
         # optionally serve FN_ATTACH from a dedicated ServerLoop thread
         # (the cluster deployment shape) instead of inline on the caller
@@ -118,33 +148,22 @@ class ServeEngine:
 
     # -- the RPCool handoff ----------------------------------------------------
     def _handoff(self, req: Request) -> None:
-        """Prefill side: seal the pages, typed-invoke the block table.
+        """Prefill side: seal the pages, stub-invoke the block table.
 
-        The argument tuple (rid, prompt length, page-pointer list) is
-        marshalled once into a pooled scope as a ``containers`` graph
-        and travels as a single GlobalAddr — the typed data plane, not
-        hand-rolled struct packing."""
+        ``stub.attach`` is ``decode.attach`` on the wire: the argument
+        tuple (rid, prompt length, page-pointer list) is marshalled once
+        into a pooled scope as a ``containers`` graph and travels as a
+        single GlobalAddr; the method's options (sealed, sandboxed,
+        30 s deadline) come from the service declaration."""
         # 1. seal the KV pages themselves (pool heap) for the flight
         req.seal_idxs = self.pool.seal_seq(req.pages, holder=self.client_pid)
         # 2. the RPC (arg scope sealed too, sandboxed server); with a
         # serving thread the call crosses threads, else it runs inline
         b0 = self.conn.marshal_bytes
-        self.conn.invoke(FN_ATTACH, req.rid, len(req.prompt), req.pages,
-                         sealed=True, sandboxed=True, timeout=30.0,
-                         inline=self.serve_loop is None)
+        self.stub.attach(req.rid, len(req.prompt), req.pages,
+                         timeout=30.0, inline=self.serve_loop is None)
         # tiny — the marshalled pointers, not KV bytes
         self.handoff_bytes += self.conn.marshal_bytes - b0
-
-    def _attach_rpc(self, ctx, args) -> int:
-        """Decode side: verify + adopt. Runs sandboxed over the scope —
-        every block-table dereference is bounds-checked (§4.3)."""
-        rid = args[0]
-        pages = args[2].to_python()   # the block table — no KV copied
-        # adopt into active set (the block table itself, by pointer)
-        req = self._pending_attach
-        assert req.rid == rid and req.pages == pages
-        self.active.append(req)
-        return 0
 
     # -- engine loop --------------------------------------------------------
     def _admit(self) -> int:

@@ -1,0 +1,58 @@
+"""Committed BENCH_*.json artifacts must carry the shared schema.
+
+Every benchmark trajectory file declares ``suite`` (what ran), ``gate``
+(the metric/op/target it is held to) and ``measured`` (the headline
+numbers) — so tooling (and the CI schema step, which runs the same
+``benchmarks.run.check_schema``) can audit any artifact without
+suite-specific knowledge. This test pins the committed artifacts at the
+repo root to that contract.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+ARTIFACTS = sorted(REPO_ROOT.glob("BENCH_*.json"))
+
+# the single source of truth lives in the harness
+from benchmarks.run import SCHEMA_FIELDS, SUITE_NAMES  # noqa: E402
+
+
+def test_artifacts_exist():
+    assert ARTIFACTS, "no committed BENCH_*.json artifacts found"
+
+
+@pytest.mark.parametrize("path", ARTIFACTS, ids=lambda p: p.name)
+def test_artifact_carries_shared_schema(path):
+    doc = json.loads(path.read_text())
+    for field in SCHEMA_FIELDS:
+        assert field in doc, f"{path.name} missing {field!r}"
+    gate = doc["gate"]
+    assert {"metric", "op", "target"} <= set(gate), gate
+    assert isinstance(doc["measured"], dict) and doc["measured"]
+    # every measured value is a number
+    assert all(isinstance(v, (int, float))
+               for v in doc["measured"].values())
+
+
+@pytest.mark.parametrize("path", ARTIFACTS, ids=lambda p: p.name)
+def test_artifact_meets_its_own_gate(path):
+    """The committed artifacts are the proof the gates held on the
+    measuring box — meets_target must agree with gate vs measured."""
+    doc = json.loads(path.read_text())
+    assert doc.get("meets_target") is True, \
+        f"{path.name} was committed with a failing gate"
+    assert doc["gate"]["op"] == ">="
+    target = doc["gate"]["target"]
+    assert all(v >= target for v in doc["measured"].values()), \
+        f"{path.name}: measured values contradict meets_target"
+
+
+def test_suite_registry_covers_artifact_suites():
+    """Each committed artifact maps back to a registered suite name."""
+    for path in ARTIFACTS:
+        stem = path.stem.replace("BENCH_", "")
+        assert stem in SUITE_NAMES, \
+            f"{path.name} does not match any --list-suites entry"

@@ -27,7 +27,8 @@ import random
 
 import pytest
 
-from repro.core import DescriptorRing, SharedHeap
+from repro.core import ChannelError, DescriptorRing, Orchestrator, RPC, \
+    SharedHeap
 from repro.core.channel import R_DONE, R_EMPTY, R_REQ
 
 try:
@@ -180,6 +181,93 @@ class TestSeededInterleavings:
         assert m.post()      # consuming frees the window
         m.drain()
         m.check_drained()
+
+
+# ---------------------------------------------------------------------------
+# driver 3: the REAL client surface — multi-in-flight raw call_async on a
+# live Channel/Connection (the pipelined-futures substrate)
+# ---------------------------------------------------------------------------
+class TestMultiInFlightCallAsync:
+    def _mk(self, capacity: int):
+        orch = Orchestrator()
+        ch = RPC(orch, pid=1).open("ring-async", heap_pages=64)
+        ch.add(1, lambda ctx, a: a + 1)
+        conn = RPC(orch, pid=2).connect("ring-async",
+                                        ring_capacity=capacity)
+        return ch, conn
+
+    def test_out_of_order_completion(self):
+        """N tokens in flight, served in one sweep, consumed in reverse
+        and shuffled order — each wait() must deliver ITS result."""
+        ch, conn = self._mk(capacity=8)
+        toks = [conn.call_async(1, 100 + k) for k in range(6)]
+        assert ch.serve_many() == 6
+        # reverse order first …
+        for k, t in reversed(list(enumerate(toks))):
+            assert conn.wait(t) == 100 + k + 1
+        # … then a shuffled interleaving across a ring wrap
+        rng = random.Random(7)
+        for lap in range(4):
+            toks = {k: conn.call_async(1, lap * 10 + k) for k in range(5)}
+            ch.serve_many()
+            order = sorted(toks)
+            rng.shuffle(order)
+            for k in order:
+                assert conn.wait(toks[k]) == lap * 10 + k + 1
+
+    @pytest.mark.parametrize("capacity", [4, 8])
+    def test_overflow_exactly_at_depth_capacity(self, capacity):
+        """Depth == capacity posts are accepted; post capacity+1 raises —
+        not one earlier, not one later."""
+        ch, conn = self._mk(capacity)
+        toks = [conn.call_async(1, k) for k in range(capacity)]
+        with pytest.raises(ChannelError, match="ring overflow"):
+            conn.call_async(1, 99)
+        ch.serve_many()
+        # served-but-unconsumed results still hold the window closed
+        with pytest.raises(ChannelError, match="ring overflow"):
+            conn.call_async(1, 99)
+        assert [conn.wait(t) for t in toks] == \
+            [k + 1 for k in range(capacity)]
+        # the window reopens for a full second lap
+        toks = [conn.call_async(1, k) for k in range(capacity)]
+        ch.serve_many()
+        assert [conn.wait(t) for t in toks] == \
+            [k + 1 for k in range(capacity)]
+
+    def test_rejected_post_burns_no_seq(self):
+        """A rejected post must leave the seq counter untouched, or the
+        server head would wait forever on a request never written."""
+        ch, conn = self._mk(capacity=4)
+        toks = [conn.call_async(1, k) for k in range(4)]
+        seq_before = conn._next_seq
+        for _ in range(3):   # repeated rejections burn nothing
+            with pytest.raises(ChannelError, match="ring overflow"):
+                conn.call_async(1, 99)
+        assert conn._next_seq == seq_before
+        ch.serve_many()
+        assert [conn.wait(t) for t in toks] == [1, 2, 3, 4]
+        # the stream continues gapless after the rejections
+        t = conn.call_async(1, 7)
+        assert ch.serve_many() == 1
+        assert conn.wait(t) == 8
+
+    def test_close_fails_pending_tokens_and_waiters(self):
+        """close() with tokens in flight: a later wait() raises instead
+        of hanging, and the connection's scopes drain exactly once."""
+        ch, conn = self._mk(capacity=8)
+        heap = conn.heap
+        t_served = conn.call_async(1, 5)
+        ch.serve_many()          # this one's reply is ready …
+        t_pending = conn.call_async(1, 6)   # … this one is not
+        used_before = int((heap.state == 1).sum())
+        conn.close()
+        for t in (t_served, t_pending):
+            with pytest.raises(ChannelError):
+                conn.wait(t)
+        # close released the connection-owned pages despite the in-flight
+        # tokens (drain-exactly-once, not drain-twice or leak)
+        assert int((heap.state == 1).sum()) <= used_before
 
 
 # ---------------------------------------------------------------------------
