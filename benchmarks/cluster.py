@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.core import ClusterRouter, Orchestrator, RPC, ServerLoop
 

@@ -16,7 +16,7 @@ from __future__ import annotations
 import time
 from typing import List, Tuple
 
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 
 
 def bench() -> List[Tuple[str, float, str]]:
@@ -49,8 +49,6 @@ def bench() -> List[Tuple[str, float, str]]:
 
     # measured copy cost of the fallback path at small scale
     import dataclasses
-
-    import jax
 
     from repro.core.orchestrator import Orchestrator
     from repro.serving.kv_pool import (

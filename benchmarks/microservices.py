@@ -18,12 +18,12 @@ throughput, not the median at low load.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import BusyWaitPolicy, ClusterRouter, Orchestrator, RPC, \
-    ServerLoop, method, service
+from repro.core import ClusterRouter, Orchestrator, RPC, ServerLoop, \
+    method, service
 
 DB_WORK_US = 30.0  # simulated storage work (the paper's 66% critical path)
 

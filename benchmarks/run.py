@@ -12,6 +12,7 @@ by ``--check-schema`` and tests/test_bench_schema.py):
   cluster  → BENCH_cluster.json   1→8 clients through one ServerLoop
   marshal  → BENCH_marshal.json   typed pointer-passing vs serializing
   pipeline → BENCH_pipeline.json  depth-8 futures vs sequential invoke
+  stream   → BENCH_stream.json    streaming vs buffered replies (TTFT)
 
 Usage:
     python -m benchmarks.run                     # all suites
@@ -34,6 +35,7 @@ NOOP_JSON_DEFAULT = "BENCH_noop.json"
 CLUSTER_JSON_DEFAULT = "BENCH_cluster.json"
 MARSHAL_JSON_DEFAULT = "BENCH_marshal.json"
 PIPELINE_JSON_DEFAULT = "BENCH_pipeline.json"
+STREAM_JSON_DEFAULT = "BENCH_stream.json"
 
 # The suite registry — the single source of truth for suite names
 # (--suite validation, --list-suites, CI smoke steps). Keys are the CLI
@@ -43,6 +45,7 @@ SUITES = [
     ("op", "op_latency (Table 1b)"),
     ("marshal", "marshal (Fig. 11 typed data plane)"),
     ("pipeline", "pipeline (depth-8 futures vs sequential invoke)"),
+    ("stream", "stream (token-streaming replies vs buffered, TTFT)"),
     ("cooldb", "cooldb (Fig. 11)"),
     ("ycsb", "ycsb_kv (Figs. 9/10)"),
     ("micro", "microservices (Figs. 12/13)"),
@@ -109,6 +112,33 @@ def _write_pipeline_json(rows, path: str, iters: int) -> None:
         json.dump(doc, f, indent=1, sort_keys=True)
     print(f"# wrote {path}: depth-8 pipelining cxl={cxl:.2f}x "
           f"fallback={fb:.2f}x (target 3.0x both)", file=sys.stderr)
+
+
+def _write_stream_json(rows, path: str, iters: int) -> None:
+    by_name = {name: us for name, us, _ in rows}
+    derived = {name: d for name, us, d in rows}
+    cxl = by_name.get("stream_cxl_ttft_speedup", 0.0)
+    fb = by_name.get("stream_fallback_ttft_speedup", 0.0)
+    doc = {
+        "suite": "stream (token-streaming replies vs buffered, TTFT)",
+        "iters": iters,
+        "unit": "us_per_call",
+        "rows": by_name,
+        "derived": derived,
+        "tokens": 64,
+        "ttft_speedup_cxl": cxl,
+        "ttft_speedup_fallback": fb,
+        "target_speedup": 2.0,
+        "meets_target": cxl >= 2.0 and fb >= 2.0,
+        "gate": {"metric": "min(ttft_speedup_cxl, ttft_speedup_fallback)",
+                 "op": ">=", "target": 2.0},
+        "measured": {"ttft_speedup_cxl": cxl,
+                     "ttft_speedup_fallback": fb},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}: 64-token TTFT cxl={cxl:.2f}x "
+          f"fallback={fb:.2f}x (target 2.0x both)", file=sys.stderr)
 
 
 def _write_cluster_json(rows, path: str, iters: int) -> None:
@@ -228,7 +258,7 @@ def main(argv=None) -> None:
         return
 
     from . import cluster, cooldb, kv_handoff, marshal, microservices, \
-        noop_rtt, op_latency, pipeline, ycsb_kv
+        noop_rtt, op_latency, pipeline, stream, ycsb_kv
 
     def noop_bench():
         return noop_rtt.bench(n=args.iters, thr_iters=args.thr_iters)
@@ -247,11 +277,17 @@ def main(argv=None) -> None:
         # design; 1500 per-arm calls give a stable median-of-pairs
         return pipeline.bench(iters=min(args.iters, 1500))
 
+    def stream_bench():
+        # each round is one full 64-token stream per arm; a handful of
+        # interleaved rounds gives a stable TTFT median-of-pairs
+        return stream.bench(rounds=max(2, min(args.iters, 8)))
+
     benches = {
         "noop": noop_bench,
         "op": op_latency.bench,
         "marshal": marshal_bench,
         "pipeline": pipeline_bench,
+        "stream": stream_bench,
         "cooldb": cooldb.bench,
         "ycsb": ycsb_kv.bench,
         "micro": microservices.bench,
@@ -297,6 +333,11 @@ def main(argv=None) -> None:
                                  and args.json != NOOP_JSON_DEFAULT) \
                 else PIPELINE_JSON_DEFAULT
             _write_pipeline_json(rows, path, min(args.iters, 1500))
+        elif key == "stream":
+            path = args.json if (args.suite == "stream"
+                                 and args.json != NOOP_JSON_DEFAULT) \
+                else STREAM_JSON_DEFAULT
+            _write_stream_json(rows, path, max(2, min(args.iters, 8)))
     if failures:
         sys.exit(1)
 

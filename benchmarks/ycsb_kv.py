@@ -12,7 +12,7 @@ transport, exactly as in Fig. 9.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -60,7 +60,7 @@ class RpcoolKV:
         return 1
 
     def _scan(self, ctx, arg):
-        key = int(arg)
+        _start_key = int(arg)   # scan start; this store scans from the top
         n = 0
         for k in sorted(self.store)[:50]:
             n += len(self.store[k])

@@ -54,16 +54,16 @@ from .channel import (
     F_DEADLINE,
     F_SANDBOXED,
     F_SEALED,
+    F_STREAM,
     F_TYPED,
 )
 from .fallback import DSMLink, DSMNode, FallbackConnection
 from .router import ClusterRouter, Endpoint, RoutedConnection, \
-    RoutedRpcFuture
+    RoutedRpcFuture, RoutedRpcStream
 from . import containers, serial
 from . import marshal
-from .marshal import ArgView, FallbackRpcFuture, GraphRef, RpcFuture, \
-    build_graph, gather
-from . import service as service_mod
+from .marshal import ArgView, FallbackRpcFuture, FallbackRpcStream, \
+    GraphRef, RpcFuture, RpcStream, ServerStream, build_graph, gather
 from .service import (
     DeadlineEnforcer,
     Interceptor,
@@ -93,12 +93,13 @@ __all__ = [
     "BusyWaitPolicy", "Channel", "Connection", "DescriptorRing",
     "RING_DTYPE", "RPC", "RpcError",
     "ServerCtx", "ServerLoop", "E_DEADLINE", "F_BYVAL", "F_DEADLINE",
-    "F_SANDBOXED", "F_SEALED", "F_TYPED",
+    "F_SANDBOXED", "F_SEALED", "F_STREAM", "F_TYPED",
     "DSMLink", "DSMNode", "FallbackConnection",
     "ClusterRouter", "Endpoint", "RoutedConnection", "RoutedRpcFuture",
+    "RoutedRpcStream",
     "containers", "serial", "marshal",
-    "ArgView", "FallbackRpcFuture", "GraphRef", "RpcFuture",
-    "build_graph", "gather",
+    "ArgView", "FallbackRpcFuture", "FallbackRpcStream", "GraphRef",
+    "RpcFuture", "RpcStream", "ServerStream", "build_graph", "gather",
     "DeadlineEnforcer", "Interceptor", "MethodSpec", "RetryInterceptor",
     "ServiceDef", "ServiceStub", "StatsInterceptor", "StubMethod",
     "method", "service", "service_def", "stable_fn_id",

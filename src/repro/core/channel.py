@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -98,6 +98,10 @@ F_DEADLINE = 1 << 4  # the slot's ret word carries the request deadline
                      # (µs, monotonic clock) at post time; the receiver
                      # drops expired requests with E_DEADLINE before
                      # touching the arguments
+F_STREAM = 1 << 5    # streaming reply: the handler is a generator and the
+                     # reply is a chain of generation-tagged chunks hung
+                     # off the request's stream anchor (core/marshal.py);
+                     # the slot completes only when the chain ends
 
 # RPC status codes
 OK = 0
@@ -319,6 +323,10 @@ class Connection:
         self._marshal_pool: Optional[ScopePool] = None
         self._reply_free: List[Scope] = []
         self._reply_live: Dict[int, Scope] = {}
+        # streaming replies: recycled chunk-chain scopes + the per-call
+        # generation counter that tags every chunk of a stream
+        self._chain_free: List[Scope] = []
+        self._stream_gen = 0
         self._implicit: Optional[Scope] = None
         self._implicit_scopes: List[Scope] = []
         # pipelined-futures bookkeeping: every async token is tracked so
@@ -472,6 +480,18 @@ class Connection:
         land). Keywords: ``sealed``, ``sandboxed``, ``deadline``
         (seconds of budget, propagated into the descriptor), ``timeout``."""
         return _get_marshal().invoke_async_cxl(self, fn_id, args, **kw)
+
+    def invoke_stream(self, fn_id: int, *args, **kw):
+        """Streaming typed invoke: the handler is a generator and every
+        yielded value arrives as one generation-tagged chunk on a reply
+        chain the server grows while the call is still in flight. Returns
+        an ``RpcStream`` iterator — chunks are consumed **as they land**
+        (time-to-first-token, not time-to-last). Keywords: ``sealed``,
+        ``sandboxed``, ``deadline``, ``timeout``, ``window`` (bounded
+        chunk window — server-side backpressure), ``inline`` (pump the
+        server stream from the consuming thread; the two-core analogue
+        for single-threaded setups)."""
+        return _get_marshal().invoke_stream_cxl(self, fn_id, args, **kw)
 
     def invoke_serialized(self, fn_id: int, *args, **kw):
         """The Fig. 11 serializing baseline over the SAME descriptor ring:
@@ -665,10 +685,11 @@ class Connection:
             if self._marshal_pool is not None:
                 self._marshal_pool.drain()
                 self._marshal_pool = None
-            for s in self._reply_free:
+            for s in (*self._reply_free, *self._chain_free):
                 if s.live:
                     s.destroy()
             self._reply_free.clear()
+            self._chain_free.clear()
             for s in self._reply_live.values():
                 if s.live:
                     s.destroy()
@@ -698,6 +719,10 @@ class Channel:
         self._stop = threading.Event()
         self._sweep_scratch: Optional[np.ndarray] = None
         self._conn_version = 0  # bumped on accept/drop; ServerLoop caches
+        # active streaming replies (ServerStream, core/marshal.py): the
+        # serve loops advance every registered generator a bounded number
+        # of chunks per sweep, so streams interleave with ordinary RPCs
+        self._streams: List = []
         orch.register_channel(name, self)
 
     # -- server API (Fig. 6 left) -------------------------------------------
@@ -748,6 +773,12 @@ class Channel:
         if conn in self.connections:
             self.connections.remove(conn)
             self._conn_version += 1
+            if self._streams:
+                # a dropped client's streams must never pump again (their
+                # chain pages are going back to the heap)
+                for st in [s for s in self._streams if s.conn is conn]:
+                    st.abort()
+                    self._streams.remove(st)
             self.orch.unmap_heap(conn.client_pid, conn.heap.heap_id)
             if not self.shared_heap:
                 self.orch.unmap_heap(self.server_pid, conn.heap.heap_id)
@@ -767,9 +798,9 @@ class Channel:
         conns = self.connections
         n = len(conns)
         if n == 0:
-            return 0
+            return self.pump_streams()
         if n == 1:  # common case: skip the gather entirely
-            return self._drain(conns[0])
+            return self._drain(conns[0]) + self.pump_streams()
         conns = list(conns)  # handlers may drop connections mid-drain
         scratch = self._sweep_scratch
         if scratch is None or scratch.shape[0] < n:
@@ -782,7 +813,22 @@ class Channel:
         served = 0
         for i in ready:
             served += self._drain(conns[i])
-        return served
+        return served + self.pump_streams()
+
+    def pump_streams(self) -> int:
+        """Advance every active streaming reply: each registered generator
+        emits chunks up to its client's open window (bounded — a stalled
+        consumer cannot pin the sweep), streams that finish are dropped.
+        Returns the number of chunks emitted, which counts as served work
+        for the §5.8 policy so a mid-stream server never backs off."""
+        if not self._streams:
+            return 0
+        emitted = 0
+        for st in list(self._streams):
+            emitted += st.pump()
+            if st.done:
+                self._streams.remove(st)
+        return emitted
 
     def _drain(self, conn: Connection) -> int:
         """Process every pending slot of one ring (batched head advance).
@@ -847,6 +893,9 @@ class Channel:
 
     def destroy(self) -> None:
         self.stop()
+        for st in self._streams:
+            st.abort()   # close the generators; chain pages die with heap
+        self._streams.clear()
         for conn in list(self.connections):
             conn.close()
         self.orch.unregister_channel(self.name)
@@ -901,6 +950,18 @@ class Channel:
                     ret = fn(ctx, arg)
             else:
                 ret = fn(ctx, arg)
+            if getattr(ret, "_server_stream", False):
+                # streaming reply: the slot stays open (and its seal
+                # held) until the chunk chain ends; the serve loops pump
+                # the generator from here on. The ctx travels with the
+                # stream, so it is NOT returned to the connection.
+                ret.bind(conn, ring, slot, seal_idx, flags,
+                         sc_start, sc_count)
+                self._streams.append(ret)
+                ret.pump()   # first chunks flow before the sweep returns
+                if ret.done:
+                    self._streams.remove(ret)
+                return
             status, state = OK, R_DONE
         except SandboxViolation:
             # the SIGSEGV→error-reply path (§4.4)
@@ -1027,6 +1088,9 @@ class ServerLoop:
             for i in ready:
                 conn = conns[i]
                 served += conn.channel._drain(conn)
+        for ch in self.channels:
+            if ch._streams:
+                served += ch.pump_streams()
         self.n_served += served
         return served
 

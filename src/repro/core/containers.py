@@ -33,7 +33,7 @@ different heap/scope — used to interoperate CXL- and fallback-connections.
 from __future__ import annotations
 
 import struct
-from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple, Union
+from typing import Any, Callable, Iterator, List, Optional, Tuple, Union
 
 from . import addr as gaddr
 from .errors import InvalidPointer

@@ -30,30 +30,16 @@ as the CXL path — the slot record is the wire format, posted with zero
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from . import addr as gaddr
-from .channel import (
-    DescriptorRing,
-    RING_SLOT_BYTES,
-    F_DEADLINE,
-    F_SANDBOXED,
-    F_SEALED,
-    OK,
-    R_DONE,
-    R_EMPTY,
-    R_ERR,
-    R_REQ,
-    E_DEADLINE,
-    E_EXCEPTION,
-    _now_us,
-    _SLOT_WORDS,
-    _W_RET,
-)
+from .channel import DescriptorRing, RING_SLOT_BYTES, F_DEADLINE, \
+    F_SANDBOXED, F_SEALED, OK, R_DONE, R_EMPTY, R_ERR, E_DEADLINE, \
+    E_EXCEPTION, _now_us, _SLOT_WORDS, _W_RET
 from .errors import ChannelError, DeadlineExceeded, OwnershipMiss, \
-    SandboxViolation, SealViolation
+    SealViolation
 from .heap import SharedHeap
 from .sandbox import SandboxManager
 from .scope import Scope, create_scope, implicit_scope
@@ -241,10 +227,17 @@ class FallbackConnection:
         self._flight: List["_FlightEntry"] = []
         self._flight_errors: Dict[int, BaseException] = {}
         self._fb_abandoned: List["_FlightEntry"] = []
+        # streaming replies (invoke_stream): recycled chunk-chain scopes,
+        # the per-call generation counter, and the live client iterators
+        # (so close() can fail their waiters exactly once)
+        self._chain_free: List[Scope] = []
+        self._stream_gen = 0
+        self._client_streams: List = []
         self.n_calls = 0
         self.n_invokes = 0
         self.marshal_bytes = 0
         self.n_flushes = 0
+        self.n_stream_flights = 0
         self.closed = False
 
     # -- client-side API (identical shape to Connection) -----------------
@@ -366,6 +359,15 @@ class FallbackConnection:
         from .marshal import invoke_async_fallback
         return invoke_async_fallback(self, fn_id, args, **kw)
 
+    def invoke_stream(self, fn_id: int, *args, **kw):
+        """Streaming typed invoke over the link: the generator handler's
+        reply chain crosses in *staged chunk flights* — up to ``window``
+        chunks per wire flush, bulk-migrated together — instead of one
+        buffered reply at the end. Same iterator surface as
+        ``Connection.invoke_stream``."""
+        from .marshal import invoke_stream_fallback
+        return invoke_stream_fallback(self, fn_id, args, **kw)
+
     def serve(self, instance, interceptors=()):
         """Declarative service registration — mirror of
         ``Channel.serve`` (§5.6: identical programmer-facing API)."""
@@ -461,6 +463,88 @@ class FallbackConnection:
                 e.scope.destroy()
         self._fb_abandoned = still
 
+    # -- streaming replies (server half of invoke_stream) ------------------
+    def start_stream(self, stream) -> None:
+        """Wire the streaming descriptor across and start the handler's
+        generator; chunks flow later, flight by flight, as the client
+        iterator pulls (``pump_stream``). A failure to *start* (missing
+        fn, pre-lapsed deadline, unsealed region, handler raising before
+        the first yield) completes the slot R_ERR and is surfaced on the
+        client's first ``next()``."""
+        self.link.send_msg(RING_SLOT_BYTES)
+        self.link.sync_meta(to=OWNER_SERVER)
+        try:
+            stream._srv = self._serve_stream_start(stream.slot)
+        except BaseException as exc:
+            status = E_DEADLINE if isinstance(exc, DeadlineExceeded) \
+                else E_EXCEPTION
+            self._flight_errors[stream.slot] = exc
+            self.ring.complete(stream.slot, 0, R_ERR, status)
+        self._client_streams.append(stream)
+
+    def _serve_stream_start(self, slot: int):
+        """The descriptor-processing half of ``_serve`` for a streaming
+        request: instead of running the handler to completion, create the
+        ``ServerStream`` (the generator is built, nothing is decoded yet)
+        and leave the slot open until the chain ends."""
+        ring = self.ring
+        (_seq, fn_id, flags, arg, seal_idx, _ret, _st, _status,
+         sc_start, sc_count) = ring.load(slot)
+        fn = self.functions.get(fn_id)
+        if fn is None:
+            raise ChannelError(f"no function {fn_id}")
+        if flags & F_DEADLINE and _now_us() > _ret:
+            raise DeadlineExceeded(
+                f"RPC {fn_id} deadline lapsed on the link")
+        if flags & F_SEALED and not self.seals.is_sealed(seal_idx):
+            raise SealViolation("receiver found region unsealed")
+        ctx = FallbackServerCtx(self, flags)
+        ctx.deadline_us = _ret if flags & F_DEADLINE else 0
+        if flags & F_SANDBOXED and not gaddr.is_null(arg) and sc_count:
+            # server must own the pages before sandboxing them
+            self.link.migrate(list(range(sc_start, sc_start + sc_count)),
+                              to=OWNER_SERVER)
+            with self.sandboxes.enter(sc_start, sc_count) as sb:
+                ctx.sandbox = sb
+                ret = fn(ctx, arg)
+        else:
+            ret = fn(ctx, arg)
+        if not getattr(ret, "_server_stream", False):
+            raise ChannelError(
+                "stream invoke reached a non-streaming handler")
+        ret.bind(self, ring, slot, seal_idx, flags, sc_start, sc_count)
+        return ret
+
+    def pump_stream(self, srv, max_chunks: int) -> List[int]:
+        """One staged chunk flight: advance the generator up to
+        ``max_chunks`` chunks server-side, then cross the wire ONCE —
+        one batched chunk-descriptor message plus one bulk migration of
+        every chunk page back to the client. Returns the chunk addrs now
+        readable client-side."""
+        if self.closed:
+            raise ChannelError("pump_stream on closed connection")
+        addrs: List[int] = []
+        srv.pump(max_chunks=max_chunks, collect=addrs)
+        if addrs:
+            link = self.link
+            pages = {gaddr.page_of(srv.anchor)}
+            for a in addrs:
+                scope = self._reply_live.get(a)
+                if scope is not None:
+                    pages.update(range(scope.start_page,
+                                       scope.start_page + scope.num_pages))
+            link.send_batch(len(addrs), len(addrs) * RING_SLOT_BYTES)
+            need = sorted(p for p in pages
+                          if link.owner[p] != OWNER_CLIENT)
+            if need:
+                link.migrate(need, to=OWNER_CLIENT)
+            self.n_stream_flights += 1
+        return addrs
+
+    def _drop_client_stream(self, stream) -> None:
+        if stream in self._client_streams:
+            self._client_streams.remove(stream)
+
     def close(self) -> None:
         if not self.closed:
             self.closed = True
@@ -473,6 +557,18 @@ class FallbackConnection:
             self._flight.clear()
             self._fb_abandoned.clear()
             self._flight_errors.clear()
+            # fail every live stream iterator the same way: the waiter
+            # sees ChannelError (exactly once — the state flip is
+            # guarded), the generator is closed, and the argument scope
+            # is drained here; chunk scopes follow with _reply_live and
+            # the chain freelist below
+            for s in list(self._client_streams):
+                s._fail_on_close()
+            self._client_streams.clear()
+            for s in self._chain_free:
+                if s.live:
+                    s.destroy()
+            self._chain_free.clear()
             for s in self._implicit_scopes:
                 if s.live:
                     s.destroy()
@@ -501,6 +597,7 @@ class FallbackConnection:
                 f"RPC {fn_id} deadline lapsed on the link")
 
         ctx = FallbackServerCtx(self, flags)
+        ctx.deadline_us = _ret if flags & F_DEADLINE else 0
         if flags & F_SEALED and not self.seals.is_sealed(seal_idx):
             raise SealViolation("receiver found region unsealed")
         try:
@@ -536,6 +633,7 @@ class FallbackServerCtx:
         self.conn = conn
         self.flags = flags
         self.sandbox = None
+        self.deadline_us = 0  # propagated request deadline (0 = none)
 
     def read(self, a: int, nbytes: int):
         if self.sandbox is not None:

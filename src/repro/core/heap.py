@@ -26,7 +26,7 @@ require *contiguous* page ranges, so a bump/bitmap allocator is not enough.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np

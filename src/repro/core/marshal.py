@@ -41,10 +41,11 @@ import time
 from . import addr as gaddr
 from . import containers as C
 from . import serial
-from .channel import Connection, E_DEADLINE, F_BYVAL, F_SANDBOXED, \
-    F_SEALED, F_TYPED, R_DONE, R_ERR, RpcError, _now_us
+from .channel import Connection, E_DEADLINE, E_EXCEPTION, E_SANDBOX, \
+    F_BYVAL, F_SANDBOXED, F_SEALED, F_STREAM, F_TYPED, OK, R_DONE, R_ERR, \
+    RpcError, _now_us
 from .errors import AllocationError, ChannelError, DeadlineExceeded, \
-    InvalidPointer, SandboxViolation
+    InvalidPointer, SandboxViolation, SealViolation
 from .scope import Scope, ScopePool, create_scope
 
 # Pooled argument scopes: 4 pages (16 KiB with the default page size)
@@ -297,13 +298,15 @@ def _marshal_pool(conn: Connection) -> ScopePool:
     return pool
 
 
-def _pooled_marshal(conn: Connection, args: Tuple, pid: int,
-                    force_copy: bool) -> Tuple[int, Scope, bool]:
-    """(root, scope, pooled?) — pooled fast path, dedicated on overflow."""
+def _fill_pooled(conn: Connection, pid: int, fill) -> Tuple[Any, Scope, bool]:
+    """Run ``fill(scope)`` in a pooled marshal scope, retrying in a
+    geometrically larger dedicated scope on overflow. Returns
+    (fill result, scope, pooled?); exception-safe — a failing fill never
+    leaks its scope."""
     pool = _marshal_pool(conn)
     scope = pool.pop()
     try:
-        return marshal_args(scope, args, pid, force_copy), scope, True
+        return fill(scope), scope, True
     except AllocationError:
         pool.push(scope)
     except BaseException:
@@ -314,7 +317,7 @@ def _pooled_marshal(conn: Connection, args: Tuple, pid: int,
         scope = create_scope(conn.heap, pages * conn.heap.page_size,
                              owner=pid)
         try:
-            return marshal_args(scope, args, pid, force_copy), scope, False
+            return fill(scope), scope, False
         except AllocationError:
             scope.destroy()
             if pages > (1 << 16):
@@ -323,6 +326,13 @@ def _pooled_marshal(conn: Connection, args: Tuple, pid: int,
         except BaseException:
             scope.destroy()
             raise
+
+
+def _pooled_marshal(conn: Connection, args: Tuple, pid: int,
+                    force_copy: bool) -> Tuple[int, Scope, bool]:
+    """(root, scope, pooled?) — pooled fast path, dedicated on overflow."""
+    return _fill_pooled(
+        conn, pid, lambda scope: marshal_args(scope, args, pid, force_copy))
 
 
 # ---------------------------------------------------------------------------
@@ -453,6 +463,10 @@ def typed_handler(fn):
             raise ChannelError(
                 "typed handler called through the raw data path "
                 "(use conn.invoke, not conn.call)")
+        if flags & F_STREAM:
+            # streaming reply: hand the transport a ServerStream — the
+            # slot completes only when the chunk chain ends
+            return _start_stream(ctx, fn, arg, flags)
         if flags & F_BYVAL:
             heap = ctx.heap()
             raw = _read_blob(ctx, arg, heap.page_size)
@@ -702,6 +716,865 @@ def gather(futures, timeout: float = 10.0) -> list:
     if failed is not None:
         raise failed
     return results
+
+
+# ---------------------------------------------------------------------------
+# streaming replies — generation-tagged chunk chains (invoke_stream)
+# ---------------------------------------------------------------------------
+# A streaming RPC posts ONE descriptor whose argument is a *stream anchor*
+# living in the request scope; the server grows a singly-linked chain of
+# chunks off the anchor while the call is still in flight — each chunk is
+# one pointer flip (store the new chunk's address into the predecessor's
+# ``next`` word), the same publication primitive the paper's reply path
+# uses. The ring slot completes only when the chain ends, so ordinary
+# sweeps keep working and close()/reap hygiene is inherited unchanged.
+#
+#   anchor (32 B, client scope): [head u64][gen u32][consumed u32]
+#                                [args u64][window u32][pad u32]
+#   chunk  (32 B + payload):     [next u64][gen u32][seq u32][cflags u32]
+#                                [aux u32][vpayload u64]
+#
+# ``gen`` tags every chunk with the call's generation so a chunk left
+# over from an abandoned stream can never be mistaken for a live one.
+# ``consumed`` is the client's running count of value chunks taken — the
+# server stalls once ``seq - consumed`` reaches ``window`` (bounded-chunk
+# backpressure); the sentinel value cancels the stream. CH_VALUE chunks
+# carry a boxed containers Value in ``aux``/``vpayload`` (pointer route)
+# or a blob address + length (by-value route); CH_ERR carries the RPC
+# status in ``aux``.
+
+_ANCHOR = struct.Struct("<QIIQII")   # head, gen, consumed, args, window, pad
+_CHUNK = struct.Struct("<QIIIIQ")    # next, gen, seq, cflags, aux, vpayload
+CHUNK_HDR_BYTES = _CHUNK.size
+_ANCHOR_CONSUMED_OFF = 12
+_U64 = struct.Struct("<Q")
+_U32 = struct.Struct("<I")
+
+CH_VALUE = 0
+CH_END = 1
+CH_ERR = 2
+
+DEFAULT_STREAM_WINDOW = 16    # CXL push mode: max unconsumed chunks
+STREAM_FLIGHT_CHUNKS = 8      # fallback pull mode: chunks per wire flight
+_CHAIN_FREELIST_MAX = 32
+_STREAM_CANCEL = 0xFFFFFFFF   # consumed-word sentinel: client cancelled
+
+
+def _pop_chain_scope(conn, nbytes: int) -> Scope:
+    """A recycled chunk-chain scope (one page) or a dedicated right-sized
+    one for oversized chunk payloads."""
+    heap = _reply_heap(conn)
+    if nbytes <= REPLY_SCOPE_PAGES * heap.page_size:
+        free = conn._chain_free
+        if free:
+            s = free.pop()
+            s.reset()
+            return s
+        return create_scope(heap, REPLY_SCOPE_PAGES * heap.page_size)
+    return create_scope(heap, nbytes)
+
+
+def _release_chain_scope(conn, scope: Scope) -> None:
+    if scope.num_pages == REPLY_SCOPE_PAGES and \
+            len(conn._chain_free) < _CHAIN_FREELIST_MAX:
+        conn._chain_free.append(scope)
+    elif scope.live:
+        scope.destroy()
+
+
+def _recycle_chunk(conn, addr: int) -> None:
+    scope = conn._reply_live.pop(addr, None)
+    if scope is not None:
+        _release_chain_scope(conn, scope)
+
+
+class ServerStream:
+    """Server half of one streaming reply: the handler's generator plus
+    the growing chunk chain.
+
+    Created by ``typed_handler`` when the descriptor carries F_STREAM and
+    registered with the serving transport, which *pumps* it: push mode
+    (CXL serve loops) emits until the client's bounded window fills, pull
+    mode (fallback flights) emits exactly the requested batch. Terminal
+    chunks (CH_END / CH_ERR) complete the ring slot, release the seal
+    hold, and close the generator.
+    """
+
+    _server_stream = True
+
+    __slots__ = ("ctx", "it", "anchor", "gen_tag", "window", "byval",
+                 "conn", "ring", "slot", "seal_idx", "flags",
+                 "_sc_start", "_sc_count", "_consumed_addr",
+                 "seq", "prev", "done")
+
+    def __init__(self, ctx, it, anchor: int, gen_tag: int, window: int,
+                 byval: bool):
+        self.ctx = ctx
+        self.it = it
+        self.anchor = anchor
+        self.gen_tag = gen_tag
+        self.window = window or DEFAULT_STREAM_WINDOW
+        self.byval = byval
+        self.conn = None
+        self.ring = None
+        self.slot = 0
+        self.seal_idx = 0
+        self.flags = 0
+        self._sc_start = 0
+        self._sc_count = 0
+        self._consumed_addr = 0
+        self.seq = 0     # value chunks emitted
+        self.prev = 0    # last published chunk (0 = publish to anchor)
+        self.done = False
+
+    def bind(self, conn, ring, slot: int, seal_idx: int, flags: int,
+             sc_start: int, sc_count: int) -> None:
+        """Attach the transport half (called by the serve path once the
+        descriptor's slot identity is known)."""
+        self.conn = conn
+        self.ring = ring
+        self.slot = slot
+        self.seal_idx = seal_idx
+        self.flags = flags
+        self._sc_start = sc_start
+        self._sc_count = sc_count
+        self._consumed_addr = gaddr.add(
+            self.anchor, _ANCHOR_CONSUMED_OFF,
+            _reply_heap(conn).page_size)
+
+    # -- pumping ---------------------------------------------------------
+    def pump(self, max_chunks: Optional[int] = None,
+             collect: Optional[List[int]] = None) -> int:
+        """Advance the generator. Push mode (``max_chunks=None``): emit
+        until the client's window is full or the stream ends. Pull mode:
+        emit up to ``max_chunks`` value chunks, appending every emitted
+        chunk address to ``collect``. Returns the chunks emitted."""
+        if self.done:
+            return 0
+        emitted = 0
+        while True:
+            if max_chunks is not None:
+                if emitted >= max_chunks:
+                    break
+            else:
+                try:
+                    consumed = self._read_consumed()
+                except (InvalidPointer, ChannelError):
+                    # the client closed mid-stream and its anchor pages
+                    # went back to the heap: drop the stream instead of
+                    # killing the serving thread
+                    self.abort()
+                    break
+                if consumed == _STREAM_CANCEL:
+                    self._complete(R_ERR, E_EXCEPTION)
+                    break
+                if self.seq - consumed >= self.window:
+                    break   # backpressure: bounded chunk window is full
+            dl = getattr(self.ctx, "deadline_us", 0)
+            if dl and _now_us() > dl:
+                self._finish(CH_ERR, E_DEADLINE, collect)
+                emitted += 1
+                break
+            try:
+                value = self._next_value()
+            except StopIteration:
+                self._finish(CH_END, OK, collect)
+                emitted += 1
+                break
+            except DeadlineExceeded:
+                self._finish(CH_ERR, E_DEADLINE, collect)
+                emitted += 1
+                break
+            except SandboxViolation:
+                self._finish(CH_ERR, E_SANDBOX, collect)
+                emitted += 1
+                break
+            except InvalidPointer:
+                status = E_SANDBOX if self.flags & F_SANDBOXED \
+                    else E_EXCEPTION
+                self._finish(CH_ERR, status, collect)
+                emitted += 1
+                break
+            except BaseException:
+                self._finish(CH_ERR, E_EXCEPTION, collect)
+                emitted += 1
+                break
+            try:
+                self._emit_value(value, collect)
+            except (InvalidPointer, ChannelError):
+                # the client tore the connection down mid-stream: the
+                # chain pages are gone — just drop the generator
+                self.abort()
+                break
+            emitted += 1
+        return emitted
+
+    def _next_value(self):
+        if self.flags & F_SANDBOXED and self._sc_count:
+            # re-enter the request's sandbox for this slice of handler
+            # code (cached key ⇒ the O(1) PKRU-write path, §5.2)
+            with self.conn.sandboxes.enter(self._sc_start,
+                                           self._sc_count) as sb:
+                self.ctx.sandbox = sb
+                return next(self.it)
+        return next(self.it)
+
+    def _read_consumed(self) -> int:
+        return _U32.unpack(bytes(
+            _reply_heap(self.conn).read(self._consumed_addr, 4)))[0]
+
+    # -- chunk emission --------------------------------------------------
+    def _emit_value(self, value, collect) -> None:
+        conn = self.conn
+        if self.byval:
+            raw = serial.encode(value)
+            scope = _pop_chain_scope(conn, _CHUNK.size + len(raw))
+            hdr = scope.alloc(_CHUNK.size)
+            blob = scope.alloc(len(raw))
+            self.ctx._daemon_write(blob, raw)
+            self.ctx._daemon_write(hdr, _CHUNK.pack(
+                0, self.gen_tag, self.seq, CH_VALUE, len(raw), blob))
+        else:
+            scope, hdr, val = self._build_graph_chunk(conn, value)
+            self.ctx._daemon_write(hdr, _CHUNK.pack(
+                0, self.gen_tag, self.seq, CH_VALUE, val[0], val[1]))
+        conn._reply_live[hdr] = scope
+        self.seq += 1
+        self._publish(hdr, collect)
+
+    def _build_graph_chunk(self, conn, value):
+        heap = _reply_heap(conn)
+        nbytes = REPLY_SCOPE_PAGES * heap.page_size
+        scope = _pop_chain_scope(conn, nbytes)
+        while True:
+            try:
+                hdr = scope.alloc(_CHUNK.size)
+                return scope, hdr, C.build_value(scope, value)
+            except AllocationError:
+                # big chunk: geometrically larger dedicated scope
+                _release_chain_scope(conn, scope)
+                nbytes *= 8
+                if nbytes > heap.num_pages * heap.page_size:
+                    raise
+                scope = _pop_chain_scope(conn, nbytes)
+
+    def _publish(self, hdr: int, collect) -> None:
+        """The pointer flip: store the chunk's address into its
+        predecessor's ``next`` word (or the anchor's head)."""
+        target = self.anchor if self.prev == 0 else self.prev
+        self.ctx._daemon_write(target, _U64.pack(hdr))
+        self.prev = hdr
+        if collect is not None:
+            collect.append(hdr)
+
+    # -- termination -----------------------------------------------------
+    def _finish(self, cflags: int, status: int, collect) -> None:
+        conn = self.conn
+        try:
+            scope = _pop_chain_scope(conn, _CHUNK.size)
+            hdr = scope.alloc(_CHUNK.size)
+            self.ctx._daemon_write(hdr, _CHUNK.pack(
+                0, self.gen_tag, self.seq, cflags, status, 0))
+            conn._reply_live[hdr] = scope
+            self._publish(hdr, collect)
+        except (InvalidPointer, ChannelError):
+            self.abort()
+            return
+        self._complete(R_DONE if cflags == CH_END else R_ERR, status)
+
+    def _complete(self, state: int, status: int) -> None:
+        if self.flags & F_SEALED:
+            try:
+                self.conn.seals.mark_complete(self.seal_idx)
+            except SealViolation:
+                pass
+        self.ring.complete(self.slot, 0, state, status)
+        self.abort()
+
+    def abort(self) -> None:
+        """Drop the stream without touching the ring (client gone, or
+        terminal chunk already published)."""
+        self.done = True
+        try:
+            self.it.close()
+        except Exception:
+            pass
+
+
+def _start_stream(ctx, fn, arg: int, flags: int) -> ServerStream:
+    """Receiver half of a streaming invoke: decode the anchor, build the
+    handler's ArgView, call it, and wrap the returned iterable."""
+    heap = ctx.heap()
+    if flags & F_BYVAL:
+        reader = ctx   # fallback route: reads fault pages across the link
+    else:
+        reader = _reader_for(ctx)
+    (_head, gen_tag, _consumed, args_addr, window, _pad) = _ANCHOR.unpack(
+        bytes(reader.read(arg, _ANCHOR.size)))
+    if flags & F_BYVAL:
+        raw = _read_blob(reader, args_addr, heap.page_size)
+        view = ArgView.python(serial.decode(raw))
+    else:
+        view = ArgView.graph(reader, (C.T_VEC, args_addr))
+    try:
+        result = fn(ctx, view)
+    except InvalidPointer as e:
+        if ctx.sandbox is not None:
+            raise SandboxViolation(str(e)) from e
+        raise
+    return ServerStream(ctx, iter(result), arg, gen_tag, window,
+                        byval=bool(flags & F_BYVAL))
+
+
+class RpcStream:
+    """Client half of a streaming RPC on the CXL ring — an iterator that
+    yields chunks **as the server publishes them** (time-to-first-token,
+    not time-to-last).
+
+    A per-``next`` ``timeout`` raises ``ChannelError`` and leaves the
+    stream consumable (retry the wait); a lapsed stream *deadline* is
+    terminal and hands the slot to the reaper. ``close()`` cancels: the
+    sentinel store makes the server abort the generator at its next pump
+    and the slot is reaped once that completion lands.
+    """
+
+    __slots__ = ("conn", "fn_id", "token", "_scope", "_pooled", "_sealed",
+                 "_gen", "_timeout", "_deadline_us", "_pump", "_words",
+                 "_watch", "_consumed_addr", "_prev", "_seq", "_state",
+                 "_exc", "_scope_released")
+
+    def __init__(self, conn, fn_id: int, token: Tuple[int, int],
+                 anchor: int, scope: Scope, pooled: bool, sealed: bool,
+                 gen_tag: int, timeout: float, deadline_us: int,
+                 pump=None):
+        self.conn = conn
+        self.fn_id = fn_id
+        self.token = token
+        self._scope = scope
+        self._pooled = pooled
+        self._sealed = sealed
+        self._gen = gen_tag
+        self._timeout = timeout
+        self._deadline_us = deadline_us
+        self._pump = pump
+        heap = conn.heap
+        self._words = heap.buf.data.cast("Q")
+        self._watch = gaddr.linear(anchor, heap.page_size) // 8
+        self._consumed_addr = gaddr.add(anchor, _ANCHOR_CONSUMED_OFF,
+                                        heap.page_size)
+        self._prev = 0   # last consumed chunk (recycled with a lag of one)
+        self._seq = 0
+        self._state = _PENDING
+        self._exc: Optional[BaseException] = None
+        self._scope_released = False
+
+    def __iter__(self) -> "RpcStream":
+        return self
+
+    def __next__(self):
+        return self.next()
+
+    def next(self, timeout: Optional[float] = None):
+        """The next chunk value; raises ``StopIteration`` at stream end,
+        the RPC's mapped error on failure."""
+        if self._state == _DONE:
+            raise StopIteration
+        if self._state != _PENDING:
+            raise self._exc
+        conn = self.conn
+        ring = conn.ring
+        slot = self.token[0]
+        words = self._words
+        policy = conn.wait_policy
+        deadline = time.monotonic() + \
+            (self._timeout if timeout is None else timeout)
+        spins = 256
+        while True:
+            if conn.closed:
+                # checked BEFORE touching the chain: close() freed the
+                # chunk pages, so a stale watch word must not be chased
+                self._fail_cleanup(ChannelError(
+                    "connection closed with the stream in flight"))
+                raise self._exc
+            addr = words[self._watch]
+            if addr:
+                return self._consume_chunk(int(addr))
+            if ring.state_of(slot) >= R_DONE:
+                return self._settle_no_chunk()
+            if self._deadline_us and _now_us() > self._deadline_us:
+                self._lapse()
+            if time.monotonic() > deadline:
+                raise ChannelError("stream chunk timed out")  # retryable
+            if self._pump is not None:
+                self._pump()   # inline mode: this thread IS the server
+                continue
+            if spins:
+                spins -= 1
+                time.sleep(0)
+                continue
+            time.sleep(policy.delay_s())
+
+    # -- chunk consumption -----------------------------------------------
+    def _consume_chunk(self, addr: int):
+        conn = self.conn
+        heap = conn.heap
+        try:
+            (_nxt, cgen, seq, cflags, aux, vpayload) = _CHUNK.unpack(
+                bytes(heap.read(addr, _CHUNK.size)))
+        except InvalidPointer:
+            if conn.closed:   # close() raced the read: chain pages gone
+                self._fail_cleanup(ChannelError(
+                    "connection closed with the stream in flight"))
+                raise self._exc from None
+            raise
+        if cgen != self._gen:
+            self._fail_cleanup(ChannelError(
+                f"stale stream chunk: generation {cgen} != {self._gen}"))
+            raise self._exc
+        if cflags == CH_VALUE:
+            if seq != self._seq:
+                self._fail_cleanup(ChannelError(
+                    f"stream chunk out of order: {seq} != {self._seq}"))
+                raise self._exc
+            value = C.to_python(heap, (aux, vpayload))
+            self._seq += 1
+            # open the server's bounded window (runtime metadata — a
+            # daemon store, legal even while the anchor scope is sealed)
+            heap.write(self._consumed_addr, _U32.pack(self._seq))
+            if self._prev:
+                # recycle lag of one: a chunk scope is reusable only once
+                # its ``next`` word has been read
+                _recycle_chunk(conn, self._prev)
+            self._prev = addr
+            self._watch = gaddr.linear(addr, heap.page_size) // 8
+            return value
+        if cflags == CH_END:
+            self._settle(addr, None)
+            if self._state == _FAILED:
+                raise self._exc
+            raise StopIteration
+        self._settle(addr, aux)   # CH_ERR: aux carries the status
+        raise self._exc
+
+    def _settle(self, last_addr: int, status: Optional[int]) -> None:
+        """Consume the completed ring slot (releasing the seal) and
+        recycle the tail of the chain."""
+        conn = self.conn
+        exc: Optional[BaseException] = None
+        try:
+            conn.wait(self.token, sealed=self._sealed,
+                      timeout=self._timeout)
+        except BaseException as e:
+            exc = e
+        if self._prev:
+            _recycle_chunk(conn, self._prev)
+            self._prev = 0
+        _recycle_chunk(conn, last_addr)
+        self._release_scope_once()
+        if exc is None and status is not None:
+            exc = DeadlineExceeded("RPC deadline lapsed") \
+                if status == E_DEADLINE else RpcError(status)
+        if exc is not None:
+            self._state = _FAILED
+            self._exc = exc
+        else:
+            self._state = _DONE
+
+    def _settle_no_chunk(self):
+        # the slot completed with no chunk pending: either this lost a
+        # race with the final publish (re-check), or a non-streaming
+        # handler answered with a single boxed reply
+        addr = self._words[self._watch]
+        if addr:
+            return self._consume_chunk(int(addr))
+        conn = self.conn
+        try:
+            ret = conn.wait(self.token, sealed=self._sealed,
+                            timeout=self._timeout)
+        except BaseException as e:
+            self._fail_cleanup(e)
+            raise
+        _recycle_reply(conn, ret)
+        self._fail_cleanup(ChannelError(
+            "handler completed without streaming (declare the method "
+            "with @method(streaming=True))"))
+        raise self._exc
+
+    def _lapse(self) -> None:
+        """The stream *deadline* lapsed mid-wait: terminal — hand the
+        slot to the reaper (the server's own deadline check completes
+        it) and fail the iterator."""
+        conn = self.conn
+        exc = DeadlineExceeded("stream deadline lapsed")
+        pending = conn._pending_async.get(self.token[0])
+        if pending is not None:
+            pending.cleanup = self._release_scope_once
+            conn._abandon(self.token, pending)
+        else:
+            self._release_scope_once()
+        if self._prev:
+            _recycle_chunk(conn, self._prev)
+            self._prev = 0
+        self._state = _FAILED
+        self._exc = exc
+        raise exc
+
+    # -- cancellation / hygiene ------------------------------------------
+    def close(self) -> None:
+        """Abandon the stream (best-effort cancel): the sentinel store
+        aborts the server generator at its next pump; the ring slot is
+        reaped when that completion lands."""
+        if self._state != _PENDING:
+            return
+        conn = self.conn
+        if not conn.closed:
+            try:
+                conn.heap.write(self._consumed_addr,
+                                _U32.pack(_STREAM_CANCEL))
+            except InvalidPointer:
+                pass
+            pending = conn._pending_async.get(self.token[0])
+            if pending is not None:
+                pending.cleanup = self._release_scope_once
+                conn._abandon(self.token, pending)
+        if self._prev:
+            _recycle_chunk(conn, self._prev)
+            self._prev = 0
+        self._state = _FAILED
+        self._exc = ChannelError("stream cancelled")
+
+    def _fail_cleanup(self, exc: BaseException) -> None:
+        if self._prev:
+            _recycle_chunk(self.conn, self._prev)
+            self._prev = 0
+        self._release_scope_once()
+        self._state = _FAILED
+        self._exc = exc
+
+    def _release_scope_once(self) -> None:
+        if self._scope_released:
+            return
+        self._scope_released = True
+        scope = self._scope
+        if self._pooled:
+            self.conn._marshal_pool.push(scope)
+        elif scope.live:
+            scope.destroy()
+
+
+def _marshal_stream(conn: Connection, args: Tuple, gen_tag: int,
+                    window: int, force_copy: bool):
+    """(anchor, scope, pooled) — the stream anchor and the marshalled
+    argument tuple, together in one (pooled when possible) scope."""
+    pid = conn.client_pid
+
+    def _fill(scope: Scope) -> int:
+        anchor = scope.alloc(_ANCHOR.size)
+        root = marshal_args(scope, args, pid, force_copy)
+        conn.heap.write(anchor, _ANCHOR.pack(0, gen_tag, 0, root,
+                                             window, 0), pid=pid)
+        return anchor
+
+    return _fill_pooled(conn, pid, _fill)
+
+
+def invoke_stream_cxl(conn: Connection, fn_id: int, args: Tuple,
+                      sealed: bool = False, sandboxed: bool = False,
+                      deadline: Optional[float] = None,
+                      timeout: float = 10.0,
+                      window: int = DEFAULT_STREAM_WINDOW,
+                      inline: bool = False) -> RpcStream:
+    """Streaming typed invoke on the shared-memory ring: marshal (or
+    pointer-pass) the arguments once, post one descriptor, and consume
+    the server's reply chain chunk by chunk as it grows."""
+    deadline_us = _deadline_word(deadline)
+    conn._stream_gen += 1
+    gen_tag = conn._stream_gen
+    force_copy = sandboxed or sealed
+
+    if len(args) == 1 and isinstance(args[0], GraphRef):
+        g = args[0]
+        if g.scope is not None and g.scope.heap is conn.heap and \
+                not force_copy:
+            # steady-state hot path: anchor-only scope, args by pointer
+            pool = _marshal_pool(conn)
+            scope = pool.pop()
+            try:
+                anchor = scope.alloc(_ANCHOR.size)
+                conn.heap.write(anchor, _ANCHOR.pack(
+                    0, gen_tag, 0, g.root, window, 0),
+                    pid=conn.client_pid)
+            except BaseException:
+                pool.push(scope)
+                raise
+            return _post_stream(conn, fn_id, anchor, scope, True, sealed,
+                                sandboxed, deadline_us, timeout, gen_tag,
+                                inline)
+        if g.scope is None or g.scope.heap is not conn.heap:
+            args = tuple(g.to_python())
+        # same-heap ref under seal/sandbox: the generic path deep-copies
+
+    anchor, scope, pooled = _marshal_stream(conn, args, gen_tag, window,
+                                            force_copy)
+    return _post_stream(conn, fn_id, anchor, scope, pooled, sealed,
+                        sandboxed, deadline_us, timeout, gen_tag, inline)
+
+
+def _post_stream(conn, fn_id, anchor, scope, pooled, sealed, sandboxed,
+                 deadline_us, timeout, gen_tag, inline) -> RpcStream:
+    try:
+        token = conn.call_async(fn_id, anchor, scope=scope, sealed=sealed,
+                                sandboxed=sandboxed,
+                                flags_extra=F_TYPED | F_STREAM,
+                                deadline_us=deadline_us)
+    except BaseException:
+        if pooled:
+            conn._marshal_pool.push(scope)
+        else:
+            scope.destroy()
+        raise
+    conn.n_invokes += 1
+    conn.marshal_bytes += scope.used_bytes()
+    stream = RpcStream(conn, fn_id, token, anchor, scope, pooled, sealed,
+                       gen_tag, timeout, deadline_us)
+    conn._track_async(token, sealed=sealed, typed=True,
+                      cleanup=stream._release_scope_once)
+    if inline:
+        # the two-core analogue for single-threaded setups: process the
+        # descriptor now and let the consuming thread pump the stream
+        # (same contract — and caveats — as call_inline)
+        conn.channel._process(conn, token[0])
+        conn.ring.head += 1
+        stream._pump = conn.channel.pump_streams
+    return stream
+
+
+class FallbackRpcStream:
+    """Client half of a streaming RPC over the software-coherent link.
+
+    Pull-driven: when the local chunk queue runs dry, one *staged chunk
+    flight* crosses the wire — the server advances the generator up to
+    ``window`` chunks and every chunk page migrates back in ONE bulk
+    transfer (the cMPI amortization applied to the reply chain), so the
+    link latency is paid per flight, not per token.
+    """
+
+    __slots__ = ("conn", "fn_id", "slot", "window", "_scope", "_sealed",
+                 "_seal_idx", "_gen", "_deadline_us", "_timeout", "_srv",
+                 "_pending", "_prev", "_seq", "_state", "_exc",
+                 "_scope_released")
+
+    def __init__(self, conn, fn_id: int, slot: int, scope: Scope,
+                 sealed: bool, seal_idx: int, gen_tag: int, window: int,
+                 deadline_us: int, timeout: float):
+        self.conn = conn
+        self.fn_id = fn_id
+        self.slot = slot
+        self.window = window
+        self._scope = scope
+        self._sealed = sealed
+        self._seal_idx = seal_idx
+        self._gen = gen_tag
+        self._deadline_us = deadline_us
+        self._timeout = timeout
+        self._srv: Optional[ServerStream] = None
+        self._pending: List[int] = []   # migrated, not yet consumed
+        self._prev = 0
+        self._seq = 0
+        self._state = _PENDING
+        self._exc: Optional[BaseException] = None
+        self._scope_released = False
+
+    def __iter__(self) -> "FallbackRpcStream":
+        return self
+
+    def __next__(self):
+        return self.next()
+
+    def next(self, timeout: Optional[float] = None):
+        if self._state == _DONE:
+            raise StopIteration
+        if self._state != _PENDING:
+            raise self._exc
+        conn = self.conn
+        if conn.closed:
+            self._teardown(ChannelError(
+                "connection closed with the stream in flight"))
+            raise self._exc
+        if not self._pending:
+            if self._srv is None or self._srv.done:
+                return self._settle_slot()
+            self._pending.extend(conn.pump_stream(self._srv, self.window))
+            if not self._pending:
+                return self._settle_slot()
+        return self._consume_chunk(self._pending.pop(0))
+
+    # -- chunk consumption -----------------------------------------------
+    def _consume_chunk(self, addr: int):
+        conn = self.conn
+        node = conn.client
+        (_nxt, cgen, seq, cflags, aux, vpayload) = _CHUNK.unpack(
+            bytes(node.read(addr, _CHUNK.size)))
+        if cgen != self._gen:
+            self._teardown(ChannelError(
+                f"stale stream chunk: generation {cgen} != {self._gen}"))
+            raise self._exc
+        if cflags == CH_VALUE:
+            if seq != self._seq:
+                self._teardown(ChannelError(
+                    f"stream chunk out of order: {seq} != {self._seq}"))
+                raise self._exc
+            value = serial.decode(bytes(node.read(vpayload, aux)))
+            self._seq += 1
+            if self._prev:
+                _recycle_chunk(conn, self._prev)
+            self._prev = addr
+            return value
+        self._settle(addr, None if cflags == CH_END else aux)
+        if self._state == _FAILED:
+            raise self._exc
+        raise StopIteration
+
+    def _settle(self, last_addr: int, status: Optional[int]) -> None:
+        conn = self.conn
+        conn.link.send_msg(CHUNK_HDR_BYTES)   # completion descriptor
+        _ret, _state, _status = conn.ring.consume(self.slot)
+        self._release_seal_once()
+        if self._prev:
+            _recycle_chunk(conn, self._prev)
+            self._prev = 0
+        _recycle_chunk(conn, last_addr)
+        self._release_scope_once()
+        conn.n_calls += 1
+        conn._drop_client_stream(self)
+        if status is None:
+            self._state = _DONE
+            return
+        self._state = _FAILED
+        self._exc = DeadlineExceeded("RPC deadline lapsed") \
+            if status == E_DEADLINE else RpcError(status)
+
+    def _settle_slot(self):
+        """No chunks and no live server stream: the call failed before
+        (or without) streaming — surface the recorded error."""
+        conn = self.conn
+        ring = conn.ring
+        if ring.state_of(self.slot) < R_DONE:
+            self._teardown(ChannelError("stream produced no chunks"))
+            raise self._exc
+        ret, state, status = ring.consume(self.slot)
+        exc = conn._flight_errors.pop(self.slot, None)
+        self._release_seal_once()
+        self._release_scope_once()
+        conn._drop_client_stream(self)
+        if state == R_DONE:
+            _recycle_reply(conn, ret)
+        if exc is None:
+            if status == E_DEADLINE:
+                exc = DeadlineExceeded("RPC deadline lapsed")
+            elif state == R_ERR:
+                exc = RpcError(status)
+            else:
+                exc = ChannelError(
+                    "handler completed without streaming (declare the "
+                    "method with @method(streaming=True))")
+        self._state = _FAILED
+        self._exc = exc
+        raise exc
+
+    # -- cancellation / hygiene ------------------------------------------
+    def close(self) -> None:
+        """Abandon the stream: abort the server generator, consume the
+        slot, and drain every client-held resource exactly once."""
+        if self._state != _PENDING:
+            return
+        conn = self.conn
+        if self._srv is not None and not self._srv.done:
+            self._srv.abort()
+            if conn.ring.state_of(self.slot) < R_DONE:
+                conn.ring.complete(self.slot, 0, R_ERR, E_EXCEPTION)
+        if conn.ring.state_of(self.slot) >= R_DONE:
+            conn.ring.consume(self.slot)
+        conn._flight_errors.pop(self.slot, None)
+        self._teardown(ChannelError("stream cancelled"))
+
+    def _fail_on_close(self) -> None:
+        """Connection-close hook: fail the waiter with ChannelError and
+        drain the argument scope exactly once (chunk scopes die with the
+        connection's reply/chain registries)."""
+        if self._srv is not None:
+            self._srv.abort()
+        if self._state == _PENDING:
+            self._state = _FAILED
+            self._exc = ChannelError(
+                "connection closed with the stream in flight")
+        self._release_scope_once()
+
+    def _teardown(self, exc: BaseException) -> None:
+        conn = self.conn
+        self._release_seal_once()
+        for addr in (*([self._prev] if self._prev else ()),
+                     *self._pending):
+            _recycle_chunk(conn, addr)
+        self._prev = 0
+        self._pending.clear()
+        self._release_scope_once()
+        conn._drop_client_stream(self)
+        self._state = _FAILED
+        self._exc = exc
+
+    def _release_seal_once(self) -> None:
+        if self._sealed:
+            self._sealed = False
+            try:
+                self.conn.seals.release(self._seal_idx,
+                                        holder=self.conn.client_pid)
+            except SealViolation:
+                pass
+
+    def _release_scope_once(self) -> None:
+        if not self._scope_released:
+            self._scope_released = True
+            if self._scope.live:
+                self._scope.destroy()
+
+
+def invoke_stream_fallback(conn, fn_id: int, args: Tuple,
+                           sealed: bool = False, sandboxed: bool = False,
+                           deadline: Optional[float] = None,
+                           timeout: float = 10.0,
+                           window: int = STREAM_FLIGHT_CHUNKS,
+                           **_ignored) -> FallbackRpcStream:
+    """Streaming typed invoke over the link: by-value args cross once,
+    then the reply chain comes back in staged flights of up to ``window``
+    chunks per wire flush."""
+    payload = serial.encode(_args_to_plain(args))
+    nbytes = _ANCHOR.size + _BLOB_HDR.size + len(payload)
+    scope = conn.create_scope(nbytes)
+    conn._stream_gen += 1
+    gen_tag = conn._stream_gen
+    deadline_us = _deadline_word(deadline)
+    try:
+        anchor = scope.alloc(_ANCHOR.size)
+        a = scope.alloc(_BLOB_HDR.size + len(payload))
+        conn.client.write(a, _BLOB_HDR.pack(len(payload)) + payload,
+                          pid=conn.client_pid)
+        conn.client.write(anchor,
+                          _ANCHOR.pack(0, gen_tag, 0, a, window, 0),
+                          pid=conn.client_pid)
+        slot, seal_idx = conn._post(fn_id, anchor, scope, sealed,
+                                    sandboxed,
+                                    F_TYPED | F_BYVAL | F_STREAM,
+                                    deadline_us)
+    except BaseException:
+        scope.destroy()
+        raise
+    conn.n_invokes += 1
+    conn.marshal_bytes += len(payload)
+    stream = FallbackRpcStream(conn, fn_id, slot, scope, sealed, seal_idx,
+                               gen_tag, window, deadline_us, timeout)
+    conn.start_stream(stream)
+    return stream
 
 
 # ---------------------------------------------------------------------------

@@ -26,10 +26,10 @@ Failure model reproduced from Fig. 5:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
-from .errors import ChannelError, LeaseExpired, QuotaExceeded
+from .errors import ChannelError, QuotaExceeded
 from .heap import SharedHeap
 
 DEFAULT_LEASE_TTL = 5.0  # seconds; librpcool auto-renews at ttl/2

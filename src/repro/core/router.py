@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from . import addr as gaddr
 from .channel import Channel, Connection
@@ -401,6 +401,19 @@ class RoutedConnection:
                                target.invoke_async(fn_id, *args, **kw),
                                retryable)
 
+    def invoke_stream(self, fn_id: int, *args, **kw):
+        """Streaming typed invoke bound to the endpoint *name*: the same
+        chunk-chain iterator on every route (CXL push-mode pumping /
+        fallback staged chunk flights). The returned ``RoutedRpcStream``
+        is failover-*aware* but not failover-transparent: a stream that
+        already delivered chunks cannot be silently replayed against a
+        replica, so a mid-stream failover surfaces ``ChannelError`` and
+        the caller decides whether to restart the stream."""
+        target = self._ensure()
+        self._check_graph_args(target, args)
+        return RoutedRpcStream(self, target.invoke_stream(fn_id, *args,
+                                                          **kw))
+
     def _check_graph_args(self, target, args) -> None:
         """A GraphRef built in the heap of a target this handle has since
         failed away from is stale: that heap is lease-reclaimed, and
@@ -556,3 +569,45 @@ class RoutedRpcFuture:
             self._value = rc.invoke(self.fn_id, *self.args, **self.kw)
         self._settled = True
         return self._value
+
+
+class RoutedRpcStream:
+    """A streaming reply bound to an endpoint *name*: wraps the live
+    target's chunk iterator. Unlike ``RoutedRpcFuture`` there is no
+    transparent retry — chunks already delivered cannot be un-delivered,
+    so a failover mid-stream surfaces ``ChannelError`` (§4.6: the lease
+    machinery reclaimed the chain pages with the dead server) and the
+    caller restarts the stream if the method is idempotent."""
+
+    __slots__ = ("rc", "inner")
+
+    def __init__(self, rc: RoutedConnection, inner):
+        self.rc = rc
+        self.inner = inner
+
+    def __iter__(self) -> "RoutedRpcStream":
+        return self
+
+    def __next__(self):
+        return self.next()
+
+    def next(self, timeout: Optional[float] = None):
+        rc = self.rc
+        if not rc.closed and rc.generation != rc.endpoint.generation:
+            self.inner.close()
+            raise ChannelError(
+                "endpoint failed over mid-stream: the reply chain died "
+                "with the old server — restart the stream")
+        try:
+            return self.inner.next(timeout)
+        except (DeadlineExceeded, StopIteration):
+            raise
+        except ChannelError:
+            if rc.generation != rc.endpoint.generation:
+                raise ChannelError(
+                    "endpoint failed over mid-stream: the reply chain "
+                    "died with the old server — restart the stream")
+            raise
+
+    def close(self) -> None:
+        self.inner.close()

@@ -25,7 +25,7 @@ signal-to-error-reply path (§4.4).
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -68,11 +68,12 @@ class MethodSpec:
     """One method's wire identity + per-method options."""
 
     __slots__ = ("name", "fn_id", "sealed", "sandboxed", "byval",
-                 "deadline", "retry")
+                 "deadline", "retry", "streaming")
 
     def __init__(self, name: str, fn_id: int, sealed: bool = False,
                  sandboxed: bool = False, byval: bool = False,
-                 deadline: Optional[float] = None, retry: int = 0):
+                 deadline: Optional[float] = None, retry: int = 0,
+                 streaming: bool = False):
         self.name = name
         self.fn_id = fn_id
         self.sealed = sealed
@@ -80,26 +81,31 @@ class MethodSpec:
         self.byval = byval
         self.deadline = deadline
         self.retry = retry
+        self.streaming = streaming
 
     def __repr__(self) -> str:  # pragma: no cover
         return (f"<MethodSpec {self.name} fn_id=0x{self.fn_id:08x} "
                 f"sealed={self.sealed} sandboxed={self.sandboxed} "
                 f"byval={self.byval} deadline={self.deadline} "
-                f"retry={self.retry}>")
+                f"retry={self.retry} streaming={self.streaming}>")
 
 
 def method(fn=None, *, fn_id: Optional[int] = None, sealed: bool = False,
            sandboxed: bool = False, byval: bool = False,
-           deadline: Optional[float] = None, retry: int = 0):
+           deadline: Optional[float] = None, retry: int = 0,
+           streaming: bool = False):
     """Set a service method's per-method options. Usable bare
     (``@method``) or parameterized (``@method(sealed=True)``). Every
     public method of a ``@service`` class is exported either way —
     undecorated methods get the defaults; underscore-prefixed methods
-    stay private helpers."""
+    stay private helpers. ``streaming=True`` declares a generator
+    handler: clients consume it with ``stub.m.stream(...)`` (or drain it
+    to a list with a plain sync call)."""
     def deco(f):
         f.__rpc_method__ = dict(fn_id=fn_id, sealed=sealed,
                                 sandboxed=sandboxed, byval=byval,
-                                deadline=deadline, retry=retry)
+                                deadline=deadline, retry=retry,
+                                streaming=streaming)
         return f
     return deco(fn) if fn is not None else deco
 
@@ -185,7 +191,8 @@ def service(cls=None, *, name: Optional[str] = None):
                 sandboxed=opts.get("sandboxed", False),
                 byval=opts.get("byval", False),
                 deadline=opts.get("deadline"),
-                retry=opts.get("retry", 0))
+                retry=opts.get("retry", 0),
+                streaming=opts.get("streaming", False))
         klass.__service_def__ = ServiceDef(svc_name, methods)
         return klass
     return deco(cls) if cls is not None else deco
@@ -210,16 +217,19 @@ def service_def(obj) -> ServiceDef:
 class ClientCall:
     """What a client interceptor sees for one stub dispatch."""
 
-    __slots__ = ("service", "spec", "args", "kwargs", "is_future", "conn")
+    __slots__ = ("service", "spec", "args", "kwargs", "is_future", "conn",
+                 "is_stream")
 
     def __init__(self, svc: str, spec: MethodSpec, args: Tuple,
-                 kwargs: dict, is_future: bool, conn):
+                 kwargs: dict, is_future: bool, conn,
+                 is_stream: bool = False):
         self.service = svc
         self.spec = spec
         self.args = args
         self.kwargs = kwargs
         self.is_future = is_future
         self.conn = conn
+        self.is_stream = is_stream
 
     @property
     def method(self) -> str:
@@ -319,7 +329,10 @@ class RetryInterceptor(Interceptor):
 
     def intercept(self, call, proceed):
         retries = call.spec.retry or self.default_retries
-        if call.is_future or retries <= 0 or not _retry_safe(call):
+        if call.is_future or call.is_stream or retries <= 0 or \
+                not _retry_safe(call):
+            # streams pass through too: delivered chunks cannot be
+            # un-delivered, so a failed stream is the caller's restart
             return proceed()
         for attempt in range(retries + 1):
             try:
@@ -343,8 +356,10 @@ def _retry_safe(call: ClientCall) -> bool:
 # ---------------------------------------------------------------------------
 class StubMethod:
     """One method proxy: ``stub.get(k)`` is a sync typed invoke,
-    ``stub.get.future(k)`` a pipelined one. Per-call overrides:
-    ``timeout``, ``deadline``, ``inline`` (sync only)."""
+    ``stub.get.future(k)`` a pipelined one, ``stub.get.stream(k)`` the
+    chunk iterator of a ``streaming=True`` method. Per-call overrides:
+    ``timeout``, ``deadline``, ``inline`` (sync/stream), ``window``
+    (stream only)."""
 
     __slots__ = ("_conn", "_spec", "_run", "_svc", "spec")
 
@@ -360,9 +375,24 @@ class StubMethod:
                                     overrides, False, self._conn))
 
     def future(self, *args, **overrides):
+        if self._spec.streaming:
+            raise ChannelError(
+                f"{self._svc}.{self._spec.name} is streaming — consume "
+                "it with .stream(...) (or a sync call to buffer it)")
         overrides.pop("inline", None)   # futures never run inline
         return self._run(ClientCall(self._svc, self._spec, args,
                                     overrides, True, self._conn))
+
+    def stream(self, *args, **overrides):
+        """Server-push streaming dispatch: returns the route-appropriate
+        ``RpcStream`` / ``FallbackRpcStream`` / ``RoutedRpcStream``."""
+        if not self._spec.streaming:
+            raise ChannelError(
+                f"{self._svc}.{self._spec.name} is not a streaming "
+                "method (declare it with @method(streaming=True))")
+        return self._run(ClientCall(self._svc, self._spec, args,
+                                    overrides, False, self._conn,
+                                    is_stream=True))
 
 
 def _client_final(call: ClientCall):
@@ -377,6 +407,17 @@ def _client_final(call: ClientCall):
         kw.setdefault("sandboxed", True)
     if spec.deadline is not None:
         kw.setdefault("deadline", spec.deadline)
+    if call.is_stream or (spec.streaming and not call.is_future):
+        args = call.args
+        if spec.byval:
+            from .marshal import _args_to_plain
+            args = tuple(_args_to_plain(args))
+        stream = conn.invoke_stream(spec.fn_id, *args, **kw)
+        if call.is_stream:
+            return stream
+        # sync dispatch of a streaming method buffers the whole chain —
+        # the baseline arm of the TTFT comparison, and a convenience
+        return list(stream)
     if call.is_future:
         args = call.args
         if spec.byval:

@@ -5,7 +5,6 @@ Drop-in for ``models.ssm.ssd_chunked`` (same signature/semantics).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

@@ -106,7 +106,6 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
       train : remat_dots | accum8
       decode: uniform_pos | kv8
     """
-    import contextlib
 
     import jax
     import jax.numpy as jnp
@@ -116,13 +115,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     from repro.models.config import SHAPES
     from repro.sharding import use_rules
     from repro.launch.mesh import make_production_mesh
-    from repro.launch.sharding import (
-        input_specs,
-        rules_for,
-        sharding_tree,
-        spec_tree,
-        zero_sharding_tree,
-    )
+    from repro.launch.sharding import input_specs, rules_for, \
+        sharding_tree, zero_sharding_tree
     from repro.models.transformer import stack_cache_axes
     from repro.training import AdamWConfig, init_opt_state, make_train_step
     from jax.sharding import NamedSharding, PartitionSpec as P

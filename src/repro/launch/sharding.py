@@ -19,7 +19,7 @@ into the largest still-unsharded divisible dim.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import numpy as np
 

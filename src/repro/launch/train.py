@@ -15,12 +15,10 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def small_lm_config(d_model: int, layers: int, vocab: int = 32000):

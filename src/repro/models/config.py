@@ -9,8 +9,8 @@ jamba 1:7 attn:mamba with MoE every 2) scan cleanly over identical periods.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Tuple
 
 
 @dataclass(frozen=True)

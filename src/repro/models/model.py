@@ -14,7 +14,6 @@ logits kept vocab-sharded.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -23,15 +22,8 @@ import jax.numpy as jnp
 from ..sharding import shard
 from .config import ModelConfig
 from .layers import embed_tokens, init_embed, init_norm, apply_norm, unembed
-from .transformer import (
-    apply_stack_decode,
-    apply_stack_full,
-    empty_stack_cache,
-    encode,
-    init_encoder,
-    init_stack,
-    stack_layer_axes,
-)
+from .transformer import apply_stack_decode, apply_stack_full, \
+    empty_stack_cache, encode, init_encoder, init_stack
 
 Params = Dict[str, Any]
 

@@ -13,9 +13,7 @@ here treat those tuples as leaves.
 
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,15 +26,7 @@ from .attention import (
     init_attention,
 )
 from .config import LayerSpec, ModelConfig
-from .layers import (
-    apply_norm,
-    embed_tokens,
-    init_embed,
-    init_mlp,
-    init_norm,
-    mlp_apply,
-    unembed,
-)
+from .layers import apply_norm, init_mlp, init_norm, mlp_apply
 from .moe import init_moe, moe_apply
 from .ssm import empty_ssm_state, init_ssm, ssm_decode_step, ssm_forward
 

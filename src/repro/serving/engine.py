@@ -27,10 +27,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.channel import BusyWaitPolicy, RPC, RpcError, ServerLoop
+from ..core.channel import BusyWaitPolicy, RPC, ServerLoop
 from ..core.orchestrator import Orchestrator
 from ..core.router import ClusterRouter
-from ..core.service import method, service, service_def
+from ..core.service import method, service
 from ..models.config import ModelConfig
 from ..models.model import build_model
 from .kv_pool import PagedKVPool, PoolConfig
@@ -65,6 +65,16 @@ class DecodeService:
         assert req.rid == rid and req.pages == pages
         engine.active.append(req)
         return 0
+
+    @method(streaming=True, deadline=120.0)
+    def generate_stream(self, ctx, prompt, max_new):
+        """Token-streaming decode: each token is pushed onto the reply
+        chain the moment its paged decode step completes, instead of
+        buffering the full sequence — the client's time-to-first-token
+        is one decode step, not ``max_new`` of them."""
+        if hasattr(prompt, "to_python"):
+            prompt = prompt.to_python()
+        return self._engine.generate_tokens(list(prompt), int(max_new))
 
 
 @dataclass
@@ -242,6 +252,55 @@ class ServeEngine:
         if not worked:
             self.policy.sleep()
         return worked
+
+    def generate_tokens(self, prompt: List[int], max_new: int = 16):
+        """Single-request streaming decode (the generator behind the
+        ``decode.generate_stream`` RPC): prefill once, then yield each
+        token as its paged decode step completes. Same kernels and pool
+        as the batched ``submit``/``result`` path — only the delivery
+        changes (tokens stream instead of buffering)."""
+        if max_new <= 0:
+            return
+        total = len(prompt) + max_new
+        pages = self.pool.alloc_seq(total, self.conn_id)
+        seal_idxs: List[int] = []
+        try:
+            toks = jnp.asarray(prompt, jnp.int32)[None]
+            logits, k, v = prefill_kv(self.model, self.params, toks)
+            self.pool.write_prefill(k[:, 0], v[:, 0], pages, len(prompt))
+            # seal for the flight of the generation: the paged-attention
+            # kernel verifies the seal on every dereference (Fig. 8
+            # step 4, done in silicon) — unsealed pages are masked
+            seal_idxs = self.pool.seal_seq(pages, holder=self.client_pid)
+            cur = int(jnp.argmax(logits[0]))
+            pos = len(prompt)
+            yield cur
+            emitted = 1
+            bt = np.zeros((1, self.pool.pc.max_pages_per_seq), np.int32)
+            bt[0, : len(pages)] = pages
+            while emitted < max_new:
+                logits, self.pool.k, self.pool.v, oob = paged_decode_step(
+                    self.cfg, self.params,
+                    jnp.asarray([cur], jnp.int32),
+                    jnp.asarray([pos], jnp.int32),
+                    jnp.asarray(bt),
+                    jnp.asarray([pos + 1], jnp.int32),
+                    self.pool.k, self.pool.v,
+                    self.pool.perm_bits(), self.pool.sandbox_desc(),
+                    self.pool.sandbox_bitmap(self.conn_id),
+                    backend=self.backend)
+                self.decode_steps += 1
+                self.oob_events += int(jnp.sum(oob))
+                cur = int(jnp.argmax(logits[0]))
+                pos += 1
+                emitted += 1
+                yield cur
+        finally:
+            if seal_idxs:
+                self.pool.complete_and_release(seal_idxs, self.client_pid,
+                                               batched=True)
+                self.pool.seals.flush()
+            self.pool.free_seq(pages)
 
     def run_until_drained(self, timeout: float = 120.0) -> None:
         deadline = time.monotonic() + timeout

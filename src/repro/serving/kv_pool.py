@@ -18,13 +18,13 @@ The pool is the TPU-resident instantiation of the paper's shared heap:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.heap import PERM_SEALED, SharedHeap
+from ..core.heap import SharedHeap
 from ..core.orchestrator import Orchestrator
 from ..core.seal import SealManager
 from ..models.config import ModelConfig

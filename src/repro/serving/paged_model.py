@@ -12,14 +12,14 @@ decode path for the dry-run uses the scan-based dense-cache model).
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..kernels.paged_attention.ops import paged_attention
 from ..models.attention import _project_kv, _project_q
-from ..models.config import LayerSpec, ModelConfig
+from ..models.config import ModelConfig
 from ..models.layers import apply_norm, apply_rope, embed_tokens, mlp_apply, unembed
 from ..models.model import Model
 

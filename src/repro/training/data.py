@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from dataclasses import dataclass
 from typing import Dict, Iterator, Optional
 

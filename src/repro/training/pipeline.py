@@ -14,8 +14,7 @@ schedule, bubble fraction (n_stages−1)/(n_micro+n_stages−1)).
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -11,14 +11,13 @@ decomposition over the ("pod","data") axes).
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
 
 from ..models.model import Model
-from .optimizer import AdamWConfig, adamw_update, init_opt_state
+from .optimizer import AdamWConfig, adamw_update
 
 Params = Any
 Batch = Dict[str, Any]

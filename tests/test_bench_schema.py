@@ -18,6 +18,7 @@ ARTIFACTS = sorted(REPO_ROOT.glob("BENCH_*.json"))
 
 # the single source of truth lives in the harness
 from benchmarks.run import SCHEMA_FIELDS, SUITE_NAMES  # noqa: E402
+from benchmarks.check_smoke import CHECKS, run_check  # noqa: E402
 
 
 def test_artifacts_exist():
@@ -56,3 +57,14 @@ def test_suite_registry_covers_artifact_suites():
         stem = path.stem.replace("BENCH_", "")
         assert stem in SUITE_NAMES, \
             f"{path.name} does not match any --list-suites entry"
+
+
+@pytest.mark.parametrize("suite", sorted(CHECKS))
+def test_ci_smoke_gate_passes_on_committed_artifact(suite):
+    """The CI smoke gates (benchmarks/check_smoke.py) must hold on the
+    committed full-run artifacts — a gate that drifts from its suite's
+    schema fails here before CI ever sees it."""
+    path = REPO_ROOT / f"BENCH_{suite}.json"
+    assert path.exists(), f"{path.name} is not committed"
+    line = run_check(suite, str(path))
+    assert line   # each gate returns its visibility summary

@@ -1,34 +1,15 @@
 """Unit + behaviour tests for the RPCool core (heap/scope/seal/sandbox/
 channel/orchestrator/fallback/containers)."""
 
-import threading
 
 import numpy as np
 import pytest
 
-from repro.core import (
-    AllocationError,
-    BusyWaitPolicy,
-    Channel,
-    ChannelError,
-    DescriptorRing,
-    FallbackConnection,
-    InvalidPointer,
-    Orchestrator,
-    QuotaExceeded,
-    RING_DTYPE,
-    RPC,
-    RpcError,
-    SandboxManager,
-    SandboxViolation,
-    Scope,
-    ScopePool,
-    SealManager,
-    SealViolation,
-    SealedPageError,
-    SharedHeap,
-    create_scope,
-)
+from repro.core import AllocationError, BusyWaitPolicy, ChannelError, \
+    DescriptorRing, FallbackConnection, InvalidPointer, Orchestrator, \
+    QuotaExceeded, RING_DTYPE, RPC, RpcError, SandboxManager, \
+    SandboxViolation, SealManager, SealViolation, SealedPageError, \
+    SharedHeap, create_scope
 from repro.core import addr as ga
 from repro.core import containers as C
 from repro.core import serial
@@ -461,7 +442,7 @@ class TestChannel:
 
     def test_shared_heap_channel(self):
         orch = Orchestrator()
-        ch = RPC(orch, pid=1).open("shared", shared_heap=True)
+        RPC(orch, pid=1).open("shared", shared_heap=True)
         c1 = RPC(orch, pid=2).connect("shared")
         c2 = RPC(orch, pid=3).connect("shared")
         assert c1.heap is c2.heap  # Fig. 4b channel-wide heap
@@ -647,7 +628,7 @@ class TestSerial:
     def test_serial_channel_roundtrip(self):
         ch = serial.SerialChannel()
         ch.add(1, lambda obj: {"echo": obj["msg"]})
-        th = ch.listen_in_thread()
+        ch.listen_in_thread()
         try:
             assert ch.call(1, {"msg": "hi"}) == {"echo": "hi"}
             assert ch.bytes_sent > 0

@@ -10,7 +10,6 @@ for the smoke tests), exercising:
   * dry-run cell on the reduced mesh end-to-end
 """
 
-import json
 import os
 import subprocess
 import sys

@@ -118,7 +118,7 @@ class TestStaleCacheNeverGrantsRecycledPages:
         scope = create_scope(heap, 2 * heap.page_size, owner=7)
         rng = scope.page_range()
         with mgr.enter(*rng) as sb:
-            key = sb.key
+            _key = sb.key
         assert mgr.cache_hits == 0 and mgr.cache_misses == 1
 
         # free the pages and hand the SAME range to another owner
@@ -164,7 +164,7 @@ class TestStaleCacheNeverGrantsRecycledPages:
         scope = create_scope(heap, 2 * heap.page_size)
         start, count = scope.page_range()
         with mgr.enter(start, count) as sb:
-            key = sb.key
+            _key = sb.key
         scope.destroy()
         # a fresh enter on the (freed→invalid) range re-assigns cleanly
         heap.alloc_pages(count)

@@ -9,7 +9,6 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core.errors import AllocationError
 from repro.core.orchestrator import Orchestrator
 from repro.models import build_model
 from repro.serving import PagedKVPool, PoolConfig, ServeEngine
@@ -66,7 +65,7 @@ class TestEngine:
         """The RPC payload must be O(pages·8B), not O(KV bytes)."""
         cfg, m, params = small_lm
         eng = mk_engine(cfg, params)
-        rid = eng.submit(list(range(1, 17)), max_new=2)  # 16 tokens
+        eng.submit(list(range(1, 17)), max_new=2)  # 16 tokens
         eng.run_until_drained()
         kv_bytes = (2 * cfg.num_layers * 16 * cfg.num_kv_heads
                     * cfg.head_dim * 2)
@@ -119,6 +118,25 @@ class TestEngine:
         eng._decode_batch()
         assert eng.oob_events >= 1
         eng.active = []  # drop the poisoned request
+
+    def test_token_streaming_decode_matches_batched(self, small_lm):
+        """decode.generate_stream emits tokens as they decode; the
+        streamed sequence must equal the batched submit/result path
+        (same kernels, same pool — only the delivery changes)."""
+        cfg, m, params = small_lm
+        eng = mk_engine(cfg, params)
+        prompt = [5, 6, 7, 8]
+        rid = eng.submit(prompt, max_new=6)
+        eng.run_until_drained()
+        ref = eng.result(rid)
+        free0 = eng.pool.heap.free_pages()
+        streamed = list(eng.stub.generate_stream.stream(prompt, 6,
+                                                        inline=True))
+        assert streamed == ref
+        # the stream's pages, seals and chunk scopes were all reclaimed
+        assert eng.pool.heap.free_pages() == free0
+        # boundary: max_new=0 yields nothing (not the prefill token)
+        assert list(eng.generate_tokens(prompt, max_new=0)) == []
 
 
 class TestCrossPodFallback:

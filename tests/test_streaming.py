@@ -1,0 +1,545 @@
+"""Streaming RPCs: generation-tagged reply chains on the ring.
+
+Covers the fourth calling convention end to end: generator handlers on
+all three connection types (CXL ring / fallback link / routed), chunk
+ordering under out-of-order sweeps, mid-stream failover, stream deadline
+lapse, bounded-window backpressure, cancellation, and the close()-drain
+hygiene the futures layer already guarantees.
+"""
+
+import time
+
+import pytest
+
+from repro.core import (
+    BusyWaitPolicy,
+    ChannelError,
+    ClusterRouter,
+    DeadlineExceeded,
+    FallbackConnection,
+    Orchestrator,
+    RPC,
+    RpcError,
+    ServerLoop,
+    build_graph,
+    method,
+    service,
+)
+from repro.core.channel import E_EXCEPTION, E_SANDBOX, R_DONE
+from repro.core.marshal import DEFAULT_STREAM_WINDOW
+from repro.core.service import ServiceStub, service_def
+
+
+@service
+class StreamSvc:
+    @method(streaming=True)
+    def count(self, ctx, n):
+        for i in range(n):
+            yield i * 10
+
+    @method(streaming=True)
+    def docs(self, ctx, n):
+        for i in range(n):
+            yield {"i": i, "text": "tok%d" % i}
+
+    @method(streaming=True)
+    def explode(self, ctx, n):
+        for i in range(n):
+            yield i
+        raise RuntimeError("boom after %d" % n)
+
+    @method(streaming=True, deadline=0.05)
+    def slow(self, ctx, n):
+        for i in range(n):
+            time.sleep(0.02)
+            yield i
+
+    @method(streaming=True, sandboxed=True)
+    def echo_each(self, ctx, items):
+        for i in range(len(items)):
+            yield items[i]
+
+    @method(streaming=True, sealed=True)
+    def sealed_count(self, ctx, n):
+        for i in range(n):
+            yield i + 100
+
+    def plain(self, ctx, x):
+        return x + 1
+
+
+def _mk_cxl(pages=512):
+    orch = Orchestrator()
+    ch = RPC(orch, pid=1).open("/pod0/stream", heap_pages=pages)
+    ch.serve(StreamSvc())
+    conn = RPC(orch, pid=2).connect("/pod0/stream")
+    return orch, ch, conn
+
+
+# ---------------------------------------------------------------------------
+# CXL ring
+# ---------------------------------------------------------------------------
+class TestCxlStreaming:
+    def test_inline_stream_all_values_in_order(self):
+        _, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        assert list(stub.count.stream(10, inline=True)) == \
+            [i * 10 for i in range(10)]
+        # nothing leaks: a second stream reuses the recycled chain scopes
+        used = conn.heap.used_pages()
+        assert list(stub.count.stream(10, inline=True)) == \
+            [i * 10 for i in range(10)]
+        assert conn.heap.used_pages() == used
+
+    def test_threaded_stream(self):
+        _, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        loop = ServerLoop([ch], BusyWaitPolicy())
+        loop.run_in_thread()
+        try:
+            assert list(stub.docs.stream(6)) == \
+                [{"i": i, "text": "tok%d" % i} for i in range(6)]
+        finally:
+            loop.stop()
+
+    def test_sync_dispatch_buffers_the_chain(self):
+        _, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        assert stub.count(4, inline=True) == [0, 10, 20, 30]
+
+    def test_future_on_streaming_method_refused(self):
+        _, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        with pytest.raises(ChannelError, match="streaming"):
+            stub.count.future(3)
+
+    def test_stream_on_plain_method_refused_client_side(self):
+        _, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        with pytest.raises(ChannelError, match="not a streaming"):
+            stub.plain.stream(1)
+
+    def test_raw_invoke_stream_with_graphref(self):
+        _, ch, conn = _mk_cxl()
+        fn = service_def(StreamSvc).methods["count"].fn_id
+        g = build_graph(conn, 5)
+        s = conn.invoke_stream(fn, g, inline=True)
+        assert list(s) == [0, 10, 20, 30, 40]
+
+    def test_handler_exception_mid_stream(self):
+        _, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        s = stub.explode.stream(3, inline=True)
+        assert next(s) == 0 and next(s) == 1 and next(s) == 2
+        with pytest.raises(RpcError) as e:
+            next(s)
+        assert e.value.status == E_EXCEPTION
+        # terminal: the error sticks, the iterator never resurrects
+        with pytest.raises(RpcError):
+            next(s)
+
+    def test_generation_tags_differ_per_stream(self):
+        _, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        s1 = stub.count.stream(2, inline=True)
+        assert list(s1) == [0, 10]
+        s2 = stub.count.stream(2, inline=True)
+        assert s2._gen > s1._gen
+        assert list(s2) == [0, 10]
+
+    def test_interleaved_streams_and_rpcs_out_of_order_sweeps(self):
+        """Two streams plus plain RPCs on one channel, pumped by explicit
+        sweeps: chunks are delivered as they land, interleaved with other
+        work, and each chain stays in order."""
+        orch, ch, conn = _mk_cxl()
+        conn2 = RPC(orch, pid=3).connect("/pod0/stream")
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        stub2 = ServiceStub(conn2, service_def(StreamSvc))
+
+        def drain(s, out):
+            while True:
+                ch.serve_many()
+                try:
+                    out.append(s.next(timeout=1.0))
+                except StopIteration:
+                    return
+
+        s1 = stub.count.stream(5, window=2)
+        ch.serve_once()               # starts s1, emits up to the window
+        s2 = stub2.count.stream(5, window=2)
+        ch.serve_once()               # starts s2 while s1 is mid-flight
+        got1 = [s1.next(timeout=1.0), s1.next(timeout=1.0)]
+        got2 = [s2.next(timeout=1.0)]
+        ch.serve_many()               # refill both windows
+        got1.append(s1.next(timeout=1.0))
+        # a plain RPC on the same rings proceeds while streams are open
+        assert stub2.plain(1, inline=True) == 2
+        drain(s1, got1)
+        drain(s2, got2)
+        assert got1 == [0, 10, 20, 30, 40]
+        assert got2 == [0, 10, 20, 30, 40]
+        conn2.close()
+
+    def test_bounded_window_backpressure(self):
+        """The server never emits more than ``window`` unconsumed value
+        chunks, however many sweeps run."""
+        orch, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        s = stub.count.stream(50, window=3)
+        for _ in range(10):
+            ch.serve_many()
+        srv = ch._streams[0]
+        assert srv.seq == 3           # stalled exactly at the window
+        assert next(s) == 0           # consume one...
+        ch.serve_many()
+        assert srv.seq == 4           # ...window slides by one
+        # drain the rest with explicit pumping
+        rest = []
+        while True:
+            ch.serve_many()
+            try:
+                rest.append(s.next(timeout=1.0))
+            except StopIteration:
+                break
+        assert rest == [i * 10 for i in range(1, 50)]
+
+    def test_default_window_used_when_unspecified(self):
+        orch, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        stub.count.stream(50)
+        for _ in range(5):
+            ch.serve_many()
+        assert ch._streams[0].seq == DEFAULT_STREAM_WINDOW
+
+    def test_stream_deadline_lapses_mid_stream(self):
+        """decode slower than the budget: the server aborts the chain
+        with E_DEADLINE and the client sees DeadlineExceeded."""
+        _, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        loop = ServerLoop([ch], BusyWaitPolicy())
+        loop.run_in_thread()
+        try:
+            s = stub.slow.stream(50)   # 20 ms/token vs a 50 ms budget
+            got = []
+            with pytest.raises(DeadlineExceeded):
+                for v in s:
+                    got.append(v)
+            assert len(got) < 50       # some tokens landed, then the axe
+        finally:
+            loop.stop()
+
+    def test_pre_lapsed_deadline_dropped_before_dispatch(self):
+        _, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        s = stub.count.stream(3, deadline=-0.001, inline=True)
+        with pytest.raises(DeadlineExceeded):
+            next(s)
+
+    def test_cancel_aborts_server_generator(self):
+        orch, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        s = stub.count.stream(50, window=4)
+        ch.serve_many()
+        assert next(s) == 0
+        s.close()
+        ch.serve_many()               # server sees the sentinel, aborts
+        assert not ch._streams
+        with pytest.raises(ChannelError, match="cancelled"):
+            next(s)
+        # the slot was completed by the abort and reaped; ring is usable
+        assert stub.plain(1, inline=True) == 2
+
+    def test_pump_survives_client_teardown_race(self):
+        """A serving thread caught mid-pump when the client's anchor
+        pages go back to the heap must drop the stream, not die with
+        InvalidPointer (the ServerLoop is a shared daemon)."""
+        orch, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        s = stub.count.stream(20, window=2)
+        ch.serve_many()
+        srv = ch._streams[0]
+        # simulate the race: the anchor scope's pages go back to the
+        # heap while the server still holds the stream (close() purges
+        # ch._streams, but a pump already in flight sees the freed
+        # pages first)
+        s._scope.destroy()
+        s._scope_released = True   # the iterator must not double-free
+        assert srv.pump() == 0 and srv.done   # dropped, no exception
+        ch.serve_many()                        # loop keeps serving
+
+    def test_close_fails_stream_waiter(self):
+        orch, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        s = stub.count.stream(10, window=2)
+        ch.serve_many()
+        assert next(s) == 0
+        conn.close()
+        with pytest.raises(ChannelError):
+            next(s)
+
+    def test_sandboxed_stream_dereferences_argview_per_yield(self):
+        _, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        items = ["alpha", "beta", "gamma"]
+        assert list(stub.echo_each.stream(items, inline=True)) == items
+
+    def test_sealed_stream_holds_seal_until_chain_ends(self):
+        _, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        s = stub.sealed_count.stream(5, window=2)
+        ch.serve_many()               # emits 2 chunks, stalls at the window
+        assert s.next(timeout=1.0) == 100
+        # mid-stream (chain not ended) the request scope is still sealed
+        assert conn.seals.is_sealed(conn.last_seal_idx)
+        rest = []
+        while True:
+            ch.serve_many()
+            try:
+                rest.append(s.next(timeout=1.0))
+            except StopIteration:
+                break
+        assert rest == [101, 102, 103, 104]
+        assert not conn.seals.is_sealed(conn.last_seal_idx)
+
+    def test_wild_pointer_in_sandboxed_stream_is_e_sandbox(self):
+        _, ch, conn = _mk_cxl()
+
+        def bad(ctx, args):
+            yield int(args[0])
+            ctx.read(0xDEAD000, 64)   # escapes the sandbox
+            yield 1
+
+        ch.add_typed(777, bad)
+        s = conn.invoke_stream(777, 5, sandboxed=True, inline=True)
+        assert next(s) == 5
+        with pytest.raises(RpcError) as e:
+            next(s)
+        assert e.value.status == E_SANDBOX
+
+
+# ---------------------------------------------------------------------------
+# fallback link (staged chunk flights)
+# ---------------------------------------------------------------------------
+class TestFallbackStreaming:
+    def _mk(self, latency=0.0):
+        fb = FallbackConnection(num_pages=1 << 10, link_latency_us=latency)
+        fb.serve(StreamSvc())
+        return fb, ServiceStub(fb, service_def(StreamSvc))
+
+    def test_stream_over_link_staged_flights(self):
+        fb, stub = self._mk()
+        s = stub.count.stream(20, window=4)
+        assert list(s) == [i * 10 for i in range(20)]
+        # 20 value chunks + END at 4 chunks/flight = 6 flights
+        assert fb.n_stream_flights == 6
+
+    def test_chunk_pages_cross_in_bulk(self):
+        fb, stub = self._mk()
+        faults0 = fb.link.page_faults
+        assert list(stub.count.stream(8, window=8)) == \
+            [i * 10 for i in range(8)]
+        # one flight migrated every chunk page at once — page faults grow
+        # by ~flights, not by chunk count
+        assert fb.link.page_faults - faults0 <= 4
+
+    def test_handler_exception_mid_stream(self):
+        fb, stub = self._mk()
+        s = stub.explode.stream(2, window=8)
+        assert next(s) == 0 and next(s) == 1
+        with pytest.raises(RpcError) as e:
+            next(s)
+        assert e.value.status == E_EXCEPTION
+
+    def test_pre_lapsed_deadline(self):
+        fb, stub = self._mk()
+        s = stub.count.stream(3, deadline=-0.001)
+        with pytest.raises(DeadlineExceeded):
+            next(s)
+
+    def test_deadline_lapses_mid_stream(self):
+        fb, stub = self._mk()
+        s = stub.slow.stream(50, window=2)   # 20 ms/token vs 50 ms budget
+        got = []
+        with pytest.raises(DeadlineExceeded):
+            for v in s:
+                got.append(v)
+        assert 0 < len(got) < 50
+
+    def test_close_mid_stream_fails_waiter_exactly_once(self):
+        """The PR-4 drain contract extended to chunk chains: close()
+        with an active stream AND a staged future flight fails both
+        waiters with ChannelError and drains each scope exactly once."""
+        fb, stub = self._mk()
+        plain_fn = service_def(StreamSvc).methods["plain"].fn_id
+        fut = fb.invoke_async(plain_fn, 1)       # staged, never flown
+        s = stub.count.stream(10, window=2)
+        assert next(s) == 0
+        fb.close()
+        with pytest.raises(ChannelError):
+            next(s)
+        with pytest.raises(ChannelError):
+            fut.result()
+        # repeated settling re-raises without double-free
+        with pytest.raises(ChannelError):
+            next(s)
+        with pytest.raises(ChannelError):
+            fut.result()
+        assert not fb._client_streams and not fb._flight
+
+    def test_cancel_client_side(self):
+        fb, stub = self._mk()
+        s = stub.count.stream(30, window=4)
+        assert next(s) == 0
+        s.close()
+        with pytest.raises(ChannelError, match="cancelled"):
+            next(s)
+        # the link remains usable for ordinary calls
+        assert stub.plain(9) == 10
+
+    def test_sealed_stream_on_link(self):
+        fb, stub = self._mk()
+        assert list(stub.sealed_count.stream(4, window=2)) == \
+            [100, 101, 102, 103]
+
+    def test_sandboxed_stream_on_link(self):
+        fb, stub = self._mk()
+        items = ["a", "bb", "ccc"]
+        assert list(stub.echo_each.stream(items, window=2)) == items
+
+    def test_no_page_leak_across_streams(self):
+        fb, stub = self._mk()
+        list(stub.count.stream(10, window=4))
+        used = fb.client.heap.used_pages()
+        list(stub.count.stream(10, window=4))
+        assert fb.client.heap.used_pages() == used
+
+
+# ---------------------------------------------------------------------------
+# routed connections (failover awareness)
+# ---------------------------------------------------------------------------
+def _mk_cluster(lease_ttl=4.0):
+    clock = [0.0]
+    orch = Orchestrator(clock=lambda: clock[0], lease_ttl=lease_ttl)
+    router = ClusterRouter(orch, fallback_link_latency_us=0.0)
+    return clock, orch, router
+
+
+class TestRoutedStreaming:
+    def test_same_pod_rides_cxl(self):
+        clock, orch, router = _mk_cluster()
+        ch = RPC(orch, pid=10).open("/pod0/svc", heap_pages=512)
+        ch.serve(StreamSvc())
+        router.register("/pod0/svc", ch, pod="pod0")
+        stub = router.stub("/pod0/svc", StreamSvc, pid=20, pod="pod0")
+        assert stub.connection.transport == "cxl"
+        got = list(stub.count.stream(5, inline=True))
+        assert got == [i * 10 for i in range(5)]
+
+    def test_cross_pod_rides_fallback(self):
+        clock, orch, router = _mk_cluster()
+        ch = RPC(orch, pid=10).open("/pod0/svc", heap_pages=512)
+        ch.serve(StreamSvc())
+        router.register("/pod0/svc", ch, pod="pod0")
+        stub = router.stub("/pod0/svc", StreamSvc, pid=20, pod="pod1")
+        assert stub.connection.transport == "fallback"
+        assert list(stub.count.stream(5)) == [i * 10 for i in range(5)]
+
+    def test_mid_stream_failover_surfaces_channel_error(self):
+        """Fig. 5a mid-stream: the serving pid's lease lapses between
+        chunks; the next() surfaces ChannelError instead of silently
+        replaying delivered chunks, and a NEW stream against the replica
+        works."""
+        clock, orch, router = _mk_cluster()
+        ch1 = RPC(orch, pid=10).open("/pod0/svc", heap_pages=512)
+        ch1.serve(StreamSvc())
+        ch2 = RPC(orch, pid=11).open("/pod0/svc-replica", heap_pages=512)
+        ch2.serve(StreamSvc())
+        router.register("/pod0/svc", ch1, pod="pod0")
+        router.register("/pod0/svc", ch2)   # replica, same pod
+        orch.assign_pod(11, "pod0")
+        stub = router.stub("/pod0/svc", StreamSvc, pid=20, pod="pod0")
+
+        s = stub.count.stream(10, window=2)
+        ch1.serve_many()
+        assert s.next(timeout=1.0) == 0
+
+        # the primary's lease lapses mid-stream
+        router.mark_crashed(10)
+        for t in (1.0, 2.0, 3.0, 5.0, 7.0):
+            clock[0] = t
+            router.pump()
+        assert router.n_failovers == 1
+        with pytest.raises(ChannelError, match="failed over mid-stream"):
+            s.next(timeout=1.0)
+
+        # restarting the stream transparently re-wires to the replica
+        s2 = stub.count.stream(4, inline=True)
+        assert list(s2) == [0, 10, 20, 30]
+
+    def test_stream_deadline_propagates_through_stub(self):
+        clock, orch, router = _mk_cluster()
+        ch = RPC(orch, pid=10).open("/pod0/svc", heap_pages=512)
+        ch.serve(StreamSvc())
+        router.register("/pod0/svc", ch, pod="pod0")
+        stub = router.stub("/pod0/svc", StreamSvc, pid=20, pod="pod0")
+        s = stub.count.stream(3, deadline=-0.001, inline=True)
+        with pytest.raises(DeadlineExceeded):
+            next(s)
+
+    def test_client_interceptors_see_stream_dispatch(self):
+        from repro.core import Interceptor
+
+        seen = []
+
+        class Spy(Interceptor):
+            def intercept(self, call, proceed):
+                seen.append((call.method, call.is_stream))
+                return proceed()
+
+        clock, orch, router = _mk_cluster()
+        ch = RPC(orch, pid=10).open("/pod0/svc", heap_pages=512)
+        ch.serve(StreamSvc())
+        router.register("/pod0/svc", ch, pod="pod0")
+        stub = router.stub("/pod0/svc", StreamSvc, pid=20, pod="pod0",
+                           interceptors=(Spy(),))
+        list(stub.count.stream(2, inline=True))
+        assert seen == [("count", True)]
+
+
+# ---------------------------------------------------------------------------
+# ring-level invariants
+# ---------------------------------------------------------------------------
+class TestStreamRingHygiene:
+    def test_slot_stays_open_until_chain_ends(self):
+        orch, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        s = stub.count.stream(6, window=2)
+        ch.serve_many()
+        slot = s.token[0]
+        assert conn.ring.state_of(slot) < R_DONE   # mid-stream: still open
+        rest = []
+        while True:
+            ch.serve_many()
+            try:
+                rest.append(s.next(timeout=1.0))
+            except StopIteration:
+                break
+        assert rest == [i * 10 for i in range(6)]
+        # settled: the slot was consumed and is free for reuse
+        assert conn.ring.state_of(slot) == 0
+
+    def test_many_streams_reuse_ring_slots(self):
+        _, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        cap = conn.ring.capacity
+        for _ in range(cap + 5):   # more streams than ring slots
+            assert list(stub.count.stream(2, inline=True)) == [0, 10]
+
+    def test_chunk_timeout_is_retryable(self):
+        _, ch, conn = _mk_cxl()
+        stub = ServiceStub(conn, service_def(StreamSvc))
+        s = stub.count.stream(2, window=4)
+        with pytest.raises(ChannelError, match="timed out"):
+            s.next(timeout=0.05)   # nobody is serving yet
+        ch.serve_many()            # now the server runs...
+        assert list(s) == [0, 10]  # ...and the same stream recovers

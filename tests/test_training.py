@@ -26,11 +26,7 @@ from repro.training import (
     lr_at,
     make_train_step,
 )
-from repro.training.grad_comp import (
-    _quantize,
-    estimate_bytes,
-    init_error_state,
-)
+from repro.training.grad_comp import _quantize, estimate_bytes
 
 
 class TestOptimizer:
