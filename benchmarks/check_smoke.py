@@ -77,12 +77,33 @@ def check_stream(doc: dict) -> str:
             f"fallback {doc['ttft_speedup_fallback']}")
 
 
+def check_soak(doc: dict) -> str:
+    rows = doc["rows"]
+    assert rows["soak_ops_ok"] > 0, "no op completed OK"
+    # the hard robustness invariants hold at ANY iteration count / on
+    # any runner: nothing lost or duplicated, nothing mismatched, every
+    # failure typed, and the default FaultPlan actually landed its mix
+    assert rows["soak_lost"] == 0, f"lost replies: {rows['soak_lost']}"
+    assert rows["soak_mismatched"] == 0, \
+        f"mismatched replies: {rows['soak_mismatched']}"
+    assert rows["soak_unexpected"] == 0, \
+        f"untyped failures: {rows['soak_unexpected']}"
+    assert rows["soak_faults_fired"] >= 3, \
+        f"only {rows['soak_faults_fired']} faults fired"
+    # the p99 gate itself is asserted on dedicated hardware from the
+    # committed artifact; print it for visibility
+    return (f"p99={rows['soak_p99_ms']:.1f}ms "
+            f"faults={int(rows['soak_faults_fired'])} "
+            f"shed={int(rows['soak_shed'])} ok={int(rows['soak_ops_ok'])}")
+
+
 CHECKS: Dict[str, Callable[[dict], str]] = {
     "noop": check_noop,
     "marshal": check_marshal,
     "pipeline": check_pipeline,
     "cluster": check_cluster,
     "stream": check_stream,
+    "soak": check_soak,
 }
 
 

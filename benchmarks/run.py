@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV. Roofline terms come from the
 dry-run artifacts (see repro.roofline.analysis / EXPERIMENTS.md) — this
 harness measures the host-side RPCool control plane for real.
 
-Four suites additionally write JSON trajectory artifacts, all carrying
+Six suites additionally write JSON trajectory artifacts, all carrying
 the shared schema fields ``suite`` / ``gate`` / ``measured`` (validated
 by ``--check-schema`` and tests/test_bench_schema.py):
 
@@ -13,6 +13,7 @@ by ``--check-schema`` and tests/test_bench_schema.py):
   marshal  → BENCH_marshal.json   typed pointer-passing vs serializing
   pipeline → BENCH_pipeline.json  depth-8 futures vs sequential invoke
   stream   → BENCH_stream.json    streaming vs buffered replies (TTFT)
+  soak     → BENCH_soak.json      chaos-injected mixed traffic, p99-gated
 
 Usage:
     python -m benchmarks.run                     # all suites
@@ -36,6 +37,7 @@ CLUSTER_JSON_DEFAULT = "BENCH_cluster.json"
 MARSHAL_JSON_DEFAULT = "BENCH_marshal.json"
 PIPELINE_JSON_DEFAULT = "BENCH_pipeline.json"
 STREAM_JSON_DEFAULT = "BENCH_stream.json"
+SOAK_JSON_DEFAULT = "BENCH_soak.json"
 
 # The suite registry — the single source of truth for suite names
 # (--suite validation, --list-suites, CI smoke steps). Keys are the CLI
@@ -46,6 +48,7 @@ SUITES = [
     ("marshal", "marshal (Fig. 11 typed data plane)"),
     ("pipeline", "pipeline (depth-8 futures vs sequential invoke)"),
     ("stream", "stream (token-streaming replies vs buffered, TTFT)"),
+    ("soak", "soak (chaos-injected mixed traffic, p99 + integrity gates)"),
     ("cooldb", "cooldb (Fig. 11)"),
     ("ycsb", "ycsb_kv (Figs. 9/10)"),
     ("micro", "microservices (Figs. 12/13)"),
@@ -206,6 +209,45 @@ def _write_noop_json(rows, path: str, iters: int) -> None:
           file=sys.stderr)
 
 
+def _soak_gate_ms() -> float:
+    from .soak import SOAK_P99_GATE_MS
+    return SOAK_P99_GATE_MS
+
+
+def _write_soak_json(rows, path: str, iters: int) -> None:
+    by_name = {name: us for name, us, _ in rows}
+    derived = {name: d for name, us, d in rows}
+    measured = {
+        "p99_headroom": by_name.get("soak_p99_headroom", 0.0),
+        "reply_integrity": by_name.get("soak_reply_integrity", 0.0),
+        "shed_typed": by_name.get("soak_shed_typed", 0.0),
+        "fault_coverage": by_name.get("soak_fault_coverage", 0.0),
+    }
+    doc = {
+        "suite": "soak (chaos-injected mixed traffic, p99 + integrity "
+                 "gates)",
+        "iters": iters,
+        "unit": "mixed (ms rows for latency, counts elsewhere)",
+        "rows": by_name,
+        "derived": derived,
+        "p99_gate_ms": _soak_gate_ms(),
+        "faults_fired": int(by_name.get("soak_faults_fired", 0)),
+        "target_ratio": 1.0,
+        "meets_target": all(v >= 1.0 for v in measured.values()),
+        "gate": {"metric": "min(p99_headroom, reply_integrity, "
+                           "shed_typed, fault_coverage)",
+                 "op": ">=", "target": 1.0},
+        "measured": measured,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}: p99={by_name.get('soak_p99_ms', 0.0):.1f}ms "
+          f"faults={doc['faults_fired']} "
+          f"lost={int(by_name.get('soak_lost', -1))} "
+          f"unexpected={int(by_name.get('soak_unexpected', -1))}",
+          file=sys.stderr)
+
+
 def check_schema(pattern: str = "BENCH_*.json") -> int:
     """Validate that every benchmark artifact carries the shared schema
     fields. Returns the number of files checked; raises SystemExit on a
@@ -258,7 +300,7 @@ def main(argv=None) -> None:
         return
 
     from . import cluster, cooldb, kv_handoff, marshal, microservices, \
-        noop_rtt, op_latency, pipeline, stream, ycsb_kv
+        noop_rtt, op_latency, pipeline, soak, stream, ycsb_kv
 
     def noop_bench():
         return noop_rtt.bench(n=args.iters, thr_iters=args.thr_iters)
@@ -282,12 +324,19 @@ def main(argv=None) -> None:
         # interleaved rounds gives a stable TTFT median-of-pairs
         return stream.bench(rounds=max(2, min(args.iters, 8)))
 
+    def soak_bench():
+        # per-client op count: chaos fires on progress fractions, so a
+        # tiny CI run still covers every fault family; 120 is the
+        # full-run default for a stable p99
+        return soak.bench(ops_per_client=max(10, min(args.iters, 120)))
+
     benches = {
         "noop": noop_bench,
         "op": op_latency.bench,
         "marshal": marshal_bench,
         "pipeline": pipeline_bench,
         "stream": stream_bench,
+        "soak": soak_bench,
         "cooldb": cooldb.bench,
         "ycsb": ycsb_kv.bench,
         "micro": microservices.bench,
@@ -338,6 +387,11 @@ def main(argv=None) -> None:
                                  and args.json != NOOP_JSON_DEFAULT) \
                 else STREAM_JSON_DEFAULT
             _write_stream_json(rows, path, max(2, min(args.iters, 8)))
+        elif key == "soak":
+            path = args.json if (args.suite == "soak"
+                                 and args.json != NOOP_JSON_DEFAULT) \
+                else SOAK_JSON_DEFAULT
+            _write_soak_json(rows, path, max(10, min(args.iters, 120)))
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,289 @@
+"""Soak suite — mixed traffic through the overload-robust plane, with
+deterministic chaos injected mid-run. The repo's first tail-latency gate.
+
+Topology: one ``SoakKV`` service instance served by ``N_REPLICAS``
+channels (each with its own ``ServerLoop`` thread and its own
+``AdmissionInterceptor``), registered under ONE endpoint name;
+``N_CLIENTS`` threads drive mixed traffic (puts/gets/streaming
+scans/futures) through ``balance="power2"`` stubs, so every request is
+spread by per-replica in-flight load.
+
+While the traffic runs, a seeded ``FaultPlan`` injects the four fault
+families (slow handler → ring stall → client quota exhaustion → replica
+lease lapse) at fixed *progress* points — same seed, same traffic
+schedule, same faults at the same requests. The main thread is the only
+chaos/heartbeat driver: it pokes the injector and pumps the router's
+lease heartbeat every ~2 ms, so no background renewal thread races the
+fault windows.
+
+Gates (all ratios must be ≥ 1.0 in BENCH_soak.json):
+
+  p99_headroom     SOAK_P99_GATE_MS / p99 completion latency of OK ops
+  reply_integrity  1.0 iff zero lost replies and zero bad echoes — every
+                   started request settles exactly once, every reply
+                   carries the value its request wrote/read
+  shed_typed       1.0 iff every shed surfaced as typed ``Overloaded``
+                   (E_OVERLOAD) / ``DeadlineExceeded`` / a routed
+                   ``ChannelError`` — never a bare unexpected exception
+  fault_coverage   faults actually fired / 3.0 (the plan must land ≥ 3)
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Dict, List, Tuple
+
+from repro.core import (
+    AdmissionInterceptor,
+    BusyWaitPolicy,
+    ChannelError,
+    ChaosInjector,
+    ClusterRouter,
+    DeadlineExceeded,
+    FaultPlan,
+    Orchestrator,
+    Overloaded,
+    RPC,
+    ServerLoop,
+    method,
+    service,
+)
+
+SOAK_P99_GATE_MS = 500.0
+N_REPLICAS = 3
+N_CLIENTS = 6
+SCAN_TOKENS = 8
+MAX_IN_FLIGHT = 64        # per-replica admission cap
+RETRY_AFTER_S = 0.002     # server-suggested backoff on shed
+SLOW_HANDLER_S = 0.005    # latency spike the slow_handler fault injects
+
+
+@service(name="soakkv")
+class SoakKV:
+    """A tiny KV with a chaos hook: ``slow_s`` > 0 makes every handler
+    dwell (the slow_handler fault). byval + retry=3 keeps every method
+    failover-retry-safe; scan streams its reply for chunk-integrity
+    checking."""
+
+    def __init__(self):
+        self.data: Dict[int, int] = {}
+        self.slow_s = 0.0
+        self.n_puts = 0
+
+    def _dwell(self):
+        if self.slow_s:
+            time.sleep(self.slow_s)
+
+    @method(byval=True, deadline=2.0, retry=3)
+    def put(self, ctx, k, v):
+        self._dwell()
+        self.data[int(k)] = int(v)
+        self.n_puts += 1
+        return int(v)
+
+    @method(byval=True, deadline=2.0, retry=3)
+    def get(self, ctx, k):
+        self._dwell()
+        return self.data.get(int(k), -1)
+
+    @method(byval=True, deadline=2.0, streaming=True)
+    def scan(self, ctx, n):
+        self._dwell()
+        for i in range(int(n)):
+            yield i
+
+
+class _Buckets:
+    """Per-client outcome accounting — every started op lands in exactly
+    ONE bucket, so `lost = started - sum(buckets)` catches a reply that
+    vanished or settled twice."""
+
+    __slots__ = ("started", "ok", "shed", "deadline", "chaos",
+                 "unexpected", "mism", "lat_ms")
+
+    def __init__(self):
+        self.started = 0
+        self.ok = 0
+        self.shed = 0        # typed Overloaded (E_OVERLOAD / admission)
+        self.deadline = 0    # typed DeadlineExceeded
+        self.chaos = 0       # typed ChannelError (dead replica, stall)
+        self.unexpected = 0  # anything else — fails the shed_typed gate
+        self.mism = 0        # wrong echo/chunk — fails reply_integrity
+        self.lat_ms: List[float] = []
+
+
+def _client(idx: int, stub, ops: int, rec: _Buckets,
+            done: List[int], seed: int) -> None:
+    rng = random.Random(seed)
+    attempted: Dict[int, set] = {}   # key -> every value ever dispatched
+    for j in range(ops):
+        r = rng.random()
+        rec.started += 1
+        t0 = time.perf_counter()
+        try:
+            if r < 0.40:
+                k = idx * 100_000 + (j % 40)
+                v = idx * 1_000_000 + j
+                attempted.setdefault(k, set()).add(v)
+                got = stub.put(k, v)
+                valid = got == v
+            elif r < 0.80:
+                k = idx * 100_000 + rng.randrange(40)
+                got = stub.get(k)
+                vals = attempted.get(k, ())
+                # -1 is legal even after dispatched puts: those puts may
+                # all have been shed pre-dispatch
+                valid = got == -1 or got in vals
+            elif r < 0.90:
+                got = stub.scan(SCAN_TOKENS)   # sync = buffered chunks
+                valid = got == list(range(SCAN_TOKENS))
+            else:
+                k = idx * 100_000 + rng.randrange(40)
+                fut = stub.get.future(k)
+                got = fut.result(timeout=4.0)
+                vals = attempted.get(k, ())
+                valid = got == -1 or got in vals
+            lat = (time.perf_counter() - t0) * 1e3
+            if valid:
+                rec.ok += 1
+                rec.lat_ms.append(lat)
+            else:
+                rec.mism += 1
+        except Overloaded:
+            rec.shed += 1
+        except DeadlineExceeded:
+            rec.deadline += 1
+        except ChannelError:
+            rec.chaos += 1
+        except Exception:
+            rec.unexpected += 1
+        finally:
+            done[idx] = j + 1
+
+
+def _percentile(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[i]
+
+
+def bench(ops_per_client: int = 120, seed: int = 0
+          ) -> List[Tuple[str, float, str]]:
+    orch = Orchestrator()
+    router = ClusterRouter(orch)
+    kv = SoakKV()
+
+    channels, loops, admissions, server_pids = [], [], [], []
+    for r in range(N_REPLICAS):
+        pid = 1 + r
+        ch = RPC(orch, pid=pid).open(f"/pod0/soak/r{r}", heap_pages=1 << 11)
+        gate = AdmissionInterceptor(max_in_flight=MAX_IN_FLIGHT, orch=orch,
+                                    retry_after_s=RETRY_AFTER_S)
+        ch.serve(kv, interceptors=(gate,))
+        router.register("/pod0/soak", ch, pod="pod0")
+        loop = ServerLoop([ch], policy=BusyWaitPolicy(fixed_sleep_us=50))
+        loop.run_in_thread()
+        channels.append(ch)
+        loops.append(loop)
+        admissions.append(gate)
+        server_pids.append(pid)
+
+    client_pids = [100 + i for i in range(N_CLIENTS)]
+    stubs = [router.stub("/pod0/soak", SoakKV, pid=p, pod="pod0",
+                         balance="power2", balance_seed=seed * 31 + i)
+             for i, p in enumerate(client_pids)]
+    for st in stubs:
+        st.connection.prime()   # wire every replica before traffic opens
+
+    # -- the fault plan: deterministic given (seed, traffic schedule) ------
+    plan = FaultPlan.default(seed, targets={
+        "quota_exhaust": client_pids[0],
+        "lease_lapse": server_pids[-1],   # a standby replica, not idx 0
+    })
+    inj = ChaosInjector(plan, orch=orch, router=router)
+    inj.bind("slow_handler",
+             lambda f: setattr(kv, "slow_s", SLOW_HANDLER_S),
+             lambda f: setattr(kv, "slow_s", 0.0))
+    inj.bind("ring_stall",
+             lambda f: loops[1].stop(),
+             lambda f: loops[1].run_in_thread())
+
+    total = N_CLIENTS * ops_per_client
+    done = [0] * N_CLIENTS
+    recs = [_Buckets() for _ in range(N_CLIENTS)]
+    threads = [
+        threading.Thread(target=_client, daemon=True,
+                         args=(i, stubs[i], ops_per_client, recs[i],
+                               done, seed * 1000 + i))
+        for i in range(N_CLIENTS)
+    ]
+    for t in threads:
+        t.start()
+    # main thread is the ONLY chaos/heartbeat driver: poke + pump ~2ms
+    while any(t.is_alive() for t in threads):
+        inj.poke(sum(done) / total)
+        router.pump()
+        time.sleep(0.002)
+    for t in threads:
+        t.join()
+    inj.poke(1.0)    # a tiny run still fires every planned fault
+    inj.finish()
+    for st in stubs:
+        st.close()
+    for loop in loops:
+        loop.stop()
+
+    started = sum(r.started for r in recs)
+    ok = sum(r.ok for r in recs)
+    shed = sum(r.shed for r in recs)
+    deadline = sum(r.deadline for r in recs)
+    chaos = sum(r.chaos for r in recs)
+    unexpected = sum(r.unexpected for r in recs)
+    mism = sum(r.mism for r in recs)
+    accounted = ok + shed + deadline + chaos + unexpected + mism
+    lost = started - accounted
+
+    lats = sorted(v for r in recs for v in r.lat_ms)
+    p50 = _percentile(lats, 0.50)
+    p99 = _percentile(lats, 0.99)
+
+    server_sheds = sum(g.n_shed_inflight + g.n_shed_quota
+                       for g in admissions)
+    spread = stubs[0].connection.dispatched
+
+    p99_headroom = SOAK_P99_GATE_MS / p99 if p99 > 0 else 0.0
+    reply_integrity = 1.0 if (lost == 0 and mism == 0 and ok > 0) else 0.0
+    shed_typed = 1.0 if unexpected == 0 else 0.0
+    fault_coverage = len(inj.fired) / 3.0
+
+    return [
+        ("soak_ops_ok", float(ok), f"of {started} started"),
+        ("soak_p50_ms", p50, "OK-op completion latency"),
+        ("soak_p99_ms", p99, f"gate {SOAK_P99_GATE_MS}ms"),
+        ("soak_shed", float(shed), "typed Overloaded replies"),
+        ("soak_deadline", float(deadline), "typed DeadlineExceeded"),
+        ("soak_chaos_errors", float(chaos),
+         "typed ChannelError under injected faults"),
+        ("soak_unexpected", float(unexpected), "MUST be 0"),
+        ("soak_lost", float(lost), "started - accounted, MUST be 0"),
+        ("soak_mismatched", float(mism), "bad echoes/chunks, MUST be 0"),
+        ("soak_server_sheds", float(server_sheds),
+         "E_OVERLOAD completions the admission gates wrote"),
+        ("soak_faults_fired", float(len(inj.fired)),
+         ",".join(f.kind for f in inj.fired)),
+        ("soak_balance_spread", float(len(spread)),
+         f"replicas hit by client 0: {dict(sorted(spread.items()))}"),
+        ("soak_p99_headroom", p99_headroom, "gate_ms/p99_ms >= 1.0"),
+        ("soak_reply_integrity", reply_integrity,
+         "1.0 iff zero lost + zero mismatched"),
+        ("soak_shed_typed", shed_typed, "1.0 iff zero untyped failures"),
+        ("soak_fault_coverage", fault_coverage, "fired/3.0 >= 1.0"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, val, derived in bench():
+        print(f"{name},{val:.3f},{derived}")

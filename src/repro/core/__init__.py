@@ -27,6 +27,7 @@ from .errors import (
     DeadlineExceeded,
     InvalidPointer,
     LeaseExpired,
+    Overloaded,
     OwnershipMiss,
     QuotaExceeded,
     RPCoolError,
@@ -50,6 +51,7 @@ from .channel import (
     ServerCtx,
     ServerLoop,
     E_DEADLINE,
+    E_OVERLOAD,
     F_BYVAL,
     F_DEADLINE,
     F_SANDBOXED,
@@ -58,13 +60,15 @@ from .channel import (
     F_TYPED,
 )
 from .fallback import DSMLink, DSMNode, FallbackConnection
-from .router import ClusterRouter, Endpoint, RoutedConnection, \
-    RoutedRpcFuture, RoutedRpcStream
+from .router import BalancedConnection, ClusterRouter, Endpoint, \
+    RoutedConnection, RoutedRpcFuture, RoutedRpcStream
+from .chaos import ChaosInjector, Fault, FaultPlan, KINDS
 from . import containers, serial
 from . import marshal
 from .marshal import ArgView, FallbackRpcFuture, FallbackRpcStream, \
     GraphRef, RpcFuture, RpcStream, ServerStream, build_graph, gather
 from .service import (
+    AdmissionInterceptor,
     DeadlineEnforcer,
     Interceptor,
     MethodSpec,
@@ -82,7 +86,7 @@ from .service import (
 __all__ = [
     "addr",
     "AllocationError", "ChannelError", "DeadlineExceeded",
-    "InvalidPointer", "LeaseExpired",
+    "InvalidPointer", "LeaseExpired", "Overloaded",
     "OwnershipMiss", "QuotaExceeded", "RPCoolError", "SandboxViolation",
     "SealedPageError", "SealViolation",
     "PERM_SEALED", "SharedHeap",
@@ -92,15 +96,17 @@ __all__ = [
     "Lease", "Orchestrator",
     "BusyWaitPolicy", "Channel", "Connection", "DescriptorRing",
     "RING_DTYPE", "RPC", "RpcError",
-    "ServerCtx", "ServerLoop", "E_DEADLINE", "F_BYVAL", "F_DEADLINE",
-    "F_SANDBOXED", "F_SEALED", "F_STREAM", "F_TYPED",
+    "ServerCtx", "ServerLoop", "E_DEADLINE", "E_OVERLOAD", "F_BYVAL",
+    "F_DEADLINE", "F_SANDBOXED", "F_SEALED", "F_STREAM", "F_TYPED",
     "DSMLink", "DSMNode", "FallbackConnection",
-    "ClusterRouter", "Endpoint", "RoutedConnection", "RoutedRpcFuture",
-    "RoutedRpcStream",
+    "BalancedConnection", "ClusterRouter", "Endpoint", "RoutedConnection",
+    "RoutedRpcFuture", "RoutedRpcStream",
+    "ChaosInjector", "Fault", "FaultPlan", "KINDS",
     "containers", "serial", "marshal",
     "ArgView", "FallbackRpcFuture", "FallbackRpcStream", "GraphRef",
     "RpcFuture", "RpcStream", "ServerStream", "build_graph", "gather",
-    "DeadlineEnforcer", "Interceptor", "MethodSpec", "RetryInterceptor",
+    "AdmissionInterceptor", "DeadlineEnforcer", "Interceptor",
+    "MethodSpec", "RetryInterceptor",
     "ServiceDef", "ServiceStub", "StatsInterceptor", "StubMethod",
     "method", "service", "service_def", "stable_fn_id",
 ]

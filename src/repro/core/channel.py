@@ -35,8 +35,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from . import addr as gaddr
-from .errors import ChannelError, DeadlineExceeded, SandboxViolation, \
-    SealViolation
+from .errors import ChannelError, DeadlineExceeded, Overloaded, \
+    SandboxViolation, SealViolation
 from .heap import SharedHeap
 from .orchestrator import Orchestrator
 from .sandbox import SandboxManager
@@ -111,6 +111,10 @@ E_NOFUNC = 3
 E_EXCEPTION = 4
 E_DEADLINE = 5      # request deadline lapsed (dropped server-side, or a
                     # handler raised DeadlineExceeded mid-flight)
+E_OVERLOAD = 6      # admission control shed the request pre-dispatch
+                    # (§5.4); the reply's ret word carries the suggested
+                    # retry-after in µs — the shed cost one descriptor
+                    # word, never a handler
 
 
 def _now_us() -> int:
@@ -299,6 +303,63 @@ class _Pending:
         self.cleanup = cleanup
 
 
+def _admission_park(conn, ring, slot: int, deadline_us: int,
+                    reap: Optional[Callable[[], None]] = None) -> None:
+    """Bounded backpressure (§5.4): park the caller of a full ring in a
+    bounded admission queue until its slot frees, instead of failing the
+    post outright.
+
+    The wait budget derives from the descriptor deadline when the call
+    posted one (past that instant the request could not complete in time
+    anyway), capped by the connection's ``admission_wait_s``; the poll
+    cadence reuses the §5.8 ``BusyWaitPolicy`` after a GIL-yield spin
+    budget. Three exits: the slot frees (return, the post proceeds), the
+    queue is already at ``admission_max_waiters`` or the budget lapses
+    (``Overloaded`` with a suggested retry-after), or the connection is
+    closed under the waiter (``ChannelError``). All raising exits happen
+    before the seq is claimed — a turned-away post burns no seq.
+    """
+    if conn._admission_waiters >= conn.admission_max_waiters:
+        conn.n_overloads += 1
+        raise Overloaded(
+            "ring overflow: admission queue full "
+            f"({conn.admission_max_waiters} parked waiters)",
+            retry_after_s=conn.admission_wait_s)
+    budget = conn.admission_wait_s
+    if deadline_us:
+        budget = min(budget, deadline_us * 1e-6 - time.monotonic())
+    policy = conn.wait_policy
+    give_up = time.monotonic() + max(0.0, budget)
+    spins = _WAIT_SPIN_POLLS
+    conn._admission_waiters += 1
+    conn.n_admission_waits += 1
+    try:
+        while ring.state_of(slot) != R_EMPTY:
+            if conn.closed:
+                raise ChannelError(
+                    "connection closed while parked in the admission "
+                    "queue")
+            if reap is not None:
+                reap()   # completions of abandoned tokens free slots
+                if ring.state_of(slot) == R_EMPTY:
+                    return
+            if time.monotonic() > give_up:
+                conn.n_overloads += 1
+                raise Overloaded(
+                    "ring overflow: admission budget lapsed with the "
+                    "slot still in flight",
+                    retry_after_s=conn.admission_wait_s)
+            if spins:
+                spins -= 1
+                time.sleep(0)
+            else:
+                # delay_s() may prescribe a pure spin (0.0) — floor it at
+                # a 5µs nap so a long park cannot hard-spin the GIL
+                time.sleep(policy.delay_s() or 5e-6)
+    finally:
+        conn._admission_waiters -= 1
+
+
 class Connection:
     """One client's connection: heap + ring + seal/sandbox managers."""
 
@@ -339,10 +400,20 @@ class Connection:
         # assign a BusyWaitPolicy(fixed_sleep_us=...) to pin the client
         # poll cadence, exactly like passing a policy to listen().
         self.wait_policy = BusyWaitPolicy()
+        # bounded admission queue for a full ring (§5.4 backpressure):
+        # a post that wraps onto an in-flight slot parks up to
+        # ``admission_wait_s`` (or the remaining descriptor deadline,
+        # whichever is shorter) for at most ``admission_max_waiters``
+        # concurrent parkers, then surfaces typed ``Overloaded``.
+        self.admission_wait_s = 0.05
+        self.admission_max_waiters = 8
+        self._admission_waiters = 0
         # round-trip stats
         self.n_calls = 0
         self.n_invokes = 0
         self.marshal_bytes = 0
+        self.n_admission_waits = 0
+        self.n_overloads = 0
 
     # -- client-side object construction --------------------------------
     def create_scope(self, size_bytes: int) -> Scope:
@@ -600,13 +671,14 @@ class Connection:
         slot = seq % ring.capacity
         # a slot is free only once its result was consumed: R_REQ means the
         # window wrapped onto a pending request, R_DONE/R_ERR onto a result
-        # nobody waited on — overwriting either would alias two calls. The
-        # seq is claimed only after the check: a rejected post must not
-        # burn a seq, or the server head would wait forever on a request
-        # that was never written.
+        # nobody waited on — overwriting either would alias two calls.
+        # A full ring no longer fails instantly: the caller parks in the
+        # bounded admission queue (§5.4) and only a full queue or a
+        # lapsed budget surfaces Overloaded.
         if ring._words[ring._w0 + slot * _SLOT_WORDS + _W_STATE] & _M32 \
                 != R_EMPTY:
-            raise ChannelError("ring overflow: too many in-flight RPCs")
+            _admission_park(self, ring, slot, deadline_us,
+                            reap=self._reap_abandoned)
 
         # The seq is claimed only after every raising path (overflow,
         # missing scope, seal failure): a rejected post must not burn a
@@ -655,6 +727,11 @@ class Connection:
         if state == R_ERR:
             if status == E_DEADLINE:
                 raise DeadlineExceeded("RPC deadline lapsed")
+            if status == E_OVERLOAD:
+                # the shed reply's ret word is the server-suggested
+                # retry-after in µs (§5.4)
+                raise Overloaded("server shed the request (E_OVERLOAD)",
+                                 retry_after_s=ret * 1e-6)
             raise RpcError(status)
         return ret
 
@@ -723,6 +800,12 @@ class Channel:
         # serve loops advance every registered generator a bounded number
         # of chunks per sweep, so streams interleave with ordinary RPCs
         self._streams: List = []
+        # pre-dispatch admission gate (§5.4): an AdmissionInterceptor
+        # (core/service.py) wired here sheds requests with E_OVERLOAD —
+        # one descriptor word, never a handler. Anything exposing
+        # admit(client_pid, fn_id) -> Optional[retry_after_us] / release()
+        # plugs in.
+        self.admission = None
         orch.register_channel(name, self)
 
     # -- server API (Fig. 6 left) -------------------------------------------
@@ -927,6 +1010,18 @@ class Channel:
                 ring.complete(slot, 0, R_ERR, E_UNSEALED)
                 return
 
+        # Admission gate (§5.4): shed BEFORE dispatch — the reply is one
+        # descriptor word (the suggested retry-after, µs) and the handler
+        # never runs. Sits after the early-return gates above so an
+        # admitted slot always reaches the release below (or hands its
+        # release to the stream it started).
+        gate = self.admission
+        if gate is not None:
+            retry_after_us = gate.admit(conn.client_pid, fn_id)
+            if retry_after_us is not None:
+                ring.complete(slot, retry_after_us, R_ERR, E_OVERLOAD)
+                return
+
         # Reuse the connection's ServerCtx (allocation-free steady state);
         # a nested call_inline from inside a handler sees None and gets a
         # fresh one.
@@ -957,6 +1052,11 @@ class Channel:
                 # stream, so it is NOT returned to the connection.
                 ret.bind(conn, ring, slot, seal_idx, flags,
                          sc_start, sc_count)
+                if gate is not None:
+                    # the stream stays admitted until its chain ends:
+                    # abort()/completion fires the release exactly once
+                    ret.release_cb = gate.release
+                    gate = None
                 self._streams.append(ret)
                 ret.pump()   # first chunks flow before the sweep returns
                 if ret.done:
@@ -980,6 +1080,8 @@ class Channel:
             except SealViolation:
                 pass
         ring.complete(slot, ret, state, status)
+        if gate is not None:
+            gate.release()
         conn._ctx = ctx
 
     @staticmethod

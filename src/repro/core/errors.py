@@ -11,6 +11,8 @@ Each error corresponds to a failure path in the paper:
 * ``QuotaExceeded``      — mapping a heap past the administrator quota (§5.4).
 * ``LeaseExpired``       — operating on a heap whose lease lapsed (§4.6).
 * ``ChannelError``       — connection/channel protocol misuse.
+* ``Overloaded``         — admission control shed the request, or the
+                           ring admission queue's budget lapsed (§5.4).
 * ``OwnershipMiss``      — fallback-transport access to a page this node does
                            not currently own (§5.6 page-fault analogue); the
                            transport catches it and migrates the page.
@@ -55,6 +57,20 @@ class DeadlineExceeded(ChannelError):
     request is dropped without running the handler) or a handler/
     interceptor raised past the budget. Not retryable: the budget is
     gone, so retry layers must let this one through."""
+
+
+class Overloaded(ChannelError):
+    """Admission control turned the request away (§5.4): the client-side
+    admission queue for a full descriptor ring filled up / its wait
+    budget lapsed, or the server shed the request pre-dispatch with
+    ``E_OVERLOAD``. Carries the suggested ``retry_after_s`` back-off
+    (server-chosen for sheds, queue-derived for local overflow); retry
+    layers honor it as a floor on their next pause."""
+
+    def __init__(self, msg: str = "overloaded",
+                 retry_after_s: float = 0.0):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
 
 
 class OwnershipMiss(RPCoolError):

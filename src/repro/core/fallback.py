@@ -35,11 +35,12 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from . import addr as gaddr
-from .channel import DescriptorRing, RING_SLOT_BYTES, F_DEADLINE, \
-    F_SANDBOXED, F_SEALED, OK, R_DONE, R_EMPTY, R_ERR, E_DEADLINE, \
-    E_EXCEPTION, _now_us, _SLOT_WORDS, _W_RET
-from .errors import ChannelError, DeadlineExceeded, OwnershipMiss, \
-    SealViolation
+from .channel import BusyWaitPolicy, DescriptorRing, RING_SLOT_BYTES, \
+    F_DEADLINE, F_SANDBOXED, F_SEALED, OK, R_DONE, R_EMPTY, R_ERR, \
+    E_DEADLINE, E_EXCEPTION, E_OVERLOAD, _admission_park, _now_us, \
+    _SLOT_WORDS, _W_RET
+from .errors import ChannelError, DeadlineExceeded, Overloaded, \
+    OwnershipMiss, SealViolation
 from .heap import SharedHeap
 from .sandbox import SandboxManager
 from .scope import Scope, create_scope, implicit_scope
@@ -233,11 +234,23 @@ class FallbackConnection:
         self._chain_free: List[Scope] = []
         self._stream_gen = 0
         self._client_streams: List = []
+        # bounded admission queue for a full ring (§5.4 backpressure) —
+        # same contract as Connection: park up to admission_wait_s (or
+        # the remaining descriptor deadline) before typed Overloaded
+        self.admission_wait_s = 0.05
+        self.admission_max_waiters = 8
+        self._admission_waiters = 0
+        self.wait_policy = BusyWaitPolicy()
+        # server-side pre-dispatch admission gate (§5.4); wired by
+        # ServiceDef.serve when an AdmissionInterceptor is registered
+        self.admission = None
         self.n_calls = 0
         self.n_invokes = 0
         self.marshal_bytes = 0
         self.n_flushes = 0
         self.n_stream_flights = 0
+        self.n_admission_waits = 0
+        self.n_overloads = 0
         self.closed = False
 
     # -- client-side API (identical shape to Connection) -----------------
@@ -304,7 +317,11 @@ class FallbackConnection:
         seq = self._next_seq
         slot = seq % ring.capacity
         if ring.state_of(slot) != R_EMPTY:
-            raise ChannelError("ring overflow: too many in-flight RPCs")
+            # full ring: bounded admission queue (§5.4), not an instant
+            # failure — reaping landed completions of abandoned flights
+            # can free the slot mid-wait
+            _admission_park(self, ring, slot, deadline_us,
+                            reap=self._reap_abandoned_flight)
         if sealed:   # seal only after every rejecting path
             seal_idx = self.seals.seal(scope, holder=self.client_pid)
             flags |= F_SEALED
@@ -418,9 +435,16 @@ class FallbackConnection:
                 self._serve(e.slot)
             except BaseException as exc:
                 self._flight_errors[e.slot] = exc
-                status = E_DEADLINE if isinstance(exc, DeadlineExceeded) \
-                    else E_EXCEPTION
-                ring.complete(e.slot, 0, R_ERR, status)
+                if isinstance(exc, DeadlineExceeded):
+                    status, word = E_DEADLINE, 0
+                elif isinstance(exc, Overloaded):
+                    # shed pre-dispatch: the ret word carries the
+                    # suggested retry-after (µs), mirroring the CXL path
+                    status = E_OVERLOAD
+                    word = int(exc.retry_after_s * 1e6)
+                else:
+                    status, word = E_EXCEPTION, 0
+                ring.complete(e.slot, word, R_ERR, status)
                 continue
             ret = ring._words[ring._w0 + e.slot * _SLOT_WORDS + _W_RET]
             scope = self._reply_live.get(int(ret))
@@ -476,8 +500,12 @@ class FallbackConnection:
         try:
             stream._srv = self._serve_stream_start(stream.slot)
         except BaseException as exc:
-            status = E_DEADLINE if isinstance(exc, DeadlineExceeded) \
-                else E_EXCEPTION
+            if isinstance(exc, DeadlineExceeded):
+                status = E_DEADLINE
+            elif isinstance(exc, Overloaded):
+                status = E_OVERLOAD
+            else:
+                status = E_EXCEPTION
             self._flight_errors[stream.slot] = exc
             self.ring.complete(stream.slot, 0, R_ERR, status)
         self._client_streams.append(stream)
@@ -498,21 +526,37 @@ class FallbackConnection:
                 f"RPC {fn_id} deadline lapsed on the link")
         if flags & F_SEALED and not self.seals.is_sealed(seal_idx):
             raise SealViolation("receiver found region unsealed")
-        ctx = FallbackServerCtx(self, flags)
-        ctx.deadline_us = _ret if flags & F_DEADLINE else 0
-        if flags & F_SANDBOXED and not gaddr.is_null(arg) and sc_count:
-            # server must own the pages before sandboxing them
-            self.link.migrate(list(range(sc_start, sc_start + sc_count)),
-                              to=OWNER_SERVER)
-            with self.sandboxes.enter(sc_start, sc_count) as sb:
-                ctx.sandbox = sb
+        gate = self.admission
+        if gate is not None:
+            retry_after_us = gate.admit(self.client_pid, fn_id)
+            if retry_after_us is not None:
+                raise Overloaded(
+                    f"server shed stream RPC {fn_id} (E_OVERLOAD)",
+                    retry_after_s=retry_after_us * 1e-6)
+        try:
+            ctx = FallbackServerCtx(self, flags)
+            ctx.deadline_us = _ret if flags & F_DEADLINE else 0
+            if flags & F_SANDBOXED and not gaddr.is_null(arg) and sc_count:
+                # server must own the pages before sandboxing them
+                self.link.migrate(
+                    list(range(sc_start, sc_start + sc_count)),
+                    to=OWNER_SERVER)
+                with self.sandboxes.enter(sc_start, sc_count) as sb:
+                    ctx.sandbox = sb
+                    ret = fn(ctx, arg)
+            else:
                 ret = fn(ctx, arg)
-        else:
-            ret = fn(ctx, arg)
-        if not getattr(ret, "_server_stream", False):
-            raise ChannelError(
-                "stream invoke reached a non-streaming handler")
+            if not getattr(ret, "_server_stream", False):
+                raise ChannelError(
+                    "stream invoke reached a non-streaming handler")
+        except BaseException:
+            if gate is not None:
+                gate.release()
+            raise
         ret.bind(self, ring, slot, seal_idx, flags, sc_start, sc_count)
+        if gate is not None:
+            # the stream stays admitted until its chain ends
+            ret.release_cb = gate.release
         return ret
 
     def pump_stream(self, srv, max_chunks: int) -> List[int]:
@@ -596,25 +640,41 @@ class FallbackConnection:
             raise DeadlineExceeded(
                 f"RPC {fn_id} deadline lapsed on the link")
 
-        ctx = FallbackServerCtx(self, flags)
-        ctx.deadline_us = _ret if flags & F_DEADLINE else 0
-        if flags & F_SEALED and not self.seals.is_sealed(seal_idx):
-            raise SealViolation("receiver found region unsealed")
+        # admission gate (§5.4): shed before the handler — the flight
+        # machinery maps Overloaded to an E_OVERLOAD completion whose
+        # ret word carries the suggested retry-after
+        gate = self.admission
+        if gate is not None:
+            retry_after_us = gate.admit(self.client_pid, fn_id)
+            if retry_after_us is not None:
+                raise Overloaded(
+                    f"server shed RPC {fn_id} (E_OVERLOAD)",
+                    retry_after_s=retry_after_us * 1e-6)
+
         try:
-            if flags & F_SANDBOXED and not gaddr.is_null(arg) and sc_count:
-                # server must own the pages before sandboxing them
-                self.link.migrate(
-                    list(range(sc_start, sc_start + sc_count)),
-                    to=OWNER_SERVER)
-                with self.sandboxes.enter(sc_start, sc_count) as sb:
-                    ctx.sandbox = sb
+            ctx = FallbackServerCtx(self, flags)
+            ctx.deadline_us = _ret if flags & F_DEADLINE else 0
+            if flags & F_SEALED and not self.seals.is_sealed(seal_idx):
+                raise SealViolation("receiver found region unsealed")
+            try:
+                if flags & F_SANDBOXED and not gaddr.is_null(arg) \
+                        and sc_count:
+                    # server must own the pages before sandboxing them
+                    self.link.migrate(
+                        list(range(sc_start, sc_start + sc_count)),
+                        to=OWNER_SERVER)
+                    with self.sandboxes.enter(sc_start, sc_count) as sb:
+                        ctx.sandbox = sb
+                        ret = fn(ctx, arg)
+                else:
                     ret = fn(ctx, arg)
-            else:
-                ret = fn(ctx, arg)
+            finally:
+                if flags & F_SEALED:
+                    self.seals.mark_complete(seal_idx)
+            ring.complete(slot, ret, R_DONE, OK)
         finally:
-            if flags & F_SEALED:
-                self.seals.mark_complete(seal_idx)
-        ring.complete(slot, ret, R_DONE, OK)
+            if gate is not None:
+                gate.release()
 
     def stats(self) -> Dict[str, int]:
         return {

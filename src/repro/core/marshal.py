@@ -41,11 +41,11 @@ import time
 from . import addr as gaddr
 from . import containers as C
 from . import serial
-from .channel import Connection, E_DEADLINE, E_EXCEPTION, E_SANDBOX, \
-    F_BYVAL, F_SANDBOXED, F_SEALED, F_STREAM, F_TYPED, OK, R_DONE, R_ERR, \
-    RpcError, _now_us
+from .channel import Connection, E_DEADLINE, E_EXCEPTION, E_OVERLOAD, \
+    E_SANDBOX, F_BYVAL, F_SANDBOXED, F_SEALED, F_STREAM, F_TYPED, OK, \
+    R_DONE, R_ERR, RpcError, _now_us
 from .errors import AllocationError, ChannelError, DeadlineExceeded, \
-    InvalidPointer, SandboxViolation, SealViolation
+    InvalidPointer, Overloaded, SandboxViolation, SealViolation
 from .scope import Scope, ScopePool, create_scope
 
 # Pooled argument scopes: 4 pages (16 KiB with the default page size)
@@ -592,7 +592,9 @@ class RpcFuture:
                                self._deadline_us * 1e-6 - time.monotonic()))
         try:
             ret = conn.wait(self.token, sealed=self._sealed, timeout=tmo)
-        except (DeadlineExceeded, RpcError) as e:
+        except (DeadlineExceeded, Overloaded, RpcError) as e:
+            # terminal typed failures: the reply landed (or the server
+            # shed the request with E_OVERLOAD) — never a wait timeout
             self._fail(e)
             raise
         except ChannelError as e:
@@ -805,7 +807,7 @@ class ServerStream:
     __slots__ = ("ctx", "it", "anchor", "gen_tag", "window", "byval",
                  "conn", "ring", "slot", "seal_idx", "flags",
                  "_sc_start", "_sc_count", "_consumed_addr",
-                 "seq", "prev", "done")
+                 "seq", "prev", "done", "release_cb")
 
     def __init__(self, ctx, it, anchor: int, gen_tag: int, window: int,
                  byval: bool):
@@ -826,6 +828,9 @@ class ServerStream:
         self.seq = 0     # value chunks emitted
         self.prev = 0    # last published chunk (0 = publish to anchor)
         self.done = False
+        # admission-gate release (§5.4): a stream stays admitted until
+        # its chain ends; every terminal path funnels through abort()
+        self.release_cb = None
 
     def bind(self, conn, ring, slot: int, seal_idx: int, flags: int,
              sc_start: int, sc_count: int) -> None:
@@ -995,6 +1000,9 @@ class ServerStream:
         """Drop the stream without touching the ring (client gone, or
         terminal chunk already published)."""
         self.done = True
+        cb, self.release_cb = self.release_cb, None  # fire exactly once
+        if cb is not None:
+            cb()
         try:
             self.it.close()
         except Exception:
@@ -1172,8 +1180,12 @@ class RpcStream:
         _recycle_chunk(conn, last_addr)
         self._release_scope_once()
         if exc is None and status is not None:
-            exc = DeadlineExceeded("RPC deadline lapsed") \
-                if status == E_DEADLINE else RpcError(status)
+            if status == E_DEADLINE:
+                exc = DeadlineExceeded("RPC deadline lapsed")
+            elif status == E_OVERLOAD:
+                exc = Overloaded("server shed the stream (E_OVERLOAD)")
+            else:
+                exc = RpcError(status)
         if exc is not None:
             self._state = _FAILED
             self._exc = exc
@@ -1451,8 +1463,12 @@ class FallbackRpcStream:
             self._state = _DONE
             return
         self._state = _FAILED
-        self._exc = DeadlineExceeded("RPC deadline lapsed") \
-            if status == E_DEADLINE else RpcError(status)
+        if status == E_DEADLINE:
+            self._exc = DeadlineExceeded("RPC deadline lapsed")
+        elif status == E_OVERLOAD:
+            self._exc = Overloaded("server shed the stream (E_OVERLOAD)")
+        else:
+            self._exc = RpcError(status)
 
     def _settle_slot(self):
         """No chunks and no live server stream: the call failed before
@@ -1472,6 +1488,8 @@ class FallbackRpcStream:
         if exc is None:
             if status == E_DEADLINE:
                 exc = DeadlineExceeded("RPC deadline lapsed")
+            elif status == E_OVERLOAD:
+                exc = Overloaded("server shed the stream (E_OVERLOAD)")
             elif state == R_ERR:
                 exc = RpcError(status)
             else:
@@ -1738,8 +1756,13 @@ class FallbackRpcFuture:
             if exc is not None:
                 raise exc
             if state == R_ERR:
-                raise DeadlineExceeded("RPC deadline lapsed") \
-                    if status == E_DEADLINE else RpcError(status)
+                if status == E_DEADLINE:
+                    raise DeadlineExceeded("RPC deadline lapsed")
+                if status == E_OVERLOAD:
+                    raise Overloaded(
+                        "server shed the request (E_OVERLOAD)",
+                        retry_after_s=ret * 1e-6)
+                raise RpcError(status)
             # the reply pages were bulk-migrated back by the flush; this
             # read is local (a straggler still faults correctly)
             raw = _read_blob(conn.client, ret, conn.client.page_size)

@@ -54,6 +54,10 @@ class Orchestrator:
         self.channels: Dict[str, object] = {}  # name -> Channel
         self._leases: Dict[Tuple[int, int], Lease] = {}  # (pid, heap) -> lease
         self._quota: Dict[int, int] = {}  # pid -> max mapped bytes
+        # §5.4 traffic quotas: pid -> admitted requests/second. The
+        # orchestrator only owns the table (like the memory quotas); the
+        # server-side AdmissionInterceptor enforces it pre-dispatch.
+        self._req_quota: Dict[int, float] = {}
         self._mapped: Dict[int, Set[int]] = {}  # pid -> heap ids
         self._failure_cbs: List[Callable[[int, int], None]] = []
         # coherence domains: pod name -> member pids (§4.6)
@@ -136,6 +140,21 @@ class Orchestrator:
     def set_quota(self, pid: int, max_bytes: int) -> None:
         self._quota[pid] = max_bytes
 
+    def set_request_quota(self, pid: int,
+                          per_second: Optional[float]) -> None:
+        """§5.4 traffic quota: cap the request rate the cluster admits
+        from ``pid`` (``None`` clears the cap). Enforcement happens in
+        the servers' ``AdmissionInterceptor`` token buckets, which read
+        this table and this orchestrator's ``clock`` — so tests can
+        drive refills deterministically."""
+        if per_second is None:
+            self._req_quota.pop(pid, None)
+        else:
+            self._req_quota[pid] = float(per_second)
+
+    def request_quota(self, pid: int) -> Optional[float]:
+        return self._req_quota.get(pid)
+
     def mapped_bytes(self, pid: int) -> int:
         return sum(
             self.heaps[h].num_pages * self.heaps[h].page_size
@@ -147,6 +166,18 @@ class Orchestrator:
     def on_failure(self, cb: Callable[[int, int], None]) -> None:
         """cb(pid, heap_id) fired when a lease expires."""
         self._failure_cbs.append(cb)
+
+    def expire_leases(self, pid: int) -> int:
+        """Force every live lease of ``pid`` to lapse on the next
+        ``tick()`` — the deterministic ops/chaos form of "the process
+        died" (Fig. 5a), without waiting out the TTL on a wall clock.
+        Returns the number of leases marked."""
+        n = 0
+        for (p, _h), lease in self._leases.items():
+            if p == pid and lease.live:
+                lease.expires = float("-inf")
+                n += 1
+        return n
 
     def tick(self) -> List[Tuple[int, int]]:
         """Expire lapsed leases, notify peers, GC orphaned heaps.

@@ -35,13 +35,14 @@ since it always allocates against the live target.
 
 from __future__ import annotations
 
+import random
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 from . import addr as gaddr
 from .channel import Channel, Connection
-from .errors import ChannelError, DeadlineExceeded
+from .errors import ChannelError, DeadlineExceeded, Overloaded
 from .fallback import FallbackConnection
 from .orchestrator import Orchestrator
 from .scope import Scope
@@ -79,6 +80,10 @@ class ClusterRouter:
         self.fallback_ring_capacity = fallback_ring_capacity
         self.endpoints: Dict[str, Endpoint] = {}
         self._conns: List["RoutedConnection"] = []
+        # serving pids whose lease lapsed (Fig. 5a): the replica
+        # balancer drops these from its live set; re-registering a
+        # channel for the pid revives it
+        self._dead_pids: Set[int] = set()
         self._lock = threading.RLock()
         # lease renewal bookkeeping: pid -> clock() of the last renewal
         self._renew_last: Dict[int, float] = {}
@@ -116,6 +121,7 @@ class ClusterRouter:
                     ep.dead = False
                     ep.active_idx = len(ep.chain) - 1
                     ep.generation += 1
+            self._dead_pids.discard(channel.server_pid)
             self._track(channel.server_pid)
         return ep
 
@@ -145,7 +151,8 @@ class ClusterRouter:
         return rc
 
     def stub(self, name: str, service, pid: int, ring_capacity: int = 256,
-             pod: Optional[str] = None, interceptors=()):
+             pod: Optional[str] = None, interceptors=(),
+             balance: Optional[str] = None, balance_seed: int = 0):
         """Connect ``pid`` to endpoint ``name`` and wrap the routed
         connection in a typed ``ServiceStub`` for ``service`` (a
         ``@service`` class/instance or a ``ServiceDef``): every method
@@ -153,9 +160,26 @@ class ClusterRouter:
         that rides the route the registry picked — CXL pointer passing in
         pod, by-value fallback across pods, transparent failover in
         between. The raw ``connect``+``invoke`` surface stays underneath
-        as the escape hatch (``stub.connection``)."""
+        as the escape hatch (``stub.connection``).
+
+        ``balance`` turns the endpoint's replica chain from a failover
+        chain into a load-spread set: ``"power2"`` (two random live
+        replicas, dispatch to the one with fewer in-flight calls) or
+        ``"rr"`` (round-robin). Failover stays as the degraded mode —
+        dead replicas drop out of the live set — and streams stay pinned
+        to one replica. ``balance_seed`` makes replica picks
+        reproducible."""
         from .service import ServiceStub, service_def
-        conn = self.connect(name, pid, ring_capacity, pod)
+        if balance is None:
+            conn = self.connect(name, pid, ring_capacity, pod)
+        else:
+            if pod is not None:
+                self.orch.assign_pod(pid, pod)
+            conn = BalancedConnection(self, self.resolve(name), pid,
+                                      ring_capacity, balance=balance,
+                                      seed=balance_seed)
+            with self._lock:
+                self._track(pid)
         return ServiceStub(conn, service_def(service), interceptors)
 
     def stats(self) -> Dict[str, int]:
@@ -224,15 +248,23 @@ class ClusterRouter:
 
     # -- failure handling (Fig. 5a) ------------------------------------------
     def _on_lease_lapse(self, pid: int, heap_id: int) -> None:
-        """Orchestrator failure callback: if the lapsed lease belongs to a
-        pid actively serving an endpoint, fail that endpoint over."""
+        """Orchestrator failure callback: if the lapsed lease belongs to
+        a pid serving any endpoint replica, record it dead (the balancer
+        drops it from its live set); if it was the *active* channel,
+        fail the endpoint over."""
         with self._lock:
             for ep in self.endpoints.values():
+                if any(ch.server_pid == pid for ch in ep.chain):
+                    self._dead_pids.add(pid)
                 if not ep.dead and ep.channel.server_pid == pid:
                     self._fail_over(ep, pid)
 
     def _fail_over(self, ep: Endpoint, dead_pid: int) -> None:
-        while ep.channel.server_pid == dead_pid:
+        # skip over every replica known dead, not just the pid that
+        # lapsed now — a standby that died earlier must not become the
+        # active target
+        while ep.channel.server_pid == dead_pid or \
+                ep.channel.server_pid in self._dead_pids:
             if ep.active_idx + 1 >= len(ep.chain):
                 ep.dead = True
                 break
@@ -258,7 +290,7 @@ class RoutedConnection:
     """
 
     def __init__(self, router: ClusterRouter, endpoint: Endpoint, pid: int,
-                 ring_capacity: int = 256):
+                 ring_capacity: int = 256, pin_idx: Optional[int] = None):
         self.router = router
         self.endpoint = endpoint
         self.client_pid = pid
@@ -268,6 +300,10 @@ class RoutedConnection:
         self.generation = -1
         self.failovers = 0
         self.closed = False
+        # pinned handles (replica balancing): bound to chain[pin_idx]
+        # instead of the active channel — they never re-wire on
+        # failover; replica death surfaces to the balancer instead
+        self.pin_idx = pin_idx
         # heaps of targets this handle abandoned on failover/re-route:
         # GraphRefs built against them are stale (lease-reclaimed)
         self._dead_heaps: List = []
@@ -276,10 +312,21 @@ class RoutedConnection:
     # -- wiring -------------------------------------------------------------
     def _attach(self) -> None:
         ep = self.endpoint
-        if ep.dead:
-            raise ChannelError(
-                f"endpoint {ep.name!r}: primary and all replicas are gone")
-        ch = ep.channel
+        if self.pin_idx is None:
+            if ep.dead:
+                raise ChannelError(
+                    f"endpoint {ep.name!r}: primary and all replicas "
+                    "are gone")
+            ch = ep.channel
+        else:
+            if self.pin_idx >= len(ep.chain):
+                raise ChannelError(
+                    f"endpoint {ep.name!r} has no replica "
+                    f"#{self.pin_idx}")
+            ch = ep.chain[self.pin_idx]
+            if ch.server_pid in self.router._dead_pids:
+                raise ChannelError(
+                    f"replica #{self.pin_idx} of {ep.name!r} is gone")
         router = self.router
         orch = router.orch
         if orch.same_domain(self.client_pid, ch.server_pid):
@@ -296,6 +343,9 @@ class RoutedConnection:
                 ring_capacity=router.fallback_ring_capacity,
                 functions=ch.functions,     # the SAME live handler table
                 heap_id=orch.alloc_heap_id())
+            # the admission gate guards the SERVICE, not the transport:
+            # cross-pod requests shed exactly like same-pod ones
+            self.target.admission = ch.admission
             self.transport = "fallback"
             router.n_fallback_connects += 1
         self.generation = ep.generation
@@ -303,6 +353,17 @@ class RoutedConnection:
     def _ensure(self):
         if self.closed:
             raise ChannelError("call on closed RoutedConnection")
+        if self.pin_idx is not None:
+            # pinned handles never re-wire: sync the generation so the
+            # failover-retry guards below stay quiet, and surface
+            # replica death for the balancer to handle
+            self.generation = self.endpoint.generation
+            if self.endpoint.chain[self.pin_idx].server_pid \
+                    in self.router._dead_pids:
+                raise ChannelError(
+                    f"replica #{self.pin_idx} of "
+                    f"{self.endpoint.name!r} is gone")
+            return self.target
         if self.generation != self.endpoint.generation:
             old, self.target = self.target, None
             old_heap = getattr(old, "heap", None)
@@ -324,8 +385,10 @@ class RoutedConnection:
         heap, which the lease machinery has reclaimed — re-posting it
         against the replica would seal/read unrelated pages. Those calls
         surface the ChannelError so the caller can rebuild its arguments
-        (``create_scope``/``new_bytes`` already target the live wire)."""
-        return kw.get("scope") is None and gaddr.is_null(arg_addr) \
+        (``create_scope``/``new_bytes`` already target the live wire).
+        Pinned handles never retry: the balancer owns replica choice."""
+        return self.pin_idx is None and kw.get("scope") is None \
+            and gaddr.is_null(arg_addr) \
             and self.generation != self.endpoint.generation
 
     # -- the identical call surface (§5.6) ------------------------------------
@@ -364,7 +427,8 @@ class RoutedConnection:
             return target.invoke(fn_id, *args, **kw)
         except ChannelError:
             from .marshal import GraphRef
-            if self.generation != self.endpoint.generation and \
+            if self.pin_idx is None and \
+                    self.generation != self.endpoint.generation and \
                     not any(isinstance(a, GraphRef) for a in args):
                 return self._ensure().invoke(fn_id, *args, **kw)
             raise
@@ -382,7 +446,8 @@ class RoutedConnection:
         except DeadlineExceeded:
             raise
         except ChannelError:
-            if self.generation != self.endpoint.generation:
+            if self.pin_idx is None and \
+                    self.generation != self.endpoint.generation:
                 return self.invoke_serialized(fn_id, *args, **kw)
             raise
 
@@ -395,6 +460,10 @@ class RoutedConnection:
         future transparently re-invokes against the replica."""
         target = self._ensure()
         self._check_graph_args(target, args)
+        if self.pin_idx is not None:
+            # pinned handles (replica balancing) surface replica death
+            # to the balancer instead of re-routing mid-flight
+            return target.invoke_async(fn_id, *args, **kw)
         from .marshal import GraphRef
         retryable = not any(isinstance(a, GraphRef) for a in args)
         return RoutedRpcFuture(self, fn_id, args, kw,
@@ -411,6 +480,8 @@ class RoutedConnection:
         the caller decides whether to restart the stream."""
         target = self._ensure()
         self._check_graph_args(target, args)
+        if self.pin_idx is not None:
+            return target.invoke_stream(fn_id, *args, **kw)
         return RoutedRpcStream(self, target.invoke_stream(fn_id, *args,
                                                           **kw))
 
@@ -450,7 +521,8 @@ class RoutedConnection:
     def wait(self, token: Tuple[int, int], **kw) -> int:
         if self.closed:
             raise ChannelError("wait on closed RoutedConnection")
-        if self.generation != self.endpoint.generation:
+        if self.pin_idx is None and \
+                self.generation != self.endpoint.generation:
             # the token names a slot of the DEAD server's ring; waiting it
             # on the re-wired ring would consume someone else's result
             raise ChannelError(
@@ -611,3 +683,276 @@ class RoutedRpcStream:
 
     def close(self) -> None:
         self.inner.close()
+
+
+class BalancedConnection:
+    """Replica load-balancing client handle (the overload-robust mode of
+    an endpoint's replica chain).
+
+    Where ``RoutedConnection`` treats ``Endpoint.chain`` as a *failover*
+    chain — one active channel, standbys idle until a lease lapse —
+    ``BalancedConnection`` treats it as a *load-spread set*: every
+    dispatch picks a live replica (``"power2"``: two random candidates,
+    take the one with fewer in-flight calls; ``"rr"``: round-robin) and
+    rides a per-replica *pinned* ``RoutedConnection`` underneath, so the
+    §5.6 routing decision (CXL ring vs fallback link) still happens
+    per replica from pod metadata.
+
+    Failover degrades gracefully rather than re-wiring: a replica whose
+    serving lease lapsed drops out of the live set (``router._dead_pids``)
+    and plain-value dispatches retry on another replica; calls that pin
+    the dead replica's heap surface ``ChannelError`` like any routed
+    call. Streams stay *pinned* to one replica — a chunk chain cannot be
+    split across servers — and ``Overloaded``/``DeadlineExceeded`` are
+    never retried here (the retry interceptor owns backoff policy).
+    """
+
+    def __init__(self, router: ClusterRouter, endpoint: Endpoint, pid: int,
+                 ring_capacity: int = 256, balance: str = "power2",
+                 seed: int = 0):
+        if balance not in ("power2", "rr"):
+            raise ChannelError(
+                f"unknown balance policy {balance!r} "
+                "(want 'power2' or 'rr')")
+        self.router = router
+        self.endpoint = endpoint
+        self.client_pid = pid
+        self.ring_capacity = ring_capacity
+        self.balance = balance
+        self.transport = "balanced"
+        self.closed = False
+        self._rng = random.Random(seed)
+        self._rr = 0
+        self._subs: Dict[int, RoutedConnection] = {}
+        # per-replica gauges/counters: the power-of-two-choices signal
+        # and the spread evidence the tests/bench assert on
+        self.inflight: Dict[int, int] = {}
+        self.dispatched: Dict[int, int] = {}
+        self._stream_pin: Optional[int] = None
+        self.n_degraded = 0   # dispatches that fell over to another replica
+
+    # -- replica selection ---------------------------------------------------
+    def _live(self) -> List[int]:
+        dead = self.router._dead_pids
+        return [i for i, ch in enumerate(self.endpoint.chain)
+                if ch.server_pid not in dead]
+
+    def _pick(self, live: List[int]) -> int:
+        if len(live) == 1:
+            return live[0]
+        if self.balance == "rr":
+            idx = live[self._rr % len(live)]
+            self._rr += 1
+            return idx
+        a, b = self._rng.sample(live, 2)   # power of two choices
+        if self.inflight.get(b, 0) < self.inflight.get(a, 0):
+            return b
+        return a
+
+    def _sub(self, idx: int) -> RoutedConnection:
+        rc = self._subs.get(idx)
+        if rc is None:
+            rc = RoutedConnection(self.router, self.endpoint,
+                                  self.client_pid, self.ring_capacity,
+                                  pin_idx=idx)
+            with self.router._lock:
+                self.router._conns.append(rc)
+            self._subs[idx] = rc
+        return rc
+
+    def _drop_replica(self, idx: int) -> None:
+        rc = self._subs.pop(idx, None)
+        if rc is not None:
+            try:
+                rc.close()
+            except Exception:
+                pass
+        if self._stream_pin == idx:
+            self._stream_pin = None
+
+    def prime(self) -> int:
+        """Pre-wire a pinned sub-connection to every live replica (call
+        before opening traffic so no connection setup — heap mapping,
+        ring attach — happens under load). Returns the number wired."""
+        n = 0
+        for i in self._live():
+            self._sub(i)
+            n += 1
+        return n
+
+    # -- dispatch ------------------------------------------------------------
+    def _dispatch(self, method: str, fn_id: int, args, kw,
+                  retry_safe: bool):
+        if self.closed:
+            raise ChannelError("call on closed BalancedConnection")
+        tried: Set[int] = set()
+        while True:
+            live = [i for i in self._live() if i not in tried]
+            if not live:
+                raise ChannelError(
+                    f"endpoint {self.endpoint.name!r}: no live replica "
+                    "left to balance onto")
+            idx = self._pick(live)
+            tried.add(idx)
+            self.dispatched[idx] = self.dispatched.get(idx, 0) + 1
+            self.inflight[idx] = self.inflight.get(idx, 0) + 1
+            try:
+                rc = self._sub(idx)
+                return getattr(rc, method)(fn_id, *args, **kw)
+            except (DeadlineExceeded, Overloaded):
+                raise   # backoff is the retry interceptor's job
+            except ChannelError:
+                # only a DEAD replica degrades to the next one, and only
+                # when the arguments pin nothing in its heap; anything
+                # else (bad fn_id, sealed-page violation, ...) surfaces
+                pid = self.endpoint.chain[idx].server_pid
+                if retry_safe and pid in self.router._dead_pids:
+                    self._drop_replica(idx)
+                    self.n_degraded += 1
+                    continue
+                raise
+            finally:
+                self.inflight[idx] = self.inflight.get(idx, 1) - 1
+
+    # -- the identical call surface (§5.6) ------------------------------------
+    def call(self, fn_id: int, arg_addr: int = gaddr.NULL, **kw) -> int:
+        safe = kw.get("scope") is None and gaddr.is_null(arg_addr)
+        return self._dispatch("call", fn_id, (arg_addr,), kw, safe)
+
+    def call_inline(self, fn_id: int, arg_addr: int = gaddr.NULL,
+                    **kw) -> int:
+        safe = kw.get("scope") is None and gaddr.is_null(arg_addr)
+        return self._dispatch("call_inline", fn_id, (arg_addr,), kw, safe)
+
+    def invoke(self, fn_id: int, *args, **kw):
+        from .marshal import GraphRef
+        safe = not any(isinstance(a, GraphRef) for a in args)
+        return self._dispatch("invoke", fn_id, args, kw, safe)
+
+    def invoke_serialized(self, fn_id: int, *args, **kw):
+        return self._dispatch("invoke_serialized", fn_id, args, kw, True)
+
+    def invoke_async(self, fn_id: int, *args, **kw):
+        """Pipelined dispatch to the least-loaded replica. The returned
+        future holds that replica's in-flight slot until it settles or
+        is cancelled — that gauge IS the power-of-two-choices signal, so
+        a slow replica sheds new arrivals onto its peers. No transparent
+        cross-replica retry mid-flight: replica death surfaces and the
+        caller (or the retry interceptor) re-invokes."""
+        if self.closed:
+            raise ChannelError("call on closed BalancedConnection")
+        live = self._live()
+        if not live:
+            raise ChannelError(
+                f"endpoint {self.endpoint.name!r}: no live replica "
+                "left to balance onto")
+        idx = self._pick(live)
+        rc = self._sub(idx)
+        self.dispatched[idx] = self.dispatched.get(idx, 0) + 1
+        self.inflight[idx] = self.inflight.get(idx, 0) + 1
+        try:
+            inner = rc.invoke_async(fn_id, *args, **kw)
+        except BaseException:
+            self.inflight[idx] -= 1
+            raise
+        return _BalancedFuture(self, idx, inner)
+
+    def invoke_stream(self, fn_id: int, *args, **kw):
+        """Streams stay pinned: chunk chains cannot be split across
+        replicas, so the first stream picks a replica and every later
+        stream sticks to it while it lives."""
+        if self.closed:
+            raise ChannelError("call on closed BalancedConnection")
+        live = self._live()
+        if not live:
+            raise ChannelError(
+                f"endpoint {self.endpoint.name!r}: no live replica "
+                "left to balance onto")
+        pin = self._stream_pin
+        if pin is None or pin not in live:
+            pin = self._pick(live)
+            self._stream_pin = pin
+        self.dispatched[pin] = self.dispatched.get(pin, 0) + 1
+        return self._sub(pin).invoke_stream(fn_id, *args, **kw)
+
+    # -- object construction -------------------------------------------------
+    def create_scope(self, size_bytes: int):
+        raise ChannelError(
+            "a balanced handle has no single target heap — a scope would "
+            "pin every call to one replica; use plain-value (byval) "
+            "methods, or a pinned connect() handle for scope-based calls")
+
+    def new_bytes(self, data: bytes, scope=None) -> int:
+        raise ChannelError(
+            "a balanced handle has no single target heap — pass bytes "
+            "as plain values and let each dispatch marshal them")
+
+    def build_graph(self, *values):
+        raise ChannelError(
+            "a balanced handle has no single target heap — pass plain "
+            "values; each dispatch marshals against the replica it picks")
+
+    # -- stats ---------------------------------------------------------------
+    @property
+    def n_calls(self) -> int:
+        return sum(rc.n_calls for rc in self._subs.values())
+
+    @property
+    def n_invokes(self) -> int:
+        return sum(rc.n_invokes for rc in self._subs.values())
+
+    @property
+    def marshal_bytes(self) -> int:
+        return sum(rc.marshal_bytes for rc in self._subs.values())
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        if self.closed:
+            return
+        self.closed = True
+        for idx in list(self._subs):
+            rc = self._subs.pop(idx)
+            try:
+                rc.close()   # drops itself from router._conns
+            except Exception:
+                pass
+
+
+class _BalancedFuture:
+    """Wraps a pinned replica's future and releases that replica's
+    in-flight gauge exactly once — on first result (either outcome) or
+    on a successful cancel. Holding the slot until settle is what makes
+    the power-of-two-choices signal reflect *completion* load, not just
+    dispatch counts."""
+
+    __slots__ = ("bc", "idx", "inner", "_released")
+
+    def __init__(self, bc: BalancedConnection, idx: int, inner):
+        self.bc = bc
+        self.idx = idx
+        self.inner = inner
+        self._released = False
+
+    def _release(self) -> None:
+        if not self._released:
+            self._released = True
+            self.bc.inflight[self.idx] = \
+                self.bc.inflight.get(self.idx, 1) - 1
+
+    def done(self) -> bool:
+        return self.inner.done()
+
+    def _kick(self) -> None:
+        self.inner._kick()
+
+    def cancel(self) -> bool:
+        cancelled = self.inner.cancel()
+        if cancelled:
+            self._release()
+        return cancelled
+
+    def result(self, timeout: Optional[float] = None):
+        try:
+            return self.inner.result(timeout)
+        finally:
+            self._release()

@@ -43,6 +43,7 @@ chain (`intercept(call, proceed)`); ``StatsInterceptor``,
 from __future__ import annotations
 
 import inspect
+import random
 import time
 import zlib
 from typing import Callable, Dict, List, Optional, Tuple
@@ -132,8 +133,17 @@ class ServiceDef:
         """Register every method as a typed handler on ``channel`` (a
         ``Channel`` or a ``FallbackConnection`` — anything with
         ``add_typed``), dispatching through the server interceptor
-        chain."""
-        chain = tuple(interceptors)
+        chain. An ``AdmissionInterceptor`` in the list is wired to the
+        transport's pre-dispatch gate instead of the per-handler chain:
+        shedding must cost one descriptor word, never an unmarshal or a
+        handler (§5.4)."""
+        chain = []
+        for icpt in interceptors:
+            if isinstance(icpt, AdmissionInterceptor):
+                channel.admission = icpt
+            else:
+                chain.append(icpt)
+        chain = tuple(chain)
         for spec in self.methods.values():
             channel.add_typed(spec.fn_id,
                               self._make_handler(instance, spec, chain))
@@ -279,16 +289,21 @@ class StatsInterceptor(Interceptor):
         self.calls: Dict[str, int] = {}
         self.errors: Dict[str, int] = {}
         self.total_us: Dict[str, float] = {}
+        # live dispatch gauge (drops back on return/raise) — the same
+        # in-flight signal the replica balancer keeps per replica
+        self.inflight: Dict[str, int] = {}
 
     def intercept(self, call, proceed):
         key = f"{call.service}.{call.method}"
         t0 = time.perf_counter()
+        self.inflight[key] = self.inflight.get(key, 0) + 1
         try:
             return proceed()
         except BaseException:
             self.errors[key] = self.errors.get(key, 0) + 1
             raise
         finally:
+            self.inflight[key] -= 1
             self.calls[key] = self.calls.get(key, 0) + 1
             self.total_us[key] = self.total_us.get(key, 0.0) \
                 + (time.perf_counter() - t0) * 1e6
@@ -315,33 +330,144 @@ class DeadlineEnforcer(Interceptor):
         return proceed()
 
 
-class RetryInterceptor(Interceptor):
-    """Client-side failover retry: re-run a *retry-safe* sync dispatch on
-    ``ChannelError`` up to the method's ``retry`` budget (or this
-    interceptor's default when the method sets none). Retry-safe means
-    nothing in the request pins a heap: ``byval`` methods always, other
-    methods only when no argument is a ``GraphRef``. Deadline errors
-    never retry — the budget is gone. Futures pass through: a routed
-    future already re-invokes across failover on settlement."""
+class AdmissionInterceptor(Interceptor):
+    """Server-side admission control (§5.4): shed load with E_OVERLOAD
+    *before* dispatch — a shed request costs one descriptor word, never
+    an unmarshal or a handler. Two gates:
 
-    def __init__(self, default_retries: int = 0):
+    * ``max_in_flight`` — cap on concurrently admitted dispatches of
+      this transport (streams stay admitted until their chunk chain
+      ends, so on a single-threaded serve loop this bounds streaming
+      concurrency).
+    * per-client-pid request quotas from the orchestrator's §5.4 quota
+      tables (``orch.set_request_quota(pid, per_second)``), enforced as
+      a token bucket on the orchestrator's injectable clock.
+
+    Register it like any server interceptor (``channel.serve(inst,
+    interceptors=[admission])``); ``ServiceDef.serve`` wires it to the
+    transport's pre-dispatch gate rather than the per-handler chain.
+    Shed replies carry a suggested retry-after (µs) in the descriptor's
+    ret word — the bucket's time-to-one-token for quota sheds,
+    ``retry_after_s`` for in-flight sheds."""
+
+    def __init__(self, max_in_flight: Optional[int] = None,
+                 orch=None, retry_after_s: float = 0.005,
+                 burst: float = 1.0):
+        self.max_in_flight = max_in_flight
+        self.orch = orch
+        self.retry_after_s = retry_after_s
+        self.burst = burst            # bucket depth, in seconds of rate
+        self.in_flight = 0
+        self._buckets: Dict[int, List[float]] = {}  # pid -> [tokens, t]
+        self.n_admitted = 0
+        self.n_shed_inflight = 0
+        self.n_shed_quota = 0
+
+    # -- the transport-facing gate (called before dispatch) --------------
+    def admit(self, client_pid: int, fn_id: int) -> Optional[int]:
+        """``None`` = admitted (the transport must ``release()`` when
+        the dispatch — or the stream it started — completes); otherwise
+        the suggested retry-after in µs and the request is shed."""
+        if self.max_in_flight is not None and \
+                self.in_flight >= self.max_in_flight:
+            self.n_shed_inflight += 1
+            return max(1, int(self.retry_after_s * 1e6))
+        orch = self.orch
+        if orch is not None:
+            rate = orch.request_quota(client_pid)
+            if rate is not None:
+                now = orch.clock()
+                cap = rate * self.burst
+                bucket = self._buckets.get(client_pid)
+                if bucket is None:
+                    bucket = self._buckets[client_pid] = [cap, now]
+                tokens = min(cap, bucket[0] + (now - bucket[1]) * rate)
+                if tokens < 1.0:
+                    bucket[0], bucket[1] = tokens, now
+                    self.n_shed_quota += 1
+                    if rate > 0:
+                        return max(1, int((1.0 - tokens) / rate * 1e6))
+                    return max(1, int(self.retry_after_s * 1e6))
+                bucket[0], bucket[1] = tokens - 1.0, now
+        self.in_flight += 1
+        self.n_admitted += 1
+        return None
+
+    def release(self) -> None:
+        self.in_flight -= 1
+
+
+class RetryInterceptor(Interceptor):
+    """Client-side retry with capped jittered exponential backoff.
+
+    Re-runs a *retry-safe* sync dispatch on ``ChannelError`` up to the
+    method's ``retry`` budget (or this interceptor's default when the
+    method sets none). Retry-safe means nothing in the request pins a
+    heap: ``byval`` methods always, other methods only when no argument
+    is a ``GraphRef``. An ``Overloaded`` failure honors the suggested
+    retry-after as a floor on the next pause (§5.4); other channel
+    errors follow the exponential schedule.
+
+    Three things never retry: ``DeadlineExceeded`` (the budget is
+    gone), a streaming dispatch that already yielded chunks (delivered
+    chunks cannot be un-delivered — ``_client_final`` annotates the
+    failure with ``chunks_delivered``), and any attempt whose pause
+    would overshoot the method deadline's worth of wall time. Futures
+    and stream iterators pass through: a routed future already
+    re-invokes across failover on settlement."""
+
+    def __init__(self, default_retries: int = 0,
+                 backoff_base_s: float = 0.001,
+                 backoff_cap_s: float = 0.25,
+                 backoff_multiplier: float = 2.0,
+                 jitter: float = 0.5,
+                 seed: Optional[int] = None,
+                 sleep: Callable[[float], None] = time.sleep):
         self.default_retries = default_retries
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+        self.backoff_multiplier = backoff_multiplier
+        self.jitter = jitter
+        self._rng = random.Random(seed)
+        self._sleep = sleep
 
     def intercept(self, call, proceed):
         retries = call.spec.retry or self.default_retries
         if call.is_future or call.is_stream or retries <= 0 or \
                 not _retry_safe(call):
-            # streams pass through too: delivered chunks cannot be
+            # stream iterators pass through: delivered chunks cannot be
             # un-delivered, so a failed stream is the caller's restart
             return proceed()
+        budget = call.kwargs.get("deadline", call.spec.deadline)
+        give_up = None if budget is None \
+            else time.monotonic() + budget
+        delay = self.backoff_base_s
         for attempt in range(retries + 1):
             try:
                 return proceed()
             except DeadlineExceeded:
                 raise
-            except ChannelError:
+            except ChannelError as e:
                 if attempt == retries:
                     raise
+                if getattr(e, "chunks_delivered", 0):
+                    # a buffered streaming dispatch failed after
+                    # yielding: a replay would duplicate the prefix
+                    raise
+                pause = min(
+                    delay * (1.0 + self.jitter * self._rng.random()),
+                    self.backoff_cap_s)
+                retry_after = getattr(e, "retry_after_s", 0.0)
+                if retry_after:
+                    pause = max(pause, retry_after)
+                if give_up is not None and \
+                        time.monotonic() + pause >= give_up:
+                    # the method deadline's wall budget is spent: a
+                    # retry could not complete inside it
+                    raise
+                self._sleep(pause)
+                delay = min(delay * self.backoff_multiplier,
+                            self.backoff_cap_s)
 
 
 def _retry_safe(call: ClientCall) -> bool:
@@ -416,8 +542,18 @@ def _client_final(call: ClientCall):
         if call.is_stream:
             return stream
         # sync dispatch of a streaming method buffers the whole chain —
-        # the baseline arm of the TTFT comparison, and a convenience
-        return list(stream)
+        # the baseline arm of the TTFT comparison, and a convenience.
+        # A mid-chain failure is annotated with the delivered-chunk
+        # count: retry layers must never replay a partial stream.
+        out = []
+        try:
+            for v in stream:
+                out.append(v)
+        except ChannelError as e:
+            if out:
+                e.chunks_delivered = len(out)
+            raise
+        return out
     if call.is_future:
         args = call.args
         if spec.byval:

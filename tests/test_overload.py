@@ -1,0 +1,574 @@
+"""Overload-robust traffic plane: bounded backpressure, admission
+control, replica load balancing, chaos injection.
+
+Covers: ring-full posts parking in the bounded admission queue (success
+when the server drains, typed ``Overloaded`` when the budget or queue
+cap is exceeded, deadline-derived budgets); ``close()`` racing parked
+waiters (every waiter fails with ``ChannelError`` exactly once, no page
+leaked); server-side ``AdmissionInterceptor`` shedding with E_OVERLOAD
+*before* dispatch (in-flight caps, §5.4 orchestrator request quotas on
+an injected clock, stream admission held to end-of-chain, the fallback
+route); client ``RetryInterceptor`` backoff honoring server
+retry-after, capping total wall time by the method deadline, and never
+replaying a partially-delivered stream; ``balance="power2"``/``"rr"``
+replica spreading with pinned streams and degraded (dead-replica) mode;
+and the deterministic seedable chaos plan the soak bench drives.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    AdmissionInterceptor,
+    ChannelError,
+    ChaosInjector,
+    ClusterRouter,
+    DeadlineExceeded,
+    Fault,
+    FaultPlan,
+    Orchestrator,
+    Overloaded,
+    RPC,
+    RetryInterceptor,
+    ServiceStub,
+    service_def,
+    method,
+    service,
+)
+
+FN_INC = 1
+
+
+@service(name="ovl")
+class OvlSvc:
+    """Counters per instance → per-replica dispatch evidence."""
+
+    def __init__(self):
+        self.calls = 0
+        self.stream_attempts = 0
+        self.partial_attempts = 0
+        self.fail_streams = 0
+
+    @method(retry=2)
+    def ping(self, ctx, x):
+        self.calls += 1
+        return x + 1
+
+    @method
+    def once(self, ctx, x):       # retry=0: sheds surface immediately
+        self.calls += 1
+        return x
+
+    @method(byval=True, retry=2, deadline=1.0)
+    def echo(self, ctx, x):
+        self.calls += 1
+        return x
+
+    @method(streaming=True, retry=2)
+    def toks(self, ctx, n):
+        self.stream_attempts += 1
+        if self.fail_streams > 0:
+            self.fail_streams -= 1
+            raise RuntimeError("flaky stream start")
+        for i in range(int(n)):
+            yield i
+
+    @method(streaming=True, retry=2)
+    def partial(self, ctx, n):
+        self.partial_attempts += 1
+        yield 0
+        yield 1
+        raise RuntimeError("mid-stream crash")
+
+
+def _raw_ring(capacity=4):
+    """A raw int-handler channel with a tiny ring, NO server running."""
+    orch = Orchestrator()
+    ch = RPC(orch, pid=1).open("raw", heap_pages=128)
+    ch.add(FN_INC, lambda ctx, a: int(a) + 1)
+    conn = RPC(orch, pid=2).connect("raw", ring_capacity=capacity)
+    return orch, ch, conn
+
+
+def _fill_ring(conn, capacity=4):
+    return [conn.call_async(FN_INC, i) for i in range(capacity)]
+
+
+# ---------------------------------------------------------------------------
+# bounded backpressure: the admission queue on ring-full posts
+# ---------------------------------------------------------------------------
+class TestAdmissionPark:
+    def test_ring_full_raises_typed_overloaded_after_budget(self):
+        _, _, conn = _raw_ring()
+        conn.admission_wait_s = 0.02
+        _fill_ring(conn)
+        t0 = time.perf_counter()
+        with pytest.raises(Overloaded, match="ring overflow") as ei:
+            conn.call(FN_INC, 99)
+        assert time.perf_counter() - t0 >= 0.02
+        assert ei.value.retry_after_s == pytest.approx(0.02)
+        assert conn.n_overloads == 1
+        assert conn.n_admission_waits == 1
+
+    def test_overloaded_is_a_channel_error(self):
+        # existing callers catching ChannelError (and the property tests
+        # matching "ring overflow") keep working unchanged
+        assert issubclass(Overloaded, ChannelError)
+
+    def test_park_succeeds_when_server_drains(self):
+        _, ch, conn = _raw_ring()
+        conn.admission_wait_s = 2.0
+        tokens = _fill_ring(conn)
+        result = []
+
+        def caller():
+            result.append(conn.call(FN_INC, 9, timeout=2.0))
+
+        t = threading.Thread(target=caller, daemon=True)
+        t.start()
+        time.sleep(0.03)
+        assert conn._admission_waiters == 1      # parked on the full ring
+        ch.serve_many()                          # complete the backlog...
+        for i, tok in enumerate(tokens):
+            assert conn.wait(tok) == i + 1       # ...reaping frees slots
+        stop = time.perf_counter() + 2.0
+        while t.is_alive() and time.perf_counter() < stop:
+            ch.serve_many()                      # serve the unparked post
+            time.sleep(0.001)
+        t.join(timeout=1.0)
+        assert result == [10]
+        assert conn.n_admission_waits == 1
+        assert conn.n_overloads == 0
+
+    def test_admission_queue_cap_sheds_immediately(self):
+        _, _, conn = _raw_ring()
+        conn.admission_max_waiters = 0
+        _fill_ring(conn)
+        t0 = time.perf_counter()
+        with pytest.raises(Overloaded, match="admission queue full"):
+            conn.call(FN_INC, 99)
+        assert time.perf_counter() - t0 < 0.05   # no park happened
+
+    def test_descriptor_deadline_bounds_park_budget(self):
+        _, _, conn = _raw_ring()
+        conn.admission_wait_s = 30.0   # park budget must NOT come from this
+        _fill_ring(conn)
+        t0 = time.perf_counter()
+        dl_us = int((time.monotonic() + 0.05) * 1e6)
+        with pytest.raises(Overloaded, match="budget lapsed"):
+            conn.call(FN_INC, 99, deadline_us=dl_us)
+        assert time.perf_counter() - t0 < 5.0
+
+    def test_async_posts_park_too(self):
+        _, _, conn = _raw_ring()
+        conn.admission_wait_s = 0.02
+        _fill_ring(conn)
+        with pytest.raises(Overloaded, match="ring overflow"):
+            conn.call_async(FN_INC, 99)
+
+
+class TestCloseRacesParkedWaiters:
+    def test_every_parked_waiter_fails_exactly_once(self):
+        _, _, conn = _raw_ring()
+        conn.admission_wait_s = 30.0
+        conn.admission_max_waiters = 8
+        _fill_ring(conn)
+        base_pages = int((conn.heap.state == 1).sum())
+        errors = []
+        lock = threading.Lock()
+
+        def waiter(i):
+            try:
+                conn.call(FN_INC, i)
+                with lock:
+                    errors.append(("ok", i))
+            except ChannelError as e:
+                with lock:
+                    errors.append(("err", str(e)))
+
+        threads = [threading.Thread(target=waiter, args=(i,), daemon=True)
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        time.sleep(0.05)   # all three must be parked now
+        assert conn._admission_waiters == 3
+        conn.close()
+        for t in threads:
+            t.join(timeout=5.0)
+            assert not t.is_alive(), "a parked waiter hung across close()"
+        assert len(errors) == 3
+        assert all(kind == "err" and "closed" in msg
+                   for kind, msg in errors)
+        # parked waiters allocated nothing: no page leaked past close
+        assert int((conn.heap.state == 1).sum()) <= base_pages
+
+
+# ---------------------------------------------------------------------------
+# server-side admission control: E_OVERLOAD before dispatch
+# ---------------------------------------------------------------------------
+def _mk_service(gate=None, clock=None):
+    orch = Orchestrator(clock=clock)
+    ch = RPC(orch, pid=1).open("ovl", heap_pages=256)
+    inst = OvlSvc()
+    ch.serve(inst, interceptors=(gate,) if gate is not None else ())
+    conn = RPC(orch, pid=7).connect("ovl")
+    return orch, ch, inst, conn
+
+
+class TestAdmissionInterceptor:
+    def test_inflight_cap_sheds_typed_and_never_runs_handler(self):
+        gate = AdmissionInterceptor(max_in_flight=0, retry_after_s=0.02)
+        _, _, inst, conn = _mk_service(gate)
+        stub = ServiceStub(conn, service_def(OvlSvc))
+        with pytest.raises(Overloaded) as ei:
+            stub.once(5, inline=True)
+        assert inst.calls == 0           # shed cost one descriptor word
+        assert gate.n_shed_inflight == 1
+        assert ei.value.retry_after_s == pytest.approx(0.02)
+
+    def test_quota_token_bucket_on_injected_clock(self):
+        clk = [0.0]
+        gate = AdmissionInterceptor(orch=None, retry_after_s=0.005)
+        orch, _, inst, conn = _mk_service(gate, clock=lambda: clk[0])
+        gate.orch = orch
+        orch.set_request_quota(7, per_second=1.0)   # cap = 1 token
+        stub = ServiceStub(conn, service_def(OvlSvc))
+        assert stub.once(1, inline=True) == 1       # token spent
+        with pytest.raises(Overloaded) as ei:
+            stub.once(2, inline=True)
+        # time-to-one-token at 1 req/s is ~1s
+        assert ei.value.retry_after_s == pytest.approx(1.0, rel=0.01)
+        clk[0] = 1.5                                 # refill
+        assert stub.once(3, inline=True) == 3
+        assert gate.n_shed_quota == 1
+        assert inst.calls == 2
+
+    def test_zero_rate_quota_sheds_everything(self):
+        clk = [0.0]
+        gate = AdmissionInterceptor(retry_after_s=0.004)
+        orch, _, inst, conn = _mk_service(gate, clock=lambda: clk[0])
+        gate.orch = orch
+        orch.set_request_quota(7, per_second=0.0)
+        stub = ServiceStub(conn, service_def(OvlSvc))
+        for i in range(3):
+            with pytest.raises(Overloaded) as ei:
+                stub.once(i, inline=True)
+            assert ei.value.retry_after_s == pytest.approx(0.004)
+        assert inst.calls == 0
+        # clearing the quota re-admits
+        orch.set_request_quota(7, None)
+        assert stub.once(9, inline=True) == 9
+
+    def test_unquotad_pids_unaffected(self):
+        clk = [0.0]
+        gate = AdmissionInterceptor()
+        orch, _, _, conn = _mk_service(gate, clock=lambda: clk[0])
+        gate.orch = orch
+        orch.set_request_quota(12345, per_second=0.0)   # some OTHER pid
+        stub = ServiceStub(conn, service_def(OvlSvc))
+        assert stub.once(4, inline=True) == 4
+
+    def test_stream_admission_held_until_chain_ends(self):
+        gate = AdmissionInterceptor(max_in_flight=1, retry_after_s=0.003)
+        _, _, inst, conn = _mk_service(gate)
+        stub = ServiceStub(conn, service_def(OvlSvc))
+        # window=1: bounded-chunk backpressure keeps the producer alive
+        # (and therefore admitted) until the consumer drains it
+        s1 = stub.toks.stream(3, inline=True, window=1)
+        assert next(s1) == 0
+        assert gate.in_flight == 1       # held while chunks flow
+        s2 = stub.toks.stream(3, inline=True, window=1)
+        with pytest.raises(Overloaded):
+            next(s2)
+        assert list(s1) == [1, 2]        # the admitted stream finishes
+        assert gate.in_flight == 0       # released exactly once at end
+        s3 = stub.toks.stream(2, inline=True)
+        assert list(s3) == [0, 1]
+
+    def test_fallback_route_sheds_identically(self):
+        orch = Orchestrator()
+        router = ClusterRouter(orch)
+        ch = RPC(orch, pid=1).open("/pod0/f", heap_pages=256)
+        inst = OvlSvc()
+        gate = AdmissionInterceptor(max_in_flight=0, retry_after_s=0.01)
+        ch.serve(inst, interceptors=(gate,))
+        router.register("/pod0/f", ch, pod="pod0")
+        stub = router.stub("/pod0/f", OvlSvc, pid=9, pod="pod1")
+        assert stub.connection.transport == "fallback"
+        with pytest.raises(Overloaded) as ei:
+            stub.once(5)
+        assert inst.calls == 0
+        assert ei.value.retry_after_s == pytest.approx(0.01)
+
+
+# ---------------------------------------------------------------------------
+# client-side retry policy
+# ---------------------------------------------------------------------------
+class TestRetryInterceptor:
+    def test_backoff_honors_server_retry_after(self):
+        gate = AdmissionInterceptor(max_in_flight=0, retry_after_s=0.02)
+        _, _, inst, conn = _mk_service(gate)
+        sleeps = []
+        ri = RetryInterceptor(jitter=0.0, seed=0, sleep=sleeps.append)
+        stub = ServiceStub(conn, service_def(OvlSvc), (ri,))
+        with pytest.raises(Overloaded):
+            stub.ping(1, inline=True)     # retry=2 → 3 attempts
+        assert gate.n_shed_inflight == 3
+        # every pause floored at the server-suggested 20ms (the
+        # exponential schedule alone would be 1ms then 2ms)
+        assert sleeps == [pytest.approx(0.02), pytest.approx(0.02)]
+        assert inst.calls == 0
+
+    def test_total_retry_wall_time_capped_by_method_deadline(self):
+        gate = AdmissionInterceptor(max_in_flight=0, retry_after_s=0.05)
+        _, _, _, conn = _mk_service(gate)
+        sleeps = []
+        ri = RetryInterceptor(jitter=0.0, seed=0, sleep=sleeps.append)
+        stub = ServiceStub(conn, service_def(OvlSvc), (ri,))
+        with pytest.raises(Overloaded):
+            # the 50ms suggested pause cannot fit inside a 1ms budget:
+            # give up after the first attempt instead of overshooting
+            stub.echo(1, deadline=0.001, inline=True)
+        assert sleeps == []
+        assert gate.n_shed_inflight == 1
+
+    def test_zero_chunk_stream_failure_retries(self):
+        _, _, inst, conn = _mk_service()
+        ri = RetryInterceptor(jitter=0.0, seed=0, sleep=lambda s: None)
+        stub = ServiceStub(conn, service_def(OvlSvc), (ri,))
+        inst.fail_streams = 1
+        assert stub.toks(3, inline=True) == [0, 1, 2]
+        assert inst.stream_attempts == 2   # failed once, replayed once
+
+    def test_partial_stream_never_retries(self):
+        _, _, inst, conn = _mk_service()
+        ri = RetryInterceptor(jitter=0.0, seed=0, sleep=lambda s: None)
+        stub = ServiceStub(conn, service_def(OvlSvc), (ri,))
+        with pytest.raises(ChannelError) as ei:
+            stub.partial(5, inline=True)
+        assert inst.partial_attempts == 1  # delivered chunks pin the op
+        assert getattr(ei.value, "chunks_delivered", 0) == 2
+
+    def test_deadline_exceeded_never_retries(self):
+        _, _, inst, conn = _mk_service()
+        sleeps = []
+        ri = RetryInterceptor(jitter=0.0, seed=0, sleep=sleeps.append)
+        stub = ServiceStub(conn, service_def(OvlSvc), (ri,))
+        with pytest.raises(DeadlineExceeded):
+            stub.echo(1, deadline=-0.001, inline=True)
+        assert sleeps == []
+
+
+# ---------------------------------------------------------------------------
+# replica load balancing
+# ---------------------------------------------------------------------------
+def _replica_mesh(n=3, balance="rr", seed=0):
+    orch = Orchestrator()
+    router = ClusterRouter(orch)
+    insts, chans = [], []
+    for r in range(n):
+        ch = RPC(orch, pid=1 + r).open(f"/pod0/bal/r{r}", heap_pages=256)
+        inst = OvlSvc()
+        ch.serve(inst)
+        router.register("/pod0/bal", ch, pod="pod0")
+        insts.append(inst)
+        chans.append(ch)
+    stub = router.stub("/pod0/bal", OvlSvc, pid=50, pod="pod0",
+                       balance=balance, balance_seed=seed)
+    return orch, router, chans, insts, stub
+
+
+class TestReplicaBalancing:
+    def test_rr_spreads_calls_evenly(self):
+        _, _, _, insts, stub = _replica_mesh(balance="rr")
+        for i in range(9):
+            assert stub.ping(i, inline=True) == i + 1
+        assert [inst.calls for inst in insts] == [3, 3, 3]
+        assert stub.connection.dispatched == {0: 3, 1: 3, 2: 3}
+
+    def test_power2_prefers_lower_inflight(self):
+        _, _, _, _, stub = _replica_mesh(balance="power2")
+        conn = stub.connection
+        conn.inflight.update({0: 5, 1: 0})
+        assert {conn._pick([0, 1]) for _ in range(10)} == {1}
+
+    def test_unknown_policy_rejected(self):
+        orch = Orchestrator()
+        router = ClusterRouter(orch)
+        ch = RPC(orch, pid=1).open("/pod0/x", heap_pages=64)
+        ch.serve(OvlSvc())
+        router.register("/pod0/x", ch, pod="pod0")
+        with pytest.raises(ChannelError, match="balance policy"):
+            router.stub("/pod0/x", OvlSvc, pid=5, pod="pod0",
+                        balance="random")
+
+    def test_streams_stay_pinned_to_one_replica(self):
+        _, _, _, insts, stub = _replica_mesh(balance="power2", seed=3)
+        for _ in range(4):
+            assert stub.toks(3, inline=True) == [0, 1, 2]
+        attempts = [inst.stream_attempts for inst in insts]
+        assert sorted(attempts) == [0, 0, 4]   # one replica took them all
+        assert stub.connection._stream_pin is not None
+
+    def test_dead_replica_drops_out_and_traffic_survives(self):
+        orch, router, _, insts, stub = _replica_mesh(balance="rr")
+        conn = stub.connection
+        conn.prime()                      # wire (and lease) every replica
+        dead_pid = 3                      # replica idx 2
+        router.mark_crashed(dead_pid)
+        orch.expire_leases(dead_pid)
+        orch.tick()
+        assert conn._live() == [0, 1]
+        before = insts[2].calls
+        for i in range(6):
+            assert stub.ping(i, inline=True) == i + 1
+        assert insts[2].calls == before   # nothing routed to the dead one
+        assert [insts[0].calls, insts[1].calls] == [3, 3]
+
+    def test_pinned_sub_surfaces_replica_death(self):
+        orch, router, _, _, stub = _replica_mesh(balance="rr")
+        conn = stub.connection
+        rc = conn._sub(2)
+        router.mark_crashed(3)
+        orch.expire_leases(3)
+        orch.tick()
+        with pytest.raises(ChannelError, match="replica #2.*gone"):
+            rc.invoke(stub.definition.methods["ping"].fn_id, 1)
+
+    def test_reregistration_revives_replica(self):
+        orch, router, _, _, stub = _replica_mesh(balance="rr")
+        conn = stub.connection
+        conn.prime()
+        router.mark_crashed(3)
+        orch.expire_leases(3)
+        orch.tick()
+        assert conn._live() == [0, 1]
+        ch = RPC(orch, pid=3).open("/pod0/bal/r2b", heap_pages=256)
+        ch.serve(OvlSvc())
+        router.register("/pod0/bal", ch, pod="pod0")
+        assert 3 not in router._dead_pids
+        assert len(conn._live()) >= 3
+
+    def test_future_holds_and_releases_inflight_gauge(self):
+        _, _, chans, _, stub = _replica_mesh(balance="power2", seed=1)
+        conn = stub.connection
+        fut = stub.ping.future(41)
+        assert sum(conn.inflight.values()) == 1   # the pow2 signal
+        for ch in chans:
+            ch.serve_many()
+        assert fut.result(timeout=2.0) == 42
+        assert sum(conn.inflight.values()) == 0
+        # a second settle must not double-release
+        assert fut.result(timeout=2.0) == 42
+        assert sum(conn.inflight.values()) == 0
+
+    def test_balanced_connection_rejects_heap_pinning(self):
+        _, _, _, _, stub = _replica_mesh()
+        conn = stub.connection
+        with pytest.raises(ChannelError, match="no single target heap"):
+            conn.create_scope(4096)
+        with pytest.raises(ChannelError, match="no single target heap"):
+            conn.new_bytes(b"x")
+        with pytest.raises(ChannelError, match="no single target heap"):
+            conn.build_graph((1, 2))
+
+    def test_closed_balanced_connection_refuses_calls(self):
+        _, _, _, _, stub = _replica_mesh()
+        stub.close()
+        with pytest.raises(ChannelError, match="closed"):
+            stub.ping(1, inline=True)
+
+
+# ---------------------------------------------------------------------------
+# chaos plan + injector
+# ---------------------------------------------------------------------------
+class TestChaos:
+    def test_default_plan_is_seed_deterministic(self):
+        a = [(f.kind, f.at, f.duration) for f in FaultPlan.default(5)]
+        b = [(f.kind, f.at, f.duration) for f in FaultPlan.default(5)]
+        c = [(f.kind, f.at, f.duration) for f in FaultPlan.default(6)]
+        assert a == b
+        assert a != c
+        # different seeds jitter timing but never coverage or order
+        assert [k for k, _, _ in a] == [k for k, _, _ in c] == \
+            ["slow_handler", "ring_stall", "quota_exhaust", "lease_lapse"]
+
+    def test_fault_validation(self):
+        with pytest.raises(ChannelError, match="unknown fault kind"):
+            Fault("meteor_strike", at=0.5)
+        with pytest.raises(ChannelError, match="must satisfy"):
+            Fault("ring_stall", at=1.5)
+
+    def test_quota_exhaust_builtin_applies_and_reverts(self):
+        clk = [0.0]
+        orch = Orchestrator(clock=lambda: clk[0])
+        orch.set_request_quota(7, 5.0)
+        plan = FaultPlan([Fault("quota_exhaust", at=0.5, duration=0.2,
+                                target=7)])
+        inj = ChaosInjector(plan, orch=orch)
+        assert inj.poke(0.4) == []
+        fired = inj.poke(0.55)
+        assert [f.kind for f in fired] == ["quota_exhaust"]
+        assert orch.request_quota(7) == 0.0
+        inj.poke(0.71)
+        assert orch.request_quota(7) == 5.0   # restored, not cleared
+        assert inj.n_fired == 1
+
+    def test_lease_lapse_builtin_kills_replica(self):
+        orch, router, _, _, stub = _replica_mesh(balance="rr")
+        stub.connection.prime()
+        plan = FaultPlan([Fault("lease_lapse", at=0.3, target=3)])
+        inj = ChaosInjector(plan, orch=orch, router=router)
+        inj.poke(0.3)
+        assert 3 in router._dead_pids
+        assert stub.connection._live() == [0, 1]
+
+    def test_unbound_kind_raises_loudly(self):
+        plan = FaultPlan([Fault("ring_stall", at=0.1)])
+        inj = ChaosInjector(plan)   # no orch, nothing bound
+        with pytest.raises(ChannelError, match="no binding"):
+            inj.poke(0.5)
+
+    def test_finish_reverts_open_windows(self):
+        clk = [0.0]
+        orch = Orchestrator(clock=lambda: clk[0])
+        plan = FaultPlan([Fault("quota_exhaust", at=0.1, duration=5.0,
+                                target=9)])
+        inj = ChaosInjector(plan, orch=orch)
+        inj.poke(0.2)
+        assert orch.request_quota(9) == 0.0
+        inj.finish()
+        assert orch.request_quota(9) is None
+
+
+class TestOrchestratorExpire:
+    def test_expire_leases_lapses_on_next_tick(self):
+        orch = Orchestrator()
+        heap = orch.create_heap(16)
+        orch.map_heap(42, heap)
+        fired = []
+        orch.on_failure(lambda pid, hid: fired.append((pid, hid)))
+        assert orch.expire_leases(42) == 1
+        assert orch.tick() == [(42, heap.heap_id)]
+        assert fired == [(42, heap.heap_id)]
+        assert orch.expire_leases(42) == 0   # nothing live left
+
+
+# ---------------------------------------------------------------------------
+# the soak harness end to end (mini run)
+# ---------------------------------------------------------------------------
+class TestSoakSmoke:
+    def test_mini_soak_holds_all_invariants(self):
+        from benchmarks import soak
+        rows = soak.bench(ops_per_client=10, seed=1)
+        by = {name: val for name, val, _ in rows}
+        assert by["soak_ops_ok"] > 0
+        assert by["soak_lost"] == 0
+        assert by["soak_mismatched"] == 0
+        assert by["soak_unexpected"] == 0
+        assert by["soak_faults_fired"] >= 3
+        assert by["soak_reply_integrity"] == 1.0
+        assert by["soak_shed_typed"] == 1.0
+        assert by["soak_fault_coverage"] >= 1.0
