@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV. Roofline terms come from the
 dry-run artifacts (see repro.roofline.analysis / EXPERIMENTS.md) — this
 harness measures the host-side RPCool control plane for real.
 
-Six suites additionally write JSON trajectory artifacts, all carrying
+Seven suites additionally write JSON trajectory artifacts, all carrying
 the shared schema fields ``suite`` / ``gate`` / ``measured`` (validated
 by ``--check-schema`` and tests/test_bench_schema.py):
 
@@ -14,6 +14,7 @@ by ``--check-schema`` and tests/test_bench_schema.py):
   pipeline → BENCH_pipeline.json  depth-8 futures vs sequential invoke
   stream   → BENCH_stream.json    streaming vs buffered replies (TTFT)
   soak     → BENCH_soak.json      chaos-injected mixed traffic, p99-gated
+  serve    → BENCH_serve.json     continuous-batching decode, 8 clients
 
 Usage:
     python -m benchmarks.run                     # all suites
@@ -38,6 +39,7 @@ MARSHAL_JSON_DEFAULT = "BENCH_marshal.json"
 PIPELINE_JSON_DEFAULT = "BENCH_pipeline.json"
 STREAM_JSON_DEFAULT = "BENCH_stream.json"
 SOAK_JSON_DEFAULT = "BENCH_soak.json"
+SERVE_JSON_DEFAULT = "BENCH_serve.json"
 
 # The suite registry — the single source of truth for suite names
 # (--suite validation, --list-suites, CI smoke steps). Keys are the CLI
@@ -49,6 +51,7 @@ SUITES = [
     ("pipeline", "pipeline (depth-8 futures vs sequential invoke)"),
     ("stream", "stream (token-streaming replies vs buffered, TTFT)"),
     ("soak", "soak (chaos-injected mixed traffic, p99 + integrity gates)"),
+    ("serve", "serve (continuous-batching multi-tenant decode)"),
     ("cooldb", "cooldb (Fig. 11)"),
     ("ycsb", "ycsb_kv (Figs. 9/10)"),
     ("micro", "microservices (Figs. 12/13)"),
@@ -248,6 +251,47 @@ def _write_soak_json(rows, path: str, iters: int) -> None:
           file=sys.stderr)
 
 
+def _write_serve_json(rows, path: str, iters: int) -> None:
+    by_name = {name: us for name, us, _ in rows}
+    derived = {name: d for name, us, d in rows}
+    from .serve import SERVE_THROUGHPUT_GATE, SERVE_TTFT_GATE_STEPS
+    ratio = by_name.get("serve_throughput_ratio", 0.0)
+    lost = by_name.get("serve_lost_tokens", -1.0)
+    mism = by_name.get("serve_mismatched_tokens", -1.0)
+    ttft = by_name.get("serve_ttft_steps_max", 1e9)
+    peak = by_name.get("serve_peak_batch", 0.0)
+    # every gated quantity normalized so the shared contract holds:
+    # meets_target ⇔ ALL measured values >= 1.0 under op ">="
+    measured = {
+        "throughput_ratio_vs_gate": ratio / SERVE_THROUGHPUT_GATE,
+        "token_integrity": 1.0 if (lost == 0 and mism == 0) else 0.0,
+        "ttft_within_gate": 1.0 if ttft <= SERVE_TTFT_GATE_STEPS else 0.0,
+        "batching_formed": peak / 2.0,
+    }
+    doc = {
+        "suite": "serve (continuous-batching multi-tenant decode)",
+        "iters": iters,
+        "unit": "mixed (tok/s rows for throughput, counts elsewhere)",
+        "rows": by_name,
+        "derived": derived,
+        "throughput_ratio": ratio,
+        "target_ratio": SERVE_THROUGHPUT_GATE,
+        "ttft_gate_steps": SERVE_TTFT_GATE_STEPS,
+        "meets_target": all(v >= 1.0 for v in measured.values()),
+        "gate": {"metric": "min(throughput_ratio_vs_gate, "
+                           "token_integrity, ttft_within_gate, "
+                           "batching_formed)",
+                 "op": ">=", "target": 1.0},
+        "measured": measured,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}: batched-vs-sequential {ratio:.2f}x "
+          f"(target {SERVE_THROUGHPUT_GATE}x) lost={int(lost)} "
+          f"mismatched={int(mism)} ttft_max={int(ttft)} "
+          f"peak_batch={int(peak)}", file=sys.stderr)
+
+
 def check_schema(pattern: str = "BENCH_*.json") -> int:
     """Validate that every benchmark artifact carries the shared schema
     fields. Returns the number of files checked; raises SystemExit on a
@@ -300,7 +344,7 @@ def main(argv=None) -> None:
         return
 
     from . import cluster, cooldb, kv_handoff, marshal, microservices, \
-        noop_rtt, op_latency, pipeline, soak, stream, ycsb_kv
+        noop_rtt, op_latency, pipeline, serve, soak, stream, ycsb_kv
 
     def noop_bench():
         return noop_rtt.bench(n=args.iters, thr_iters=args.thr_iters)
@@ -330,6 +374,12 @@ def main(argv=None) -> None:
         # full-run default for a stable p99
         return soak.bench(ops_per_client=max(10, min(args.iters, 120)))
 
+    def serve_bench():
+        # per-stream token budget: clamped so a tiny CI run still drives
+        # 8 full streams through the batched loop; the integrity gates
+        # (zero lost/mismatched tokens, TTFT) are iteration-independent
+        return serve.bench(max_new=max(8, min(args.iters, 24)))
+
     benches = {
         "noop": noop_bench,
         "op": op_latency.bench,
@@ -337,6 +387,7 @@ def main(argv=None) -> None:
         "pipeline": pipeline_bench,
         "stream": stream_bench,
         "soak": soak_bench,
+        "serve": serve_bench,
         "cooldb": cooldb.bench,
         "ycsb": ycsb_kv.bench,
         "micro": microservices.bench,
@@ -392,6 +443,11 @@ def main(argv=None) -> None:
                                  and args.json != NOOP_JSON_DEFAULT) \
                 else SOAK_JSON_DEFAULT
             _write_soak_json(rows, path, max(10, min(args.iters, 120)))
+        elif key == "serve":
+            path = args.json if (args.suite == "serve"
+                                 and args.json != NOOP_JSON_DEFAULT) \
+                else SERVE_JSON_DEFAULT
+            _write_serve_json(rows, path, max(8, min(args.iters, 24)))
     if failures:
         sys.exit(1)
 

@@ -806,6 +806,12 @@ class Channel:
         # admit(client_pid, fn_id) -> Optional[retry_after_us] / release()
         # plugs in.
         self.admission = None
+        # push-mode per-pump chunk cap applied to every stream this
+        # channel registers (None = the client's full window). A serving
+        # transport whose stream generators share one scheduler (e.g.
+        # continuous batching) sets 1 so all live streams advance in
+        # lockstep, one batched step per sweep.
+        self.stream_pump_burst: Optional[int] = None
         orch.register_channel(name, self)
 
     # -- server API (Fig. 6 left) -------------------------------------------
@@ -1052,6 +1058,7 @@ class Channel:
                 # stream, so it is NOT returned to the connection.
                 ret.bind(conn, ring, slot, seal_idx, flags,
                          sc_start, sc_count)
+                ret.burst = self.stream_pump_burst
                 if gate is not None:
                     # the stream stays admitted until its chain ends:
                     # abort()/completion fires the release exactly once
@@ -1070,6 +1077,12 @@ class Channel:
             # a handler/interceptor aborting past the budget keeps the
             # dedicated status so clients see a deadline, not a crash
             ret, status, state = 0, E_DEADLINE, R_ERR
+        except Overloaded as e:
+            # a handler shedding on resource pressure (e.g. pool pages,
+            # §5.4) rides the same typed E_OVERLOAD reply as the
+            # pre-dispatch gate: the ret word carries retry-after µs
+            ret = max(0, int(e.retry_after_s * 1e6))
+            status, state = E_OVERLOAD, R_ERR
         except Exception:
             ret, status, state = 0, E_EXCEPTION, R_ERR
 

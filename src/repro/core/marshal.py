@@ -807,7 +807,7 @@ class ServerStream:
     __slots__ = ("ctx", "it", "anchor", "gen_tag", "window", "byval",
                  "conn", "ring", "slot", "seal_idx", "flags",
                  "_sc_start", "_sc_count", "_consumed_addr",
-                 "seq", "prev", "done", "release_cb")
+                 "seq", "prev", "done", "release_cb", "burst")
 
     def __init__(self, ctx, it, anchor: int, gen_tag: int, window: int,
                  byval: bool):
@@ -831,6 +831,12 @@ class ServerStream:
         # admission-gate release (§5.4): a stream stays admitted until
         # its chain ends; every terminal path funnels through abort()
         self.release_cb = None
+        # push-mode per-pump emission cap; None = a full window. Serving
+        # transports lower it (Channel.stream_pump_burst) when the
+        # generators behind concurrent streams share state — e.g. a
+        # continuous-batching scheduler — and one stream running a whole
+        # window ahead per pump would defeat the batching.
+        self.burst = None
 
     def bind(self, conn, ring, slot: int, seal_idx: int, flags: int,
              sc_start: int, sc_count: int) -> None:
@@ -862,6 +868,15 @@ class ServerStream:
                 if emitted >= max_chunks:
                     break
             else:
+                if emitted >= (self.burst or self.window):
+                    # push-mode fairness: one pump emits at most a
+                    # window's worth (or the transport's tighter burst)
+                    # even when a fast consumer keeps the window open —
+                    # otherwise the serving thread runs THIS generator
+                    # to completion while every other stream (and the
+                    # continuous-batching scheduler behind them)
+                    # starves. The sweep re-pumps next pass.
+                    break
                 try:
                     consumed = self._read_consumed()
                 except (InvalidPointer, ChannelError):
@@ -888,6 +903,14 @@ class ServerStream:
                 break
             except DeadlineExceeded:
                 self._finish(CH_ERR, E_DEADLINE, collect)
+                emitted += 1
+                break
+            except Overloaded as e:
+                # pool-pressure shed from inside the handler (the §5.4
+                # retry-after path): the terminal chunk's value word
+                # carries the suggested back-off in microseconds
+                self._finish(CH_ERR, E_OVERLOAD, collect,
+                             val=max(0, int(e.retry_after_s * 1e6)))
                 emitted += 1
                 break
             except SandboxViolation:
@@ -973,27 +996,31 @@ class ServerStream:
             collect.append(hdr)
 
     # -- termination -----------------------------------------------------
-    def _finish(self, cflags: int, status: int, collect) -> None:
+    def _finish(self, cflags: int, status: int, collect,
+                val: int = 0) -> None:
         conn = self.conn
         try:
             scope = _pop_chain_scope(conn, _CHUNK.size)
             hdr = scope.alloc(_CHUNK.size)
             self.ctx._daemon_write(hdr, _CHUNK.pack(
-                0, self.gen_tag, self.seq, cflags, status, 0))
+                0, self.gen_tag, self.seq, cflags, status, val))
             conn._reply_live[hdr] = scope
             self._publish(hdr, collect)
         except (InvalidPointer, ChannelError):
             self.abort()
             return
-        self._complete(R_DONE if cflags == CH_END else R_ERR, status)
+        self._complete(R_DONE if cflags == CH_END else R_ERR, status, val)
 
-    def _complete(self, state: int, status: int) -> None:
+    def _complete(self, state: int, status: int, ret: int = 0) -> None:
         if self.flags & F_SEALED:
             try:
                 self.conn.seals.mark_complete(self.seal_idx)
             except SealViolation:
                 pass
-        self.ring.complete(self.slot, 0, state, status)
+        # the ret word mirrors the terminal chunk's value word (e.g. the
+        # E_OVERLOAD retry-after µs) so a client that settles via the
+        # slot sees the same typed hint as one that read the chain
+        self.ring.complete(self.slot, ret, state, status)
         self.abort()
 
     def abort(self) -> None:
@@ -1096,7 +1123,11 @@ class RpcStream:
         policy = conn.wait_policy
         deadline = time.monotonic() + \
             (self._timeout if timeout is None else timeout)
-        spins = 256
+        # a fixed-cadence policy asks for polite polling: skip the bare
+        # GIL-yield prelude entirely — N streaming consumers spinning
+        # sleep(0) between chunks would starve the serving thread's
+        # dispatch path of the interpreter lock
+        spins = 0 if policy.fixed is not None else 256
         while True:
             if conn.closed:
                 # checked BEFORE touching the chain: close() freed the
@@ -1161,10 +1192,12 @@ class RpcStream:
             if self._state == _FAILED:
                 raise self._exc
             raise StopIteration
-        self._settle(addr, aux)   # CH_ERR: aux carries the status
+        # CH_ERR: aux carries the status, vpayload the retry-after hint
+        self._settle(addr, aux, vpayload)
         raise self._exc
 
-    def _settle(self, last_addr: int, status: Optional[int]) -> None:
+    def _settle(self, last_addr: int, status: Optional[int],
+                val: int = 0) -> None:
         """Consume the completed ring slot (releasing the seal) and
         recycle the tail of the chain."""
         conn = self.conn
@@ -1183,7 +1216,8 @@ class RpcStream:
             if status == E_DEADLINE:
                 exc = DeadlineExceeded("RPC deadline lapsed")
             elif status == E_OVERLOAD:
-                exc = Overloaded("server shed the stream (E_OVERLOAD)")
+                exc = Overloaded("server shed the stream (E_OVERLOAD)",
+                                 retry_after_s=val / 1e6)
             else:
                 exc = RpcError(status)
         if exc is not None:
@@ -1442,12 +1476,13 @@ class FallbackRpcStream:
                 _recycle_chunk(conn, self._prev)
             self._prev = addr
             return value
-        self._settle(addr, None if cflags == CH_END else aux)
+        self._settle(addr, None if cflags == CH_END else aux, vpayload)
         if self._state == _FAILED:
             raise self._exc
         raise StopIteration
 
-    def _settle(self, last_addr: int, status: Optional[int]) -> None:
+    def _settle(self, last_addr: int, status: Optional[int],
+                val: int = 0) -> None:
         conn = self.conn
         conn.link.send_msg(CHUNK_HDR_BYTES)   # completion descriptor
         _ret, _state, _status = conn.ring.consume(self.slot)
@@ -1466,7 +1501,8 @@ class FallbackRpcStream:
         if status == E_DEADLINE:
             self._exc = DeadlineExceeded("RPC deadline lapsed")
         elif status == E_OVERLOAD:
-            self._exc = Overloaded("server shed the stream (E_OVERLOAD)")
+            self._exc = Overloaded("server shed the stream (E_OVERLOAD)",
+                                   retry_after_s=val / 1e6)
         else:
             self._exc = RpcError(status)
 

@@ -58,6 +58,15 @@ class Orchestrator:
         # orchestrator only owns the table (like the memory quotas); the
         # server-side AdmissionInterceptor enforces it pre-dispatch.
         self._req_quota: Dict[int, float] = {}
+        # §5.4 pool-page quotas: pid -> max pages owned at once inside a
+        # registered pool heap. Same contract as the other quotas: this
+        # table is authoritative, the pool's allocator enforces it (an
+        # over-quota admit sheds with Overloaded, never a silent grant).
+        self._page_quota: Dict[int, int] = {}
+        # pod -> shared pool (e.g. the KV pool serving that pod): the
+        # byref argument resolver looks the *destination* pool up here
+        # when a pool-page RPC crosses coherence domains
+        self._pod_pools: Dict[str, object] = {}
         self._mapped: Dict[int, Set[int]] = {}  # pid -> heap ids
         self._failure_cbs: List[Callable[[int, int], None]] = []
         # coherence domains: pod name -> member pids (§4.6)
@@ -154,6 +163,31 @@ class Orchestrator:
 
     def request_quota(self, pid: int) -> Optional[float]:
         return self._req_quota.get(pid)
+
+    def set_page_quota(self, pid: int, max_pages: Optional[int]) -> None:
+        """§5.4 pool-page quota: cap how many pool pages ``pid`` may own
+        at once (``None`` clears the cap). Enforced by the pool
+        allocator, which sheds over-quota admits with ``Overloaded``."""
+        if max_pages is None:
+            self._page_quota.pop(pid, None)
+        else:
+            self._page_quota[pid] = int(max_pages)
+
+    def page_quota(self, pid: int) -> Optional[int]:
+        return self._page_quota.get(pid)
+
+    # -- pod pool registry (cross-pod byref resolution) ------------------------
+    def register_pool(self, pod: str, pool: object) -> None:
+        """Publish ``pool`` as coherence domain ``pod``'s shared pool.
+        A byref pool-page argument dispatched *into* that pod resolves
+        its destination pages against this registry."""
+        self._pod_pools[pod] = pool
+
+    def pool_of_pod(self, pod: str) -> object:
+        try:
+            return self._pod_pools[pod]
+        except KeyError:
+            raise ChannelError(f"no pool registered for pod {pod!r}")
 
     def mapped_bytes(self, pid: int) -> int:
         return sum(

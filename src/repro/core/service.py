@@ -69,12 +69,12 @@ class MethodSpec:
     """One method's wire identity + per-method options."""
 
     __slots__ = ("name", "fn_id", "sealed", "sandboxed", "byval",
-                 "deadline", "retry", "streaming")
+                 "deadline", "retry", "streaming", "byref")
 
     def __init__(self, name: str, fn_id: int, sealed: bool = False,
                  sandboxed: bool = False, byval: bool = False,
                  deadline: Optional[float] = None, retry: int = 0,
-                 streaming: bool = False):
+                 streaming: bool = False, byref: bool = False):
         self.name = name
         self.fn_id = fn_id
         self.sealed = sealed
@@ -83,30 +83,37 @@ class MethodSpec:
         self.deadline = deadline
         self.retry = retry
         self.streaming = streaming
+        self.byref = byref
 
     def __repr__(self) -> str:  # pragma: no cover
         return (f"<MethodSpec {self.name} fn_id=0x{self.fn_id:08x} "
                 f"sealed={self.sealed} sandboxed={self.sandboxed} "
                 f"byval={self.byval} deadline={self.deadline} "
-                f"retry={self.retry} streaming={self.streaming}>")
+                f"retry={self.retry} streaming={self.streaming} "
+                f"byref={self.byref}>")
 
 
 def method(fn=None, *, fn_id: Optional[int] = None, sealed: bool = False,
            sandboxed: bool = False, byval: bool = False,
            deadline: Optional[float] = None, retry: int = 0,
-           streaming: bool = False):
+           streaming: bool = False, byref: bool = False):
     """Set a service method's per-method options. Usable bare
     (``@method``) or parameterized (``@method(sealed=True)``). Every
     public method of a ``@service`` class is exported either way —
     undecorated methods get the defaults; underscore-prefixed methods
     stay private helpers. ``streaming=True`` declares a generator
     handler: clients consume it with ``stub.m.stream(...)`` (or drain it
-    to a list with a plain sync call)."""
+    to a list with a plain sync call). ``byref=True`` declares pool-page
+    reference arguments: at dispatch, any argument exposing
+    ``__byref_resolve__(conn)`` (e.g. ``serving.kv_pool.PoolPages``) is
+    resolved against the route — same-pod calls pass the raw page
+    indices, cross-pod calls bulk-migrate the pages first and pass the
+    destination indices."""
     def deco(f):
         f.__rpc_method__ = dict(fn_id=fn_id, sealed=sealed,
                                 sandboxed=sandboxed, byval=byval,
                                 deadline=deadline, retry=retry,
-                                streaming=streaming)
+                                streaming=streaming, byref=byref)
         return f
     return deco(fn) if fn is not None else deco
 
@@ -202,7 +209,8 @@ def service(cls=None, *, name: Optional[str] = None):
                 byval=opts.get("byval", False),
                 deadline=opts.get("deadline"),
                 retry=opts.get("retry", 0),
-                streaming=opts.get("streaming", False))
+                streaming=opts.get("streaming", False),
+                byref=opts.get("byref", False))
         klass.__service_def__ = ServiceDef(svc_name, methods)
         return klass
     return deco(cls) if cls is not None else deco
@@ -526,6 +534,16 @@ def _client_final(call: ClientCall):
     the route-appropriate typed entry point."""
     spec = call.spec
     conn = call.conn
+    if spec.byref:
+        # pool-page reference arguments resolve against the route the
+        # connection actually took: pointer-pass in pod, one bulk
+        # scope_copy migration (then destination indices) across pods.
+        # Resolution happens per dispatch, so a retry after a failover
+        # re-resolves against the replica's pod.
+        call.args = tuple(
+            a.__byref_resolve__(conn)
+            if hasattr(a, "__byref_resolve__") else a
+            for a in call.args)
     kw = dict(call.kwargs)
     if spec.sealed:
         kw.setdefault("sealed", True)

@@ -18,16 +18,22 @@ The pool is the TPU-resident instantiation of the paper's shared heap:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.errors import AllocationError, ChannelError, Overloaded
 from ..core.heap import SharedHeap
 from ..core.orchestrator import Orchestrator
 from ..core.seal import SealManager
 from ..models.config import ModelConfig
+
+# back-off hint carried by pool-pressure sheds (§5.4 retry-after): long
+# enough for a decode step or two to retire pages, short enough that a
+# retrying client wastes no meaningful time
+POOL_RETRY_AFTER_S = 0.02
 
 
 @dataclass
@@ -39,7 +45,8 @@ class PoolConfig:
 
 class PagedKVPool:
     def __init__(self, orch: Orchestrator, cfg: ModelConfig,
-                 pool_cfg: PoolConfig, owner_pid: int):
+                 pool_cfg: PoolConfig, owner_pid: int,
+                 pod: Optional[str] = None):
         self.cfg = cfg
         self.pc = pool_cfg
         L = cfg.num_layers
@@ -48,6 +55,7 @@ class PagedKVPool:
 
         # page byte size for quota accounting (K+V, all layers)
         page_bytes = 2 * L * T * Hkv * D * 2
+        self.page_bytes = page_bytes
         self.heap = orch.create_heap(P, page_size=page_bytes,
                                      name="kv_pool")
         orch.map_heap(owner_pid, self.heap)
@@ -59,24 +67,72 @@ class PagedKVPool:
         self.v = jnp.zeros((L, P, T, Hkv, D), jnp.bfloat16)
         self.owner_pid = owner_pid
         self.orch = orch
+        self.pod = pod
+        if pod is not None:
+            # publish as the pod's KV pool: cross-pod byref arguments
+            # resolve their destination pages against this registry
+            orch.register_pool(pod, self)
+        # byref data-plane accounting: bytes bulk-migrated into/out of
+        # this pool by cross-pod pool-page RPCs (zero on the CXL route —
+        # that is the paper's claim, and what the tests assert)
+        self.byref_bytes_in = 0
+        self.byref_bytes_out = 0
 
     # -- allocation (pointer minting) -----------------------------------
+    def pages_owned(self, conn_id: int) -> int:
+        """Pool pages ``conn_id`` currently owns (quota accounting)."""
+        return int(((self.heap.owner == conn_id)
+                    & (self.heap.state == 1)).sum())
+
+    def _check_page_quota(self, conn_id: int, n_pages: int) -> None:
+        quota = self.orch.page_quota(conn_id)
+        if quota is None:
+            return
+        owned = self.pages_owned(conn_id)
+        if owned + n_pages > quota:
+            raise Overloaded(
+                f"conn {conn_id}: admit needs {n_pages} pages but "
+                f"{owned}/{quota} of its page quota are in use (§5.4)",
+                retry_after_s=POOL_RETRY_AFTER_S)
+
     def alloc_seq(self, n_tokens: int, conn_id: int) -> List[int]:
         n_pages = max(1, -(-n_tokens // self.pc.page_tokens))
         if n_pages > self.pc.max_pages_per_seq:
             raise ValueError("sequence exceeds max_pages_per_seq")
+        self._check_page_quota(conn_id, n_pages)
         # pages need not be contiguous: one-page extents (block tables
-        # chase pointers anyway — that is the point of the paper)
-        return [self.heap.alloc_pages(1, owner=conn_id)
-                for _ in range(n_pages)]
+        # chase pointers anyway — that is the point of the paper).
+        # A mid-sequence allocation failure must hand the partial list
+        # back: the caller never sees these pages, so anything already
+        # minted would otherwise leak until the pool starves.
+        pages: List[int] = []
+        try:
+            for _ in range(n_pages):
+                pages.append(self.heap.alloc_pages(1, owner=conn_id))
+        except AllocationError:
+            for p in pages:
+                self.heap.free_extent(p, 1)
+            raise
+        return pages
 
     def extend_seq(self, pages: List[int], n_tokens: int,
                    conn_id: int) -> List[int]:
         need = max(1, -(-n_tokens // self.pc.page_tokens))
-        while len(pages) < need:
-            if len(pages) >= self.pc.max_pages_per_seq:
-                raise ValueError("sequence exceeds max_pages_per_seq")
-            pages.append(self.heap.alloc_pages(1, owner=conn_id))
+        if need > self.pc.max_pages_per_seq:
+            raise ValueError("sequence exceeds max_pages_per_seq")
+        if need > len(pages):
+            self._check_page_quota(conn_id, need - len(pages))
+        grown = 0
+        try:
+            while len(pages) < need:
+                pages.append(self.heap.alloc_pages(1, owner=conn_id))
+                grown += 1
+        except AllocationError:
+            # same audit as alloc_seq: a failed growth leaves the input
+            # list exactly as it was — the pages this call minted go back
+            for _ in range(grown):
+                self.heap.free_extent(pages.pop(), 1)
+            raise
         return pages
 
     def free_seq(self, pages: List[int]) -> None:
@@ -175,4 +231,75 @@ def transfer_pages_cross_pod(src_pool: "PagedKVPool",
             moved += wire.size * wire.dtype.itemsize
         setattr(dst_pool, name,
                 dst.reshape(getattr(dst_pool, name).shape))
+    src_pool.byref_bytes_out += moved
+    dst_pool.byref_bytes_in += moved
     return moved
+
+
+class PoolPages:
+    """A KV-pool page set passed *by reference* as an RPC argument.
+
+    The argument form behind ``@method(byref=True)`` (§4.7 behind the
+    §5.6 identical-surface contract): the stub resolves it per dispatch
+    against the route the connection actually took —
+
+    * same pod (CXL ring): the raw page indices travel as the pointer
+      set; zero KV bytes move (the paper's headline handoff);
+    * cross pod (fallback link): destination pages are minted in the
+      target pod's registered pool (``orch.register_pool``) and the KV
+      migrates in ONE bulk ``scope_copy`` gather→wire→scatter transfer
+      (``transfer_pages_cross_pod`` — the cMPI-style amortization, not
+      per-message ping-pong), then the *destination* indices travel.
+
+    Either way the handler receives a plain page-index list in its own
+    pod's pool. ``last_moved_bytes`` records what the most recent
+    resolution copied (0 on the pointer route) — the byte-accounting
+    hook the tests and the serve benchmark read.
+    """
+
+    __slots__ = ("pool", "pages", "backend", "last_moved_bytes")
+
+    def __init__(self, pool: PagedKVPool, pages: List[int],
+                 backend: str = "ref"):
+        self.pool = pool
+        self.pages = list(pages)
+        self.backend = backend
+        self.last_moved_bytes = 0
+
+    def _server_pid(self, conn) -> int:
+        # RoutedConnection wraps the live target; bare connections carry
+        # server_pid directly
+        target = getattr(conn, "target", None) or conn
+        pid = getattr(target, "server_pid", None)
+        if pid is None:
+            raise ChannelError(
+                "byref argument needs a connection with a server pid "
+                "(Connection / FallbackConnection / RoutedConnection)")
+        return pid
+
+    def __byref_resolve__(self, conn) -> List[int]:
+        transport = getattr(conn, "transport", None)
+        if transport in (None, "cxl"):
+            # shared coherence domain: pointer passing, nothing copied
+            self.last_moved_bytes = 0
+            return list(self.pages)
+        orch = self.pool.orch
+        pod = orch.pod_of(self._server_pid(conn))
+        if pod is None:
+            raise ChannelError(
+                "cross-pod byref dispatch but the serving pid has no "
+                "pod assignment — cannot locate the destination pool")
+        dst_pool: PagedKVPool = orch.pool_of_pod(pod)
+        # mint the destination block table (owned by the decode pod's
+        # pool owner so its sandbox bitmap admits the kernel reads),
+        # then one bulk transfer for the whole page set
+        dst_pages = dst_pool.alloc_seq(
+            len(self.pages) * dst_pool.pc.page_tokens, dst_pool.owner_pid)
+        try:
+            self.last_moved_bytes = transfer_pages_cross_pod(
+                self.pool, dst_pool, self.pages, dst_pages,
+                backend=self.backend)
+        except BaseException:
+            dst_pool.free_seq(dst_pages)
+            raise
+        return dst_pages

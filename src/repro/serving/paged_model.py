@@ -93,8 +93,22 @@ def paged_decode_step(cfg: ModelConfig, params: Params, tokens, pos,
 def prefill_kv(model: Model, params: Params, tokens) -> Tuple[Any, Any, Any]:
     """Run prefill through the standard stack; returns (last_logits,
     k (L,B,S,Hkv,D), v). The engine slices [:, b] per request for
-    PagedKVPool.write_prefill."""
-    logits, cache = model.prefill(params, {"tokens": tokens},
-                                  cache_len=tokens.shape[1])
-    kv = cache["pos0"]["self"]
-    return logits, kv["k"], kv["v"]
+    PagedKVPool.write_prefill.
+
+    ``Model.prefill`` is eager — called bare it re-traces (and
+    re-compiles the layer scan) on EVERY admission, which turns a
+    sub-millisecond prompt pass into ~1s of XLA time per request and
+    serialises the continuous-batching ramp-up. One jit wrapper per
+    model instance fixes that; jax's own cache then keys on the prompt
+    shape.
+    """
+    fn = getattr(model, "_prefill_kv_jit", None)
+    if fn is None:
+        def _run(params, tokens):
+            logits, cache = model.prefill(params, {"tokens": tokens},
+                                          cache_len=tokens.shape[1])
+            kv = cache["pos0"]["self"]
+            return logits, kv["k"], kv["v"]
+        fn = jax.jit(_run)
+        model._prefill_kv_jit = fn
+    return fn(params, tokens)
