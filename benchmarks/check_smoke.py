@@ -39,6 +39,13 @@ def check_marshal(doc: dict) -> str:
         assert doc["rows"][key] > 0, key
     assert doc["routing"]["cxl_connects"] >= 1
     assert doc["routing"]["fallback_connects"] >= 1
+    # the rebuild-per-call arm is a cold-path diagnostic (<1x expected):
+    # it must live under the ungated cold_path object and never leak
+    # into the gated keys where it would read as a failed target
+    assert doc["cold_path"]["gated"] is False
+    assert "speedup_vs_build" in doc["cold_path"]
+    assert "speedup_vs_build" not in doc
+    assert "speedup_vs_build" not in doc["measured"]
     return ("pointer vs serialized: "
             f"{doc['speedup_pointer_vs_serialized']}")
 
@@ -122,6 +129,24 @@ def check_serve(doc: dict) -> str:
             f"shed={int(rows['serve_shed_admits'])}")
 
 
+def check_bulk(doc: dict) -> str:
+    rows = doc["rows"]
+    for key in ("bulk_round_single_link", "bulk_round_pooled"):
+        assert rows[key] > 0, key
+    # structural invariants that hold at ANY iteration count / runner:
+    # the pooled arm actually shared flights and used one-sided framing,
+    # and a sealed pipelined window cost exactly ONE seal epoch (§5.3
+    # composed with pipelining — the 2x throughput gate itself is
+    # asserted on dedicated hardware from the committed artifact)
+    assert rows["bulk_shared_flushes"] >= 1, "no shared stripe flush"
+    assert rows["bulk_one_sided_puts"] >= 2, "one-sided framing unused"
+    assert rows["bulk_seal_epochs_per_window"] == 1.0, \
+        f"seal epochs/window: {rows['bulk_seal_epochs_per_window']}"
+    return (f"pooled vs single-link: {doc['speedup_pooled_vs_single']} "
+            f"seal_epochs_per_window="
+            f"{rows['bulk_seal_epochs_per_window']}")
+
+
 CHECKS: Dict[str, Callable[[dict], str]] = {
     "noop": check_noop,
     "marshal": check_marshal,
@@ -130,6 +155,7 @@ CHECKS: Dict[str, Callable[[dict], str]] = {
     "stream": check_stream,
     "soak": check_soak,
     "serve": check_serve,
+    "bulk": check_bulk,
 }
 
 

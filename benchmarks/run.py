@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV. Roofline terms come from the
 dry-run artifacts (see repro.roofline.analysis / EXPERIMENTS.md) — this
 harness measures the host-side RPCool control plane for real.
 
-Seven suites additionally write JSON trajectory artifacts, all carrying
+Eight suites additionally write JSON trajectory artifacts, all carrying
 the shared schema fields ``suite`` / ``gate`` / ``measured`` (validated
 by ``--check-schema`` and tests/test_bench_schema.py):
 
@@ -15,6 +15,7 @@ by ``--check-schema`` and tests/test_bench_schema.py):
   stream   → BENCH_stream.json    streaming vs buffered replies (TTFT)
   soak     → BENCH_soak.json      chaos-injected mixed traffic, p99-gated
   serve    → BENCH_serve.json     continuous-batching decode, 8 clients
+  bulk     → BENCH_bulk.json      pooled one-sided links vs single-link
 
 Usage:
     python -m benchmarks.run                     # all suites
@@ -40,6 +41,7 @@ PIPELINE_JSON_DEFAULT = "BENCH_pipeline.json"
 STREAM_JSON_DEFAULT = "BENCH_stream.json"
 SOAK_JSON_DEFAULT = "BENCH_soak.json"
 SERVE_JSON_DEFAULT = "BENCH_serve.json"
+BULK_JSON_DEFAULT = "BENCH_bulk.json"
 
 # The suite registry — the single source of truth for suite names
 # (--suite validation, --list-suites, CI smoke steps). Keys are the CLI
@@ -52,6 +54,7 @@ SUITES = [
     ("stream", "stream (token-streaming replies vs buffered, TTFT)"),
     ("soak", "soak (chaos-injected mixed traffic, p99 + integrity gates)"),
     ("serve", "serve (continuous-batching multi-tenant decode)"),
+    ("bulk", "bulk (pooled one-sided fallback links vs single-link)"),
     ("cooldb", "cooldb (Fig. 11)"),
     ("ycsb", "ycsb_kv (Figs. 9/10)"),
     ("micro", "microservices (Figs. 12/13)"),
@@ -75,7 +78,17 @@ def _write_marshal_json(rows, path: str, iters: int) -> None:
         "rows": by_name,
         "derived": derived,
         "speedup_pointer_vs_serialized": speedup,
-        "speedup_vs_build": by_name.get("marshal_speedup_vs_build", 0.0),
+        # ungated diagnostics: the rebuild-per-call arm is a COLD-PATH
+        # upper bound (<1x expected — the per-call graph build dominates,
+        # which is exactly what pointer reuse avoids). Kept out of the
+        # top-level/measured keys so it can never read as a failed gate.
+        "cold_path": {
+            "speedup_vs_build": by_name.get(
+                "marshal_speedup_vs_build", 0.0),
+            "gated": False,
+            "note": "serialized vs rebuild-per-call pointer path; "
+                    "diagnostic only, not a steady-state row",
+        },
         "target_speedup": 2.0,
         "meets_target": speedup >= 2.0,
         "gate": {"metric": "speedup_pointer_vs_serialized", "op": ">=",
@@ -92,6 +105,36 @@ def _write_marshal_json(rows, path: str, iters: int) -> None:
         json.dump(doc, f, indent=1, sort_keys=True)
     print(f"# wrote {path}: pointer vs serialized {speedup:.2f}x "
           f"(target 2.0x) routing={doc['routing']}", file=sys.stderr)
+
+
+def _write_bulk_json(rows, path: str, iters: int) -> None:
+    from .bulk import CLIENTS, DEPTH, POOL_SIZE
+    by_name = {name: us for name, us, _ in rows}
+    derived = {name: d for name, us, d in rows}
+    speedup = by_name.get("bulk_speedup_pooled_vs_single", 0.0)
+    epochs = by_name.get("bulk_seal_epochs_per_window", 0.0)
+    doc = {
+        "suite": "bulk (pooled one-sided fallback links vs single-link)",
+        "iters": iters,
+        "unit": "us_per_call",
+        "rows": by_name,
+        "derived": derived,
+        "clients": CLIENTS,
+        "depth": DEPTH,
+        "pool_size": POOL_SIZE,
+        "speedup_pooled_vs_single": speedup,
+        "seal_epochs_per_window": epochs,
+        "target_speedup": 2.0,
+        "meets_target": speedup >= 2.0 and epochs == 1.0,
+        "gate": {"metric": "speedup_pooled_vs_single", "op": ">=",
+                 "target": 2.0},
+        "measured": {"speedup_pooled_vs_single": speedup},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}: pooled vs single-link {speedup:.2f}x "
+          f"(target 2.0x) seal_epochs_per_window={epochs:.2f}",
+          file=sys.stderr)
 
 
 def _write_pipeline_json(rows, path: str, iters: int) -> None:
@@ -343,8 +386,9 @@ def main(argv=None) -> None:
         check_schema()
         return
 
-    from . import cluster, cooldb, kv_handoff, marshal, microservices, \
-        noop_rtt, op_latency, pipeline, serve, soak, stream, ycsb_kv
+    from . import bulk, cluster, cooldb, kv_handoff, marshal, \
+        microservices, noop_rtt, op_latency, pipeline, serve, soak, \
+        stream, ycsb_kv
 
     def noop_bench():
         return noop_rtt.bench(n=args.iters, thr_iters=args.thr_iters)
@@ -380,6 +424,11 @@ def main(argv=None) -> None:
         # (zero lost/mismatched tokens, TTFT) are iteration-independent
         return serve.bench(max_new=max(8, min(args.iters, 24)))
 
+    def bulk_bench():
+        # windows per arm: each costs ~40 wire ops on the single-link
+        # arm by design; 8 interleaved windows give a stable median
+        return bulk.bench(windows=max(4, min(args.iters, 8)))
+
     benches = {
         "noop": noop_bench,
         "op": op_latency.bench,
@@ -388,6 +437,7 @@ def main(argv=None) -> None:
         "stream": stream_bench,
         "soak": soak_bench,
         "serve": serve_bench,
+        "bulk": bulk_bench,
         "cooldb": cooldb.bench,
         "ycsb": ycsb_kv.bench,
         "micro": microservices.bench,
@@ -448,6 +498,11 @@ def main(argv=None) -> None:
                                  and args.json != NOOP_JSON_DEFAULT) \
                 else SERVE_JSON_DEFAULT
             _write_serve_json(rows, path, max(8, min(args.iters, 24)))
+        elif key == "bulk":
+            path = args.json if (args.suite == "bulk"
+                                 and args.json != NOOP_JSON_DEFAULT) \
+                else BULK_JSON_DEFAULT
+            _write_bulk_json(rows, path, max(4, min(args.iters, 8)))
     if failures:
         sys.exit(1)
 

@@ -626,6 +626,15 @@ class Connection:
             self._pending_async.pop(slot, None)
         return self._complete(slot, sealed, seal_idx, batch_release)
 
+    def end_seal_window(self) -> int:
+        """Close a ``batch_release`` pipeline window: flush every queued
+        seal release in ONE permission epoch (§5.3 composed with
+        pipelining). Returns the number of releases applied."""
+        n = self.seals.pending_releases()
+        if n:
+            self.seals.flush()
+        return n
+
     # -- abandoned-token reaping (timeout / cancel hygiene) ----------------
     def _abandon(self, token: Tuple[int, int], pending: "_Pending") -> None:
         """Give up on an async token (future cancelled or its waiter timed

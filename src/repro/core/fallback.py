@@ -44,10 +44,15 @@ from .errors import ChannelError, DeadlineExceeded, Overloaded, \
 from .heap import SharedHeap
 from .sandbox import SandboxManager
 from .scope import Scope, create_scope, implicit_scope
-from .seal import SealManager
+from .seal import S_COMPLETE, SealManager
 
 OWNER_CLIENT = 0
 OWNER_SERVER = 1
+
+# the 8-byte completion word a one-sided put/get publishes after its bulk
+# payload lands (cMPI framing: the receiver polls this word instead of
+# exchanging per-message acks — its wire cost rides the same flight)
+COMPLETION_WORD_BYTES = 8
 
 
 class _FlightEntry:
@@ -78,11 +83,21 @@ class DSMLink:
         # allocator state must be common (one logical heap): client's heap
         # object is the source of truth for allocation; mirror page states.
         self.owner = np.full(num_pages, OWNER_CLIENT, dtype=np.uint8)
+        # per-destination completion words (cMPI one-sided framing): a
+        # ``put``/``get`` publishes completion[to] after its payload; the
+        # receiver polls the word instead of waiting on a message ack
+        self.completion = np.zeros(2, dtype=np.uint64)
         # stats
         self.bytes_moved = 0
         self.page_faults = 0
         self.ownership_misses = 0
         self.msgs = 0
+        self.n_puts = 0
+        self.n_gets = 0
+        # round trips a run-at-a-time DSM would have paid that the bulk
+        # consecutive-run batching collapsed into one (satellite of the
+        # ownership_misses accounting — see ``migrate``)
+        self.migrate_rtts_saved = 0
 
     def _wire(self, nbytes: int) -> None:
         self.bytes_moved += nbytes
@@ -109,24 +124,86 @@ class DSMLink:
         if pages:
             self.owner[np.asarray(pages)] = to
 
+    @staticmethod
+    def _runs(pages: List[int]) -> List[Tuple[int, int]]:
+        """Group a sorted page list into consecutive ``[lo, hi)`` runs."""
+        runs: List[List[int]] = []
+        for p in pages:
+            if runs and p == runs[-1][1]:
+                runs[-1][1] = p + 1
+            else:
+                runs.append([p, p + 1])
+        return [(lo, hi) for lo, hi in runs]
+
+    def _copy_pages(self, need: List[int], to: int) -> None:
+        """Copy ``need`` (sorted, all unowned by ``to``) between replicas
+        and flip ownership — one slice memcpy per consecutive run, not
+        one per page. A run-at-a-time DSM would also pay one fetch round
+        trip per run; the callers here move the whole list in ONE wire
+        op, so the collapsed round trips are counted as saved."""
+        src = self.replica[1 - to].buf
+        dst = self.replica[to].buf
+        ps = self.page_size
+        runs = self._runs(need)
+        for lo, hi in runs:
+            dst[lo * ps : hi * ps] = src[lo * ps : hi * ps]
+        self.owner[np.asarray(need)] = to
+        self.migrate_rtts_saved += len(runs) - 1
+
     def migrate(self, pages: List[int], to: int) -> int:
         """Fetch ``pages`` to node ``to`` (§5.6 page-fault service path).
 
         Returns the number of pages actually moved.
         """
-        need = [p for p in pages if self.owner[p] != to]
+        need = sorted(p for p in pages if self.owner[p] != to)
         if not need:
             return 0
-        src = self.replica[1 - to].buf
-        dst = self.replica[to].buf
-        ps = self.page_size
-        for p in need:
-            lo = p * ps
-            dst[lo : lo + ps] = src[lo : lo + ps]
-        self.owner[np.asarray(need)] = to
+        self._copy_pages(need, to)
         self.page_faults += 1          # one fault services the whole range
-        self._wire(len(need) * ps)     # bulk fetch on the wire
+        self._wire(len(need) * self.page_size)  # bulk fetch on the wire
         return len(need)
+
+    # -- cMPI-style one-sided primitives --------------------------------
+    def _one_sided(self, pages: List[int], to: int, payload_bytes: int,
+                   msgs: int) -> int:
+        need = sorted(p for p in pages if self.owner[p] != to)
+        if need:
+            self._copy_pages(need, to)
+            self.page_faults += 1
+        self.msgs += msgs
+        self._wire(len(need) * self.page_size + payload_bytes
+                   + COMPLETION_WORD_BYTES)
+        self.completion[to] += 1       # publish AFTER the payload lands
+        return len(need)
+
+    def put(self, pages: List[int], to: int, payload_bytes: int = 0,
+            msgs: int = 1) -> int:
+        """One-sided bulk write toward node ``to``: every not-yet-owned
+        page of ``pages`` plus ``payload_bytes`` of framing (descriptor
+        or completion records) crosses as ONE asynchronous wire flight,
+        then the direction's completion word is published. No per-message
+        ack ping-pong — the receiver polls ``completion[to]``; the word's
+        8 bytes ride the same flight. Returns the pages moved."""
+        self.n_puts += 1
+        return self._one_sided(pages, to, payload_bytes, msgs)
+
+    def get(self, pages: List[int], frm: int, payload_bytes: int = 0,
+            msgs: int = 1) -> int:
+        """One-sided bulk read from node ``frm`` — the mirror of ``put``
+        (the initiator pulls the pages toward itself instead of pushing
+        them away; same single flight, same completion word)."""
+        self.n_gets += 1
+        return self._one_sided(pages, 1 - frm, payload_bytes, msgs)
+
+    def put_bytes(self, nbytes: int, to: int) -> None:
+        """One-sided payload-only put (no page-table involvement): the
+        byref KV-page path moves pool pages through the scope_copy
+        gather→wire→scatter kernels, and the link charges that bulk as a
+        single one-sided flight with a completion word."""
+        self.msgs += 1
+        self.n_puts += 1
+        self._wire(nbytes + COMPLETION_WORD_BYTES)
+        self.completion[to] += 1
 
     def sync_meta(self, to: int) -> None:
         """Propagate allocator/perm metadata (tiny control message)."""
@@ -197,9 +274,27 @@ class FallbackConnection:
                  link_latency_us: float = 3.0, client_pid: int = 1,
                  server_pid: int = 2, ring_capacity: int = 64,
                  functions: Optional[Dict[int, Callable]] = None,
-                 heap_id: int = 1):
-        self.link = DSMLink(num_pages, page_size, link_latency_us,
-                            heap_id=heap_id)
+                 heap_id: int = 1, link: Optional[DSMLink] = None,
+                 one_sided: bool = True,
+                 window_seal_batching: bool = True):
+        # ``link`` shares an existing DSMLink (heap replicas + ownership
+        # table) with other connections — the LinkPool multiplexing that
+        # lifts the paper's one-client-per-link limitation. Without it
+        # the connection owns a private link, exactly as before.
+        if link is None:
+            link = DSMLink(num_pages, page_size, link_latency_us,
+                           heap_id=heap_id)
+        self.link = link
+        # ``one_sided`` frames staged flights as cMPI put/get bulk
+        # transfers (one flight per direction); False keeps the legacy
+        # send_batch + migrate ping-pong (the benchmark baseline).
+        self.one_sided = one_sided
+        # ``window_seal_batching`` releases a sealed pipeline window's
+        # seals in ONE permission epoch at flush time (§5.3 composed
+        # with pipelined flights) instead of one epoch per future.
+        self.window_seal_batching = window_seal_batching
+        self._pool = None              # set by LinkPool.connect
+        self._stripe = 0
         self.client = DSMNode(self.link, OWNER_CLIENT)
         self.server = DSMNode(self.link, OWNER_SERVER)
         self.client_pid = client_pid
@@ -251,6 +346,11 @@ class FallbackConnection:
         self.n_stream_flights = 0
         self.n_admission_waits = 0
         self.n_overloads = 0
+        # windowed seal-epoch batching bookkeeping: seal idxs the flush
+        # already released (their futures must not release again) and
+        # the number of one-epoch window flushes performed
+        self._window_released: set = set()
+        self.n_window_seal_flushes = 0
         self.closed = False
 
     # -- client-side API (identical shape to Connection) -----------------
@@ -407,28 +507,68 @@ class FallbackConnection:
         return any(e.slot == slot for e in self._flight)
 
     def flush(self) -> int:
-        """Fly the staged batch: ONE descriptor flight out, ONE bulk
-        migration of every argument scope, serve each slot, ONE bulk
-        migration of every reply blob back, ONE completion flight. The
-        link latency is paid per *flight*, not per RPC — that is the
-        entire pipelining win on this transport. Returns the number of
-        RPCs served."""
-        entries, self._flight = self._flight, []
+        """Fly the staged batch. One-sided framing (default): the whole
+        flight — descriptor records AND every argument page — crosses as
+        ONE cMPI-style ``put`` toward the server, and the completions AND
+        every reply page come back as ONE ``put`` toward the client; each
+        direction pays the link latency exactly once, completion words
+        instead of per-message acks. Legacy framing (``one_sided=False``)
+        keeps the descriptor flight and the page migration as separate
+        wire ops per direction. A pooled connection delegates to its
+        stripe so every member's staged flight shares the same two
+        transfers. Returns the number of RPCs served."""
+        if self._pool is not None:
+            return self._pool.flush_stripe(self._stripe)
+        entries = self._take_flight()
         if not entries:
             return 0
-        self.n_flushes += 1
+        n = len(entries)
         link = self.link
-        link.send_batch(len(entries), len(entries) * RING_SLOT_BYTES)
-        link.sync_meta(to=OWNER_SERVER)
-        # requests pipeline: every staged argument scope crosses in one
-        # bulk fetch instead of one page-fault round trip per RPC
-        arg_pages = [p for e in entries
-                     for p in range(e.scope.start_page,
-                                    e.scope.start_page + e.scope.num_pages)
-                     if link.owner[p] != OWNER_SERVER]
-        if arg_pages:
-            link.migrate(arg_pages, to=OWNER_SERVER)
+        arg_pages = self._flight_arg_pages(entries)
+        if self.one_sided:
+            link.sync_meta(to=OWNER_SERVER)
+            link.put(arg_pages, to=OWNER_SERVER,
+                     payload_bytes=n * RING_SLOT_BYTES, msgs=n)
+        else:
+            link.send_batch(n, n * RING_SLOT_BYTES)
+            link.sync_meta(to=OWNER_SERVER)
+            if arg_pages:
+                link.migrate(arg_pages, to=OWNER_SERVER)
+        reply_pages = self._serve_flight(entries)
+        if self.one_sided:
+            link.put(reply_pages, to=OWNER_CLIENT,
+                     payload_bytes=n * RING_SLOT_BYTES, msgs=n)
+        else:
+            link.send_batch(n, n * RING_SLOT_BYTES)
+            if reply_pages:
+                link.migrate(reply_pages, to=OWNER_CLIENT)
+        self._end_flight(entries)
+        return n
+
+    # -- flight halves (shared with LinkPool.flush_stripe) -----------------
+    def _take_flight(self) -> List["_FlightEntry"]:
+        """Detach the staged flight (counted as one flush once flown)."""
+        entries, self._flight = self._flight, []
+        if entries:
+            self.n_flushes += 1
+        return entries
+
+    def _flight_arg_pages(self, entries: List["_FlightEntry"]) -> List[int]:
+        """Every staged argument page the server does not own yet — the
+        request half of the bulk transfer (one fetch for the whole
+        flight, not one page-fault round trip per RPC)."""
+        link = self.link
+        return [p for e in entries
+                for p in range(e.scope.start_page,
+                               e.scope.start_page + e.scope.num_pages)
+                if link.owner[p] != OWNER_SERVER]
+
+    def _serve_flight(self, entries: List["_FlightEntry"]) -> List[int]:
+        """Serve every slot of a detached flight; per-entry failures
+        complete the slot R_ERR (isolated — the rest of the flight
+        proceeds). Returns the reply pages that must travel back."""
         ring = self.ring
+        link = self.link
         reply_pages: List[int] = []
         for e in entries:
             try:
@@ -451,14 +591,32 @@ class FallbackConnection:
             if scope is not None:
                 reply_pages.extend(range(scope.start_page,
                                          scope.start_page + scope.num_pages))
-        link.send_batch(len(entries), len(entries) * RING_SLOT_BYTES)
-        # replies pipeline back the same way
-        reply_pages = [p for p in reply_pages
-                       if link.owner[p] != OWNER_CLIENT]
-        if reply_pages:
-            link.migrate(reply_pages, to=OWNER_CLIENT)
+        return [p for p in reply_pages
+                if link.owner[p] != OWNER_CLIENT]
+
+    def _end_flight(self, entries: List["_FlightEntry"]) -> None:
+        """Post-flight hygiene: release the window's completed seals in
+        ONE permission epoch (§5.3 batch_release composed with pipelined
+        flights — the per-future release is skipped via
+        ``_consume_window_release``), then reap abandoned slots."""
+        if self.window_seal_batching:
+            abandoned = {a.slot for a in self._fb_abandoned}
+            idxs = [e.seal_idx for e in entries
+                    if e.sealed and e.slot not in abandoned
+                    and self.seals.state_of(e.seal_idx) == S_COMPLETE]
+            if idxs:
+                self.seals.release_window(idxs, holder=self.client_pid)
+                self._window_released.update(idxs)
+                self.n_window_seal_flushes += 1
         self._reap_abandoned_flight()
-        return len(entries)
+
+    def _consume_window_release(self, seal_idx: int) -> bool:
+        """True if the flight's window flush already released this seal
+        (the settling future must not pay a second release)."""
+        if seal_idx in self._window_released:
+            self._window_released.discard(seal_idx)
+            return True
+        return False
 
     def abandon_flight_entry(self, slot: int, scope: Scope, sealed: bool,
                              seal_idx: int) -> None:
@@ -476,10 +634,12 @@ class FallbackConnection:
             ret, state, _status = self.ring.consume(e.slot)
             self._flight_errors.pop(e.slot, None)
             if e.sealed:
-                try:
-                    self.seals.release(e.seal_idx, holder=self.client_pid)
-                except SealViolation:
-                    pass
+                if not self._consume_window_release(e.seal_idx):
+                    try:
+                        self.seals.release(e.seal_idx,
+                                           holder=self.client_pid)
+                    except SealViolation:
+                        pass
             if state == R_DONE:
                 from .marshal import _recycle_reply
                 _recycle_reply(self, ret)
@@ -592,6 +752,8 @@ class FallbackConnection:
     def close(self) -> None:
         if not self.closed:
             self.closed = True
+            if self._pool is not None:
+                self._pool.detach(self)
             # fail the staged flight: every unsettled future sees a
             # ChannelError (its result() checks closed first) and each
             # staged argument scope is drained exactly once
@@ -681,8 +843,134 @@ class FallbackConnection:
             "bytes_moved": self.link.bytes_moved,
             "page_faults": self.link.page_faults,
             "ownership_misses": self.link.ownership_misses,
+            # round trips the consecutive-run batching collapsed (one
+            # bulk transfer where a run-at-a-time DSM pays one per run)
+            "migrate_rtts_saved": self.link.migrate_rtts_saved,
             "msgs": self.link.msgs,
+            "one_sided_puts": self.link.n_puts,
+            "one_sided_gets": self.link.n_gets,
+            "window_seal_flushes": self.n_window_seal_flushes,
             "calls": self.n_calls,
+        }
+
+
+class LinkPool:
+    """A pod pair's shared fallback plane: ``pool_size`` DSMLinks
+    multiplexing N ``FallbackConnection`` clients — the lift of the
+    paper's one-client-per-link §5.6 limitation.
+
+    Connections are *striped* over the links at connect time
+    (``stripe="rr"`` round-robin | ``"pid"`` hash by client pid); every
+    connection on a stripe shares that link's heap replicas and
+    ownership table. The latency win is shared flights: ``flush()`` on
+    ANY member flies EVERY member's staged descriptors over the stripe
+    as one combined one-sided transfer per direction, so M pipelining
+    clients to the same remote pod pay the link latency once per stripe
+    window instead of once per client per direction pair.
+    """
+
+    def __init__(self, num_pages: int = 4096, page_size: int = 4096,
+                 link_latency_us: float = 3.0, pool_size: int = 2,
+                 stripe: str = "rr",
+                 heap_ids: Optional[List[int]] = None):
+        if pool_size < 1:
+            raise ChannelError(f"LinkPool needs >= 1 link, got {pool_size}")
+        if stripe not in ("rr", "pid"):
+            raise ChannelError(f"unknown stripe policy {stripe!r}")
+        self.pool_size = pool_size
+        self.stripe_policy = stripe
+        self.links = [
+            DSMLink(num_pages, page_size, link_latency_us,
+                    heap_id=(heap_ids[i] if heap_ids else 1 + i))
+            for i in range(pool_size)
+        ]
+        self.members: List[List[FallbackConnection]] = \
+            [[] for _ in range(pool_size)]
+        self._rr = 0
+        self.n_connects = 0
+        self.n_shared_flushes = 0
+
+    def _pick_stripe(self, client_pid: int) -> int:
+        if self.stripe_policy == "pid":
+            return client_pid % self.pool_size
+        idx = self._rr % self.pool_size
+        self._rr += 1
+        return idx
+
+    def connect(self, client_pid: int = 1, server_pid: int = 2,
+                ring_capacity: int = 64,
+                functions: Optional[Dict[int, Callable]] = None,
+                one_sided: bool = True,
+                window_seal_batching: bool = True) -> FallbackConnection:
+        """Mint a pooled connection on the next stripe. It shares the
+        stripe link's pages with its co-members; its ring, seals, and
+        handler table stay per-connection (SPSC per client, the paper's
+        model)."""
+        idx = self._pick_stripe(client_pid)
+        conn = FallbackConnection(
+            client_pid=client_pid, server_pid=server_pid,
+            ring_capacity=ring_capacity, functions=functions,
+            link=self.links[idx], one_sided=one_sided,
+            window_seal_batching=window_seal_batching)
+        conn._pool = self
+        conn._stripe = idx
+        self.members[idx].append(conn)
+        self.n_connects += 1
+        return conn
+
+    def detach(self, conn: FallbackConnection) -> None:
+        members = self.members[conn._stripe]
+        if conn in members:
+            members.remove(conn)
+        conn._pool = None
+
+    def flush_stripe(self, idx: int) -> int:
+        """Fly every member's staged flight over stripe ``idx`` as ONE
+        combined one-sided transfer per direction: descriptors + every
+        argument page out, completions + every reply page back. Returns
+        the total RPCs served across members."""
+        link = self.links[idx]
+        batches: List[Tuple[FallbackConnection, List[_FlightEntry]]] = []
+        for conn in list(self.members[idx]):
+            if conn.closed:
+                continue
+            entries = conn._take_flight()
+            if entries:
+                batches.append((conn, entries))
+        if not batches:
+            return 0
+        n = sum(len(entries) for _, entries in batches)
+        link.sync_meta(to=OWNER_SERVER)
+        arg_pages = [p for conn, entries in batches
+                     for p in conn._flight_arg_pages(entries)]
+        link.put(arg_pages, to=OWNER_SERVER,
+                 payload_bytes=n * RING_SLOT_BYTES, msgs=n)
+        reply_pages: List[int] = []
+        for conn, entries in batches:
+            reply_pages.extend(conn._serve_flight(entries))
+        link.put(reply_pages, to=OWNER_CLIENT,
+                 payload_bytes=n * RING_SLOT_BYTES, msgs=n)
+        for conn, entries in batches:
+            conn._end_flight(entries)
+        self.n_shared_flushes += 1
+        return n
+
+    def flush_all(self) -> int:
+        """Fly every stripe's staged flights (one transfer pair each)."""
+        return sum(self.flush_stripe(i) for i in range(self.pool_size))
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "pool_size": self.pool_size,
+            "connects": self.n_connects,
+            "shared_flushes": self.n_shared_flushes,
+            "bytes_moved": sum(l.bytes_moved for l in self.links),
+            "page_faults": sum(l.page_faults for l in self.links),
+            "msgs": sum(l.msgs for l in self.links),
+            "one_sided_puts": sum(l.n_puts for l in self.links),
+            "one_sided_gets": sum(l.n_gets for l in self.links),
+            "migrate_rtts_saved": sum(l.migrate_rtts_saved
+                                      for l in self.links),
         }
 
 

@@ -515,11 +515,12 @@ class RpcFuture:
 
     __slots__ = ("conn", "fn_id", "token", "_scope", "_pooled", "_sealed",
                  "_timeout", "_deadline_us", "_state", "_value", "_exc",
-                 "_scope_released")
+                 "_scope_released", "_batch_release")
 
     def __init__(self, conn, fn_id: int, token: Tuple[int, int],
                  scope: Optional[Scope], pooled: bool, sealed: bool,
-                 timeout: float, deadline_us: int):
+                 timeout: float, deadline_us: int,
+                 batch_release: bool = False):
         self.conn = conn
         self.fn_id = fn_id
         self.token = token
@@ -532,6 +533,10 @@ class RpcFuture:
         self._value = None
         self._exc: Optional[BaseException] = None
         self._scope_released = scope is None
+        # §5.3 composed with pipelining: queue this future's seal release
+        # for the window flush (``gather``/``end_seal_window``) instead
+        # of paying a permission epoch at settlement
+        self._batch_release = batch_release
 
     # -- scope hygiene (the one-shot close()/reap cleanup hook) ----------
     def _release_scope_once(self) -> None:
@@ -591,7 +596,8 @@ class RpcFuture:
             tmo = min(tmo, max(0.0,
                                self._deadline_us * 1e-6 - time.monotonic()))
         try:
-            ret = conn.wait(self.token, sealed=self._sealed, timeout=tmo)
+            ret = conn.wait(self.token, sealed=self._sealed,
+                            batch_release=self._batch_release, timeout=tmo)
         except (DeadlineExceeded, Overloaded, RpcError) as e:
             # terminal typed failures: the reply landed (or the server
             # shed the request with E_OVERLOAD) — never a wait timeout
@@ -623,12 +629,15 @@ class RpcFuture:
 
 def invoke_async_cxl(conn: Connection, fn_id: int, args: Tuple,
                      sealed: bool = False, sandboxed: bool = False,
+                     batch_release: bool = False,
                      deadline: Optional[float] = None,
                      timeout: float = 10.0) -> RpcFuture:
     """Pipelined typed invoke on the shared-memory ring: marshal (or
     pointer-pass a prebuilt graph), post, return — the reply is decoded
     whenever the future is settled. Up to ring-capacity invokes may be
-    in flight per connection."""
+    in flight per connection. ``batch_release`` queues each sealed
+    future's release for the window flush (one permission epoch per
+    ``gather``, §5.3) instead of one epoch per settlement."""
     deadline_us = _deadline_word(deadline)
 
     if len(args) == 1 and isinstance(args[0], GraphRef):
@@ -640,7 +649,8 @@ def invoke_async_cxl(conn: Connection, fn_id: int, args: Tuple,
                                     flags_extra=F_TYPED,
                                     deadline_us=deadline_us)
             fut = RpcFuture(conn, fn_id, token, None, False, sealed,
-                            timeout, deadline_us)
+                            timeout, deadline_us,
+                            batch_release=batch_release)
             conn._track_async(token, sealed=sealed, typed=True)
             return fut
         args = tuple(g.to_python())
@@ -660,7 +670,7 @@ def invoke_async_cxl(conn: Connection, fn_id: int, args: Tuple,
     conn.n_invokes += 1
     conn.marshal_bytes += scope.used_bytes()
     fut = RpcFuture(conn, fn_id, token, scope, pooled, sealed,
-                    timeout, deadline_us)
+                    timeout, deadline_us, batch_release=batch_release)
     # close()/reap cleanup hook: drain this future's scope exactly once
     conn._track_async(token, sealed=sealed, typed=True,
                       cleanup=fut._release_scope_once)
@@ -675,8 +685,29 @@ def gather(futures, timeout: float = 10.0) -> list:
     drained."""
     results = [None] * len(futures)
     pending = dict(enumerate(futures))
-    failed: Optional[BaseException] = None
     deadline = time.monotonic() + timeout
+    # Window epoch batching (§5.3 composed with pipelining): futures
+    # created with ``batch_release=True`` queue their seal releases
+    # instead of bumping one permission epoch each; the whole window is
+    # flushed in ONE epoch once the gather drains (see finally below).
+    window_conns = []
+    for f in futures:
+        conn = getattr(f, "conn", None)
+        if (getattr(f, "_batch_release", False) and conn is not None
+                and conn not in window_conns):
+            window_conns.append(conn)
+    try:
+        _gather_drain(results, pending, deadline, timeout)
+    finally:
+        for conn in window_conns:
+            end = getattr(conn, "end_seal_window", None)
+            if end is not None:
+                end()
+    return results
+
+
+def _gather_drain(results, pending, deadline, timeout) -> None:
+    failed: Optional[BaseException] = None
     while pending:
         progressed = False
         for i, f in list(pending.items()):
@@ -717,7 +748,6 @@ def gather(futures, timeout: float = 10.0) -> list:
                 del pending[i]
     if failed is not None:
         raise failed
-    return results
 
 
 # ---------------------------------------------------------------------------
@@ -1785,7 +1815,9 @@ class FallbackRpcFuture:
         if conn.in_flight(self.slot):
             conn.flush()
         ret, state, status = conn.ring.consume(self.slot)
-        if self._sealed:
+        if self._sealed and not conn._consume_window_release(self._seal_idx):
+            # the window flush did not cover this seal (error path, or
+            # window batching disabled): fall back to a per-future release
             conn.seals.release(self._seal_idx, holder=conn.client_pid)
         try:
             exc = conn._flight_errors.pop(self.slot, None)

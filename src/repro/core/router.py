@@ -43,7 +43,7 @@ from typing import Dict, List, Optional, Set, Tuple
 from . import addr as gaddr
 from .channel import Channel, Connection
 from .errors import ChannelError, DeadlineExceeded, Overloaded
-from .fallback import FallbackConnection
+from .fallback import FallbackConnection, LinkPool
 from .orchestrator import Orchestrator
 from .scope import Scope
 
@@ -73,11 +73,24 @@ class ClusterRouter:
     def __init__(self, orch: Orchestrator,
                  fallback_pages: int = 4096,
                  fallback_link_latency_us: float = 3.0,
-                 fallback_ring_capacity: int = 64):
+                 fallback_ring_capacity: int = 64,
+                 fallback_pool_size: int = 2,
+                 fallback_stripe: str = "rr",
+                 fallback_one_sided: bool = True):
         self.orch = orch
         self.fallback_pages = fallback_pages
         self.fallback_link_latency_us = fallback_link_latency_us
         self.fallback_ring_capacity = fallback_ring_capacity
+        # cross-pod transport shape: ``fallback_pool_size >= 1`` shares a
+        # per-pod-pair LinkPool across every client the router routes to
+        # that pod (striped by ``fallback_stripe``); 0 restores the
+        # legacy one-private-link-per-connect plane. ``fallback_one_sided``
+        # selects cMPI put/get bulk framing vs legacy send/ack flights.
+        self.fallback_pool_size = fallback_pool_size
+        self.fallback_stripe = fallback_stripe
+        self.fallback_one_sided = fallback_one_sided
+        # (client pod, server pod, page_size) -> shared LinkPool
+        self._link_pools: Dict[Tuple, LinkPool] = {}
         self.endpoints: Dict[str, Endpoint] = {}
         self._conns: List["RoutedConnection"] = []
         # serving pids whose lease lapsed (Fig. 5a): the replica
@@ -94,6 +107,30 @@ class ClusterRouter:
         self.n_fallback_connects = 0
         self.n_failovers = 0
         orch.on_failure(self._on_lease_lapse)
+
+    # -- cross-pod link pooling (one shared plane per pod pair) --------------
+    def _fallback_pool(self, client_pid: int, server_pid: int,
+                       page_size: int) -> LinkPool:
+        """The pod pair's shared LinkPool: every client the router routes
+        from ``client_pid``'s pod to ``server_pid``'s pod rides the same
+        striped DSMLink set instead of minting a private link."""
+        orch = self.orch
+        key = (orch.pod_of(client_pid) or f"pid:{client_pid}",
+               orch.pod_of(server_pid) or f"pid:{server_pid}",
+               page_size)
+        with self._lock:
+            pool = self._link_pools.get(key)
+            if pool is None:
+                pool = LinkPool(
+                    num_pages=self.fallback_pages,
+                    page_size=page_size,
+                    link_latency_us=self.fallback_link_latency_us,
+                    pool_size=self.fallback_pool_size,
+                    stripe=self.fallback_stripe,
+                    heap_ids=[orch.alloc_heap_id()
+                              for _ in range(self.fallback_pool_size)])
+                self._link_pools[key] = pool
+            return pool
 
     # -- registration --------------------------------------------------------
     def register(self, name: str, channel: Channel,
@@ -334,15 +371,27 @@ class RoutedConnection:
             self.transport = "cxl"
             router.n_cxl_connects += 1
         else:
-            self.target = FallbackConnection(
-                num_pages=router.fallback_pages,
-                page_size=ch.page_size,
-                link_latency_us=router.fallback_link_latency_us,
-                client_pid=self.client_pid,
-                server_pid=ch.server_pid,
-                ring_capacity=router.fallback_ring_capacity,
-                functions=ch.functions,     # the SAME live handler table
-                heap_id=orch.alloc_heap_id())
+            if router.fallback_pool_size >= 1:
+                pool = router._fallback_pool(self.client_pid,
+                                             ch.server_pid, ch.page_size)
+                self.target = pool.connect(
+                    client_pid=self.client_pid,
+                    server_pid=ch.server_pid,
+                    ring_capacity=router.fallback_ring_capacity,
+                    functions=ch.functions,  # the SAME live handler table
+                    one_sided=router.fallback_one_sided)
+            else:
+                # legacy plane: one private link per connect
+                self.target = FallbackConnection(
+                    num_pages=router.fallback_pages,
+                    page_size=ch.page_size,
+                    link_latency_us=router.fallback_link_latency_us,
+                    client_pid=self.client_pid,
+                    server_pid=ch.server_pid,
+                    ring_capacity=router.fallback_ring_capacity,
+                    functions=ch.functions,  # the SAME live handler table
+                    heap_id=orch.alloc_heap_id(),
+                    one_sided=router.fallback_one_sided)
             # the admission gate guards the SERVICE, not the transport:
             # cross-pod requests shed exactly like same-pod ones
             self.target.admission = ch.admission

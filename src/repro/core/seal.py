@@ -197,6 +197,24 @@ class SealManager:
             return True
         return False
 
+    def release_window(self, idxs, holder: int) -> int:
+        """Release a whole pipeline window in ONE permission epoch (§5.3
+        composed with pipelined flights): every seal of the window is
+        queued, then a single ``flush`` applies the batch. The per-release
+        descriptor checks (completion verified, holder matches, no double
+        release) still run individually — only the permission flip / epoch
+        bump is amortized. Returns the number of epochs actually spent
+        (1 for the window, plus any threshold flushes the queueing itself
+        triggered on a huge window)."""
+        epochs = 0
+        for idx in idxs:
+            if self.release_batched(idx, holder):
+                epochs += 1
+        if self._pending_live:
+            self.flush()
+            epochs += 1
+        return epochs
+
     def flush(self) -> None:
         """Release every pending seal with a single permission epoch."""
         if not self._pending:

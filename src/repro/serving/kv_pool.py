@@ -200,7 +200,7 @@ class PagedKVPool:
 def transfer_pages_cross_pod(src_pool: "PagedKVPool",
                              dst_pool: "PagedKVPool",
                              src_pages: List[int], dst_pages: List[int],
-                             backend: str = "ref") -> int:
+                             backend: str = "ref", link=None) -> int:
     """The RDMA/DCN fallback data plane (§4.7): when prefill and decode
     live in different pods (no shared ICI domain), the block-table RPC
     degrades to gather(src pages) → wire → scatter(dst pages). Returns
@@ -233,6 +233,12 @@ def transfer_pages_cross_pod(src_pool: "PagedKVPool",
                 dst.reshape(getattr(dst_pool, name).shape))
     src_pool.byref_bytes_out += moved
     dst_pool.byref_bytes_in += moved
+    if link is not None:
+        # ride the fallback plane's one-sided primitive: the whole
+        # gather→wire→scatter lands as ONE asynchronous bulk put with a
+        # completion word, charged to the same link accounting the RPC
+        # flights use (cMPI framing, not per-message ping-pong)
+        link.put_bytes(moved, to=1)
     return moved
 
 
@@ -295,10 +301,12 @@ class PoolPages:
         # then one bulk transfer for the whole page set
         dst_pages = dst_pool.alloc_seq(
             len(self.pages) * dst_pool.pc.page_tokens, dst_pool.owner_pid)
+        target = getattr(conn, "target", None) or conn
         try:
             self.last_moved_bytes = transfer_pages_cross_pod(
                 self.pool, dst_pool, self.pages, dst_pages,
-                backend=self.backend)
+                backend=self.backend,
+                link=getattr(target, "link", None))
         except BaseException:
             dst_pool.free_seq(dst_pages)
             raise

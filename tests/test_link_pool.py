@@ -1,0 +1,349 @@
+"""LinkPool / one-sided transport properties (core/fallback.py).
+
+The concurrency surface the pool lifts: N ``FallbackConnection`` clients
+striped over a shared ``DSMLink`` set, flushing interleaved pipelined
+flights — the seeded-interleaving driver (test_ring_properties.py style)
+checks after every step that
+
+* **no reply is lost or cross-delivered**: every future settles with the
+  value its OWN call must produce, under randomly interleaved posting,
+  stripe flushes (flushing through ANY member flies EVERY member's
+  staged flight) and settlement order;
+* **page ownership never corrupts**: the shared ownership bitmap always
+  matches what each node can actually read back (a client reads its own
+  reply after the flight; a stale or cross-flipped page would fault or
+  deliver another client's bytes);
+* **the §5.3 window composition holds**: a sealed pipelined window
+  releases ALL its seals in exactly ONE permission epoch at flush
+  (``seals.n_batch_flushes`` / ``heap.perm_epoch`` deltas), and a
+  settling future never double-releases a window-released seal.
+"""
+
+import random
+
+import pytest
+
+from repro.core.errors import ChannelError, Overloaded
+from repro.core.fallback import (
+    COMPLETION_WORD_BYTES,
+    DSMLink,
+    FallbackConnection,
+    LinkPool,
+    OWNER_CLIENT,
+    OWNER_SERVER,
+)
+from repro.core.marshal import typed_handler
+
+FN_ADD = 1
+FN_ECHO = 2
+
+
+def _functions():
+    return {
+        FN_ADD: typed_handler(lambda ctx, a: a[0] + a[1]),
+        FN_ECHO: typed_handler(lambda ctx, a: list(a)),
+    }
+
+
+def _pool(pool_size=2, stripe="rr", latency=0.0):
+    return LinkPool(num_pages=1 << 12, link_latency_us=latency,
+                    pool_size=pool_size, stripe=stripe)
+
+
+# ---------------------------------------------------------------------------
+# construction / striping
+# ---------------------------------------------------------------------------
+class TestStriping:
+    def test_pool_size_must_be_positive(self):
+        with pytest.raises(ChannelError, match=">= 1 link"):
+            _pool(pool_size=0)
+
+    def test_unknown_stripe_policy_rejected(self):
+        with pytest.raises(ChannelError, match="stripe policy"):
+            _pool(stripe="hash-of-the-moon")
+
+    def test_rr_striping_round_robins(self):
+        pool = _pool(pool_size=2, stripe="rr")
+        conns = [pool.connect(client_pid=10 + i, server_pid=2,
+                              functions=_functions()) for i in range(4)]
+        assert [c._stripe for c in conns] == [0, 1, 0, 1]
+        # stripe members share the link object (and its ownership table)
+        assert conns[0].link is conns[2].link
+        assert conns[0].link is not conns[1].link
+        for c in conns:
+            c.close()
+
+    def test_pid_striping_hashes_client_pid(self):
+        pool = _pool(pool_size=2, stripe="pid")
+        c_even = pool.connect(client_pid=10, functions=_functions())
+        c_odd = pool.connect(client_pid=11, functions=_functions())
+        assert c_even._stripe == 0 and c_odd._stripe == 1
+        c_even.close()
+        c_odd.close()
+
+    def test_close_detaches_from_the_stripe(self):
+        pool = _pool()
+        conn = pool.connect(functions=_functions())
+        assert conn in pool.members[conn._stripe]
+        conn.close()
+        assert conn not in pool.members[0] + pool.members[1]
+
+
+# ---------------------------------------------------------------------------
+# seeded interleaving: no lost replies, no ownership corruption
+# ---------------------------------------------------------------------------
+class PoolModel:
+    """Two clients on ONE stripe + a model of every in-flight future."""
+
+    def __init__(self, seed: int):
+        self.rng = random.Random(seed)
+        self.pool = _pool(pool_size=1)      # force both onto one link
+        self.conns = [
+            self.pool.connect(client_pid=10 + i, server_pid=2,
+                              ring_capacity=16, functions=_functions())
+            for i in range(2)
+        ]
+        for conn in self.conns:
+            # a post may land on a slot whose OLD future is still
+            # unsettled (random settlement order): don't park, surface
+            # Overloaded immediately so the driver treats it as backoff
+            conn.admission_wait_s = 0.0
+        self.next_val = 0
+        # (conn_idx, future, expect) — posted, not yet settled
+        self.live = []
+        self.settled = 0
+
+    def post(self) -> bool:
+        ci = self.rng.randrange(2)
+        conn = self.conns[ci]
+        if sum(1 for c, _f, _e in self.live if c == ci) >= 12:
+            return False        # stay clear of ring overflow
+        a, b = self.next_val, self.next_val * 7 + 3
+        sealed = self.rng.random() < 0.5
+        try:
+            fut = conn.invoke_async(FN_ADD, a, b, sealed=sealed)
+        except Overloaded:
+            # the seq landed on a slot whose old future is unsettled —
+            # legal backpressure, not a lost slot; settle and retry
+            return False
+        self.next_val += 1
+        self.live.append((ci, fut, a + b))
+        return True
+
+    def flush_one(self) -> None:
+        """Flush through a RANDOM member: the stripe contract says every
+        member's staged flight flies, not just the caller's."""
+        self.conns[self.rng.randrange(2)].flush()
+        for conn in self.conns:
+            assert not conn._flight, \
+                "stripe flush left a member's flight staged"
+
+    def settle_some(self) -> None:
+        self.rng.shuffle(self.live)
+        keep = []
+        for ci, fut, expect in self.live:
+            if self.rng.random() < 0.5 and fut.done():
+                assert fut.result(timeout=5.0) == expect, \
+                    "reply lost or delivered to another client's future"
+                self.settled += 1
+            else:
+                keep.append((ci, fut, expect))
+        self.live = keep
+
+    def check_ownership(self) -> None:
+        """The shared bitmap must be consistent: every page is owned by
+        exactly one side (values only 0/1) and each node's strict read
+        of a page it owns must succeed."""
+        link = self.pool.links[0]
+        assert set(link.owner.tolist()) <= {OWNER_CLIENT, OWNER_SERVER}
+
+    def drain(self) -> None:
+        for conn in self.conns:
+            conn.flush()
+        for _ci, fut, expect in self.live:
+            assert fut.result(timeout=5.0) == expect
+            self.settled += 1
+        self.live = []
+
+    def close(self) -> None:
+        for conn in self.conns:
+            conn.close()
+
+
+class TestSeededInterleavings:
+    @pytest.mark.parametrize("seed", [0xC0FFEE, 1, 2])
+    def test_two_clients_shared_link_interleaved_flights(self, seed):
+        m = PoolModel(seed)
+        try:
+            steps = 0
+            while m.settled < 60:
+                steps += 1
+                assert steps < 100_000, "driver wedged — replies lost"
+                p = m.rng.random()
+                if p < 0.5:
+                    m.post()
+                elif p < 0.75:
+                    m.flush_one()
+                else:
+                    m.settle_some()
+                m.check_ownership()
+            m.drain()
+            m.check_ownership()
+            assert not m.live
+        finally:
+            m.close()
+
+    def test_shared_flush_carries_both_members_flights(self):
+        pool = _pool(pool_size=1)
+        c1 = pool.connect(client_pid=10, functions=_functions())
+        c2 = pool.connect(client_pid=11, functions=_functions())
+        f1 = c1.invoke_async(FN_ADD, 1, 2)
+        f2 = c2.invoke_async(FN_ADD, 30, 40)
+        flushes0 = pool.n_shared_flushes
+        served = c1.flush()       # flushing c1 must also fly c2's flight
+        assert served == 2
+        assert pool.n_shared_flushes == flushes0 + 1
+        assert not c2._flight
+        assert f1.result() == 3 and f2.result() == 70
+        c1.close()
+        c2.close()
+
+
+# ---------------------------------------------------------------------------
+# one-sided framing: wire accounting
+# ---------------------------------------------------------------------------
+class TestOneSidedFraming:
+    def test_one_sided_flight_is_one_put_per_direction(self):
+        conn = FallbackConnection(num_pages=1 << 10, link_latency_us=0.0,
+                                  functions=_functions())
+        futs = [conn.invoke_async(FN_ADD, k, k) for k in range(8)]
+        puts0, link = conn.link.n_puts, conn.link
+        comp0 = link.completion.copy()
+        conn.flush()
+        assert link.n_puts - puts0 == 2    # args out, replies back
+        # each direction published its completion word exactly once
+        assert link.completion[OWNER_SERVER] - comp0[OWNER_SERVER] == 1
+        assert link.completion[OWNER_CLIENT] - comp0[OWNER_CLIENT] == 1
+        assert [f.result() for f in futs] == [2 * k for k in range(8)]
+        conn.close()
+
+    def test_completion_word_rides_the_flight(self):
+        link = DSMLink(num_pages=64, link_latency_us=0.0)
+        moved0 = link.bytes_moved
+        link.put([], to=OWNER_SERVER, payload_bytes=100)
+        assert link.bytes_moved - moved0 == 100 + COMPLETION_WORD_BYTES
+
+    def test_legacy_framing_preserved_behind_the_knob(self):
+        conn = FallbackConnection(num_pages=1 << 10, link_latency_us=0.0,
+                                  functions=_functions(), one_sided=False)
+        futs = [conn.invoke_async(FN_ADD, k, 1) for k in range(4)]
+        puts0 = conn.link.n_puts
+        conn.flush()
+        assert conn.link.n_puts == puts0   # no one-sided puts, old wire
+        assert [f.result() for f in futs] == [k + 1 for k in range(4)]
+        conn.close()
+
+
+# ---------------------------------------------------------------------------
+# consecutive-run migrate batching (DSMNode fault path satellite)
+# ---------------------------------------------------------------------------
+class TestMigrateRunBatching:
+    def test_consecutive_runs_collapse_round_trips(self):
+        link = DSMLink(num_pages=64, link_latency_us=0.0)
+        link.owner[:] = OWNER_SERVER
+        saved0, faults0 = link.migrate_rtts_saved, link.page_faults
+        # pages 3,4,5 + 9,10 + 20 → 3 runs, ONE fault, 2 saved trips
+        moved = link.migrate([3, 4, 5, 9, 10, 20], to=OWNER_CLIENT)
+        assert moved == 6
+        assert link.page_faults - faults0 == 1
+        assert link.migrate_rtts_saved - saved0 == 2
+        assert all(link.owner[[3, 4, 5, 9, 10, 20]] == OWNER_CLIENT)
+
+    def test_single_run_saves_nothing(self):
+        link = DSMLink(num_pages=64, link_latency_us=0.0)
+        link.owner[:] = OWNER_SERVER
+        saved0 = link.migrate_rtts_saved
+        assert link.migrate([7, 8, 9], to=OWNER_CLIENT) == 3
+        assert link.migrate_rtts_saved == saved0
+
+    def test_read_owned_miss_accounting_counts_saves(self):
+        conn = FallbackConnection(num_pages=256, link_latency_us=0.0,
+                                  functions=_functions())
+        link = conn.link
+        link.owner[16:24] = OWNER_SERVER
+        link.owner[30:32] = OWNER_SERVER
+        misses0 = link.ownership_misses
+        saved0 = link.migrate_rtts_saved
+        # one client read spanning both unowned runs: ONE counted miss,
+        # one bulk migrate, one collapsed round trip
+        conn.client.read(conn.client.heap.addr_of_page(16),
+                         16 * link.page_size)
+        assert link.ownership_misses - misses0 == 1
+        assert link.migrate_rtts_saved - saved0 == 1
+        conn.close()
+
+
+# ---------------------------------------------------------------------------
+# windowed seal-epoch batching (§5.3 composed with pipelining)
+# ---------------------------------------------------------------------------
+class TestSealWindowBatching:
+    def test_sealed_window_costs_one_epoch_per_flush(self):
+        conn = FallbackConnection(num_pages=1 << 10, link_latency_us=0.0,
+                                  functions=_functions())
+        heap = conn.client.heap
+        futs = [conn.invoke_async(FN_ADD, k, 1, sealed=True)
+                for k in range(8)]
+        flushes0 = conn.seals.n_batch_flushes
+        epoch0 = heap.perm_epoch
+        conn.flush()
+        # ONE batched release flush → ONE unprotect permission epoch for
+        # the whole depth-8 window
+        assert conn.seals.n_batch_flushes - flushes0 == 1
+        assert heap.perm_epoch - epoch0 == 1
+        assert conn.n_window_seal_flushes == 1
+        # settling futures must NOT pay a second release
+        releases0 = conn.seals.n_releases
+        assert [f.result() for f in futs] == [k + 1 for k in range(8)]
+        assert conn.seals.n_releases == releases0
+        conn.close()
+
+    def test_window_batching_off_releases_per_future(self):
+        conn = FallbackConnection(num_pages=1 << 10, link_latency_us=0.0,
+                                  functions=_functions(),
+                                  window_seal_batching=False)
+        futs = [conn.invoke_async(FN_ADD, k, 1, sealed=True)
+                for k in range(4)]
+        conn.flush()
+        assert conn.n_window_seal_flushes == 0
+        releases0 = conn.seals.n_releases
+        assert [f.result() for f in futs] == [k + 1 for k in range(4)]
+        assert conn.seals.n_releases - releases0 == 4
+        conn.close()
+
+    def test_mixed_window_releases_only_sealed_entries(self):
+        conn = FallbackConnection(num_pages=1 << 10, link_latency_us=0.0,
+                                  functions=_functions())
+        sealed = [conn.invoke_async(FN_ADD, k, 0, sealed=True)
+                  for k in range(3)]
+        plain = [conn.invoke_async(FN_ADD, k, 5) for k in range(3)]
+        flushes0 = conn.seals.n_batch_flushes
+        conn.flush()
+        assert conn.seals.n_batch_flushes - flushes0 == 1
+        assert [f.result() for f in sealed] == [0, 1, 2]
+        assert [f.result() for f in plain] == [5, 6, 7]
+        conn.close()
+
+    def test_pooled_members_each_flush_one_epoch(self):
+        pool = _pool(pool_size=1)
+        c1 = pool.connect(client_pid=10, functions=_functions())
+        c2 = pool.connect(client_pid=11, functions=_functions())
+        f1 = [c1.invoke_async(FN_ADD, k, 1, sealed=True) for k in range(4)]
+        f2 = [c2.invoke_async(FN_ADD, k, 2, sealed=True) for k in range(4)]
+        b1, b2 = c1.seals.n_batch_flushes, c2.seals.n_batch_flushes
+        c1.flush()
+        assert c1.seals.n_batch_flushes - b1 == 1
+        assert c2.seals.n_batch_flushes - b2 == 1
+        assert [f.result() for f in f1] == [k + 1 for k in range(4)]
+        assert [f.result() for f in f2] == [k + 2 for k in range(4)]
+        c1.close()
+        c2.close()
