@@ -11,6 +11,8 @@ Each error corresponds to a failure path in the paper:
 * ``QuotaExceeded``      — mapping a heap past the administrator quota (§5.4).
 * ``LeaseExpired``       — operating on a heap whose lease lapsed (§4.6).
 * ``ChannelError``       — connection/channel protocol misuse.
+* ``WaitTimeout``        — a client wait lapsed before the reply landed
+                           (retryable; the token is reaped when it lands).
 * ``Overloaded``         — admission control shed the request, or the
                            ring admission queue's budget lapsed (§5.4).
 * ``OwnershipMiss``      — fallback-transport access to a page this node does
@@ -57,6 +59,14 @@ class DeadlineExceeded(ChannelError):
     request is dropped without running the handler) or a handler/
     interceptor raised past the budget. Not retryable: the budget is
     gone, so retry layers must let this one through."""
+
+
+class WaitTimeout(ChannelError):
+    """A client-side wait lapsed before the reply landed: the RPC may
+    still complete server-side, so the token is typically abandoned and
+    reaped once the completion lands. Retryable — distinct from
+    ``DeadlineExceeded`` (budget gone) and from protocol misuse, so
+    drain loops can swallow exactly this and nothing else."""
 
 
 class Overloaded(ChannelError):

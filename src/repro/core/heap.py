@@ -68,6 +68,7 @@ class SharedHeap:
         num_pages: int,
         page_size: int = DEFAULT_PAGE_SIZE,
         name: str = "",
+        sanitize: Optional[bool] = None,
     ):
         if num_pages <= 0 or num_pages > gaddr.MAX_PAGES:
             raise ValueError(f"num_pages out of range: {num_pages}")
@@ -106,6 +107,15 @@ class SharedHeap:
         self._device_dirty = False
         self._eager_sync = False
 
+        # ShmCheck sanitizer (analysis/): ``sanitize`` True forces
+        # tracing, False opts out, None attaches only when a session is
+        # active or REPRO_SANITIZE is set. When off, the one reference
+        # below is the entire cost of the instrumentation.
+        self._tracer = None
+        if sanitize is not False:
+            from ..analysis.runtime import maybe_attach
+            self._tracer = maybe_attach(self, sanitize)
+
     # ------------------------------------------------------------------
     # allocation
     # ------------------------------------------------------------------
@@ -126,6 +136,8 @@ class SharedHeap:
                     self.owner[start : start + count] = owner
                     self.perm[start : start + count] = 0
                     self.seal_holder[start : start + count] = 0
+                    if self._tracer is not None:
+                        self._tracer.on_alloc(self, start, count, owner)
                     return start
             raise AllocationError(
                 f"{self.name}: cannot allocate {count} contiguous pages "
@@ -148,6 +160,8 @@ class SharedHeap:
             # the range is immediately reallocated to someone else
             self.key[start : start + count] = 0
             self._insert_free(Extent(start, count))
+            if self._tracer is not None:
+                self._tracer.on_free(self, start, count)
 
     def _insert_free(self, ext: Extent) -> None:
         # keep the free list sorted + coalesced
@@ -189,6 +203,8 @@ class SharedHeap:
             self.perm[sl] |= PERM_SEALED
             self.seal_holder[sl] = holder
             self._bump_epoch()
+            if self._tracer is not None:
+                self._tracer.on_protect(self, start, count, holder)
 
     def unprotect_range(self, start: int, count: int) -> None:
         with self._lock:
@@ -196,6 +212,8 @@ class SharedHeap:
             self.perm[sl] &= ~np.uint8(PERM_SEALED)
             self.seal_holder[sl] = 0
             self._bump_epoch()
+            if self._tracer is not None:
+                self._tracer.on_unprotect(self, [(start, count)])
 
     def unprotect_ranges(self, ranges: List[Tuple[int, int]]) -> None:
         """Batched release — MANY ranges, ONE epoch bump (§5.3)."""
@@ -205,6 +223,8 @@ class SharedHeap:
                 self.perm[sl] &= ~np.uint8(PERM_SEALED)
                 self.seal_holder[sl] = 0
             self._bump_epoch()
+            if self._tracer is not None:
+                self._tracer.on_unprotect(self, ranges)
 
     def _bump_epoch(self) -> None:
         self.perm_epoch += 1
@@ -278,6 +298,8 @@ class SharedHeap:
                     f"(RPC in flight — §4.5)"
                 )
         self._store(lo, hi, data)
+        if self._tracer is not None:
+            self._tracer.on_write(self, lo, hi, pid)
 
     def read(self, a: int, nbytes: int) -> np.ndarray:
         lo, hi = self._check_addr(a, nbytes)
@@ -287,6 +309,8 @@ class SharedHeap:
                 raise InvalidPointer(f"read of freed page in {self.name}")
         elif np.any(self.state[p0:p1] == FREE):
             raise InvalidPointer(f"read of freed page in {self.name}")
+        if self._tracer is not None:
+            self._tracer.on_read(self, lo, hi)
         return self.buf[lo:hi]
 
     def write_fast(self, a: int,
@@ -299,6 +323,8 @@ class SharedHeap:
         if hi > self.num_pages * self.page_size:
             raise InvalidPointer(f"write past end of {self.name}")
         self._store(lo, hi, data)
+        if self._tracer is not None:
+            self._tracer.on_write(self, lo, hi, 0)
 
     def addr_of_page(self, page: int, offset: int = 0) -> int:
         return gaddr.pack(self.heap_id, page, offset)

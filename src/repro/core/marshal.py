@@ -45,7 +45,7 @@ from .channel import Connection, E_DEADLINE, E_EXCEPTION, E_OVERLOAD, \
     E_SANDBOX, F_BYVAL, F_SANDBOXED, F_SEALED, F_STREAM, F_TYPED, OK, \
     R_DONE, R_ERR, RpcError, _now_us
 from .errors import AllocationError, ChannelError, DeadlineExceeded, \
-    InvalidPointer, Overloaded, SandboxViolation, SealViolation
+    InvalidPointer, Overloaded, SandboxViolation, SealViolation, WaitTimeout
 from .scope import Scope, ScopePool, create_scope
 
 # Pooled argument scopes: 4 pages (16 KiB with the default page size)
@@ -349,6 +349,11 @@ def _pop_reply_scope(conn, nbytes: int) -> Tuple[Scope, bool]:
         free = conn._reply_free
         if free:
             s = free.pop()
+            tr = heap._tracer
+            if tr is not None:
+                # freelist hand-off: the recycler's accesses (the client
+                # reading the previous reply) happen-before this reuse
+                tr.sync_acquire(("scope", id(s)))
             s.reset()
             return s, True
         return create_scope(heap, REPLY_SCOPE_PAGES * heap.page_size), True
@@ -359,6 +364,9 @@ def _release_reply_scope(conn, scope: Scope) -> None:
     """The one push-or-destroy policy for reply scopes."""
     if scope.num_pages == REPLY_SCOPE_PAGES and \
             len(conn._reply_free) < _REPLY_FREELIST_MAX:
+        tr = _reply_heap(conn)._tracer
+        if tr is not None:
+            tr.sync_release(("scope", id(scope)))
         conn._reply_free.append(scope)
     elif scope.live:
         scope.destroy()
@@ -741,7 +749,7 @@ def _gather_drain(results, pending, deadline, timeout) -> None:
             except (DeadlineExceeded, RpcError) as e:
                 failed = failed or e
                 del pending[i]
-            except ChannelError:
+            except WaitTimeout:
                 pass   # wait-timeout slice: still in flight, re-loop
             except BaseException as e:
                 failed = failed or e
@@ -802,8 +810,16 @@ def _pop_chain_scope(conn, nbytes: int) -> Scope:
             s = free.pop()
             s.reset()
             return s
-        return create_scope(heap, REPLY_SCOPE_PAGES * heap.page_size)
-    return create_scope(heap, nbytes)
+        s = create_scope(heap, REPLY_SCOPE_PAGES * heap.page_size)
+    else:
+        s = create_scope(heap, nbytes)
+    tr = heap._tracer
+    if tr is not None:
+        # chunk chains are synchronization fabric: the next-word flips
+        # race with the consumer's chase by design — ordering comes from
+        # the explicit ("chk", ...) publish/consume edges
+        tr.sync_pages(heap, *s.page_range())
+    return s
 
 
 def _release_chain_scope(conn, scope: Scope) -> None:
@@ -978,8 +994,11 @@ class ServerStream:
         return next(self.it)
 
     def _read_consumed(self) -> int:
-        return _U32.unpack(bytes(
-            _reply_heap(self.conn).read(self._consumed_addr, 4)))[0]
+        heap = _reply_heap(self.conn)
+        tr = heap._tracer
+        if tr is not None:
+            tr.sync_acquire(("cons", tr._space(heap), self._consumed_addr))
+        return _U32.unpack(bytes(heap.read(self._consumed_addr, 4)))[0]
 
     # -- chunk emission --------------------------------------------------
     def _emit_value(self, value, collect) -> None:
@@ -1020,6 +1039,12 @@ class ServerStream:
         """The pointer flip: store the chunk's address into its
         predecessor's ``next`` word (or the anchor's head)."""
         target = self.anchor if self.prev == 0 else self.prev
+        heap = _reply_heap(self.conn)
+        tr = heap._tracer
+        if tr is not None:
+            # the pointer flip publishes the chunk: everything written
+            # into it happens-before the client's chase of this word
+            tr.sync_release(("chk", tr._space(heap), hdr))
         self.ctx._daemon_write(target, _U64.pack(hdr))
         self.prev = hdr
         if collect is not None:
@@ -1050,6 +1075,9 @@ class ServerStream:
         # the ret word mirrors the terminal chunk's value word (e.g. the
         # E_OVERLOAD retry-after µs) so a client that settles via the
         # slot sees the same typed hint as one that read the chain
+        tr = _reply_heap(self.conn)._tracer
+        if tr is not None:
+            tr.sync_release(("rep", id(self.ring), self.slot))
         self.ring.complete(self.slot, ret, state, status)
         self.abort()
 
@@ -1127,6 +1155,13 @@ class RpcStream:
         self._watch = gaddr.linear(anchor, heap.page_size) // 8
         self._consumed_addr = gaddr.add(anchor, _ANCHOR_CONSUMED_OFF,
                                         heap.page_size)
+        tr = heap._tracer
+        if tr is not None:
+            # the anchor page carries the head/consumed watch words —
+            # racy-by-design sync fabric, like the descriptor ring
+            tr.sync_pages(heap,
+                          gaddr.linear(anchor, heap.page_size)
+                          // heap.page_size, 1)
         self._prev = 0   # last consumed chunk (recycled with a lag of one)
         self._seq = 0
         self._state = _PENDING
@@ -1173,7 +1208,7 @@ class RpcStream:
             if self._deadline_us and _now_us() > self._deadline_us:
                 self._lapse()
             if time.monotonic() > deadline:
-                raise ChannelError("stream chunk timed out")  # retryable
+                raise WaitTimeout("stream chunk timed out")
             if self._pump is not None:
                 self._pump()   # inline mode: this thread IS the server
                 continue
@@ -1187,6 +1222,9 @@ class RpcStream:
     def _consume_chunk(self, addr: int):
         conn = self.conn
         heap = conn.heap
+        tr = heap._tracer
+        if tr is not None:
+            tr.sync_acquire(("chk", tr._space(heap), addr))
         try:
             (_nxt, cgen, seq, cflags, aux, vpayload) = _CHUNK.unpack(
                 bytes(heap.read(addr, _CHUNK.size)))
@@ -1209,6 +1247,9 @@ class RpcStream:
             self._seq += 1
             # open the server's bounded window (runtime metadata — a
             # daemon store, legal even while the anchor scope is sealed)
+            if tr is not None:
+                tr.sync_release(("cons", tr._space(heap),
+                                 self._consumed_addr))
             heap.write(self._consumed_addr, _U32.pack(self._seq))
             if self._prev:
                 # recycle lag of one: a chunk scope is reusable only once
@@ -1515,6 +1556,9 @@ class FallbackRpcStream:
                 val: int = 0) -> None:
         conn = self.conn
         conn.link.send_msg(CHUNK_HDR_BYTES)   # completion descriptor
+        tr = conn.client.heap._tracer
+        if tr is not None:
+            tr.sync_acquire(("rep", id(conn.ring), self.slot))
         _ret, _state, _status = conn.ring.consume(self.slot)
         self._release_seal_once()
         if self._prev:
@@ -1544,6 +1588,9 @@ class FallbackRpcStream:
         if ring.state_of(self.slot) < R_DONE:
             self._teardown(ChannelError("stream produced no chunks"))
             raise self._exc
+        tr = conn.client.heap._tracer
+        if tr is not None:
+            tr.sync_acquire(("rep", id(ring), self.slot))
         ret, state, status = ring.consume(self.slot)
         exc = conn._flight_errors.pop(self.slot, None)
         self._release_seal_once()
@@ -1814,6 +1861,9 @@ class FallbackRpcFuture:
             raise self._exc
         if conn.in_flight(self.slot):
             conn.flush()
+        tr = conn.client.heap._tracer
+        if tr is not None:
+            tr.sync_acquire(("rep", id(conn.ring), self.slot))
         ret, state, status = conn.ring.consume(self.slot)
         if self._sealed and not conn._consume_window_release(self._seal_idx):
             # the window flush did not cover this seal (error path, or

@@ -278,12 +278,18 @@ class SandboxManager:
             # guards someone else's pages
             if self._cache.get(rng) != sb.key or \
                     not self._still_valid(rng, sb.key):
+                if self.heap._tracer is not None:
+                    self.heap._tracer.on_sandbox_stale(
+                        self.heap, sb.key, sb.start_page, sb.num_pages)
                 raise SandboxViolation(
                     f"stale sandbox: key {sb.key} no longer guards pages "
                     f"[{sb.start_page},{sb.start_page + sb.num_pages})"
                 )
             self._active_keys[sb.key] = self._active_keys.get(sb.key, 0) + 1
         self._tls.mask = 1 << sb.key
+        if self.heap._tracer is not None:
+            self.heap._tracer.on_sandbox_enter(
+                self.heap, sb.key, sb.start_page, sb.num_pages)
 
     def _deactivate(self, sb: Sandbox) -> None:
         with self._lock:
@@ -296,6 +302,8 @@ class SandboxManager:
                 if sb.key not in self._free_keys:
                     self._free_keys.append(sb.key)
         self._tls.mask = (1 << KEY_PRIVATE) | (1 << KEY_SHARED)
+        if self.heap._tracer is not None:
+            self.heap._tracer.on_sandbox_exit(self.heap, sb.key)
 
     def in_sandbox(self) -> bool:
         return self._thread_mask() & ~((1 << KEY_PRIVATE) | (1 << KEY_SHARED)) != 0

@@ -374,7 +374,11 @@ class ServeEngine:
         self.stub = self.router.stub(self.endpoint_name, DecodeService,
                                      pid=self.client_pid, pod=pod)
         self.conn = self.stub.connection
-        assert self.conn.transport == "cxl"  # same pod ⇒ shared memory
+        if self.conn.transport != "cxl":  # same pod ⇒ shared memory
+            raise ChannelError(
+                "prefill/decode pair must share a pod (got transport "
+                f"{self.conn.transport!r}); zero-copy KV handoff needs "
+                "the CXL ring")
         # optionally serve FN_ATTACH from a dedicated ServerLoop thread
         # (the cluster deployment shape) instead of inline on the caller
         self.serve_loop: Optional[ServerLoop] = None

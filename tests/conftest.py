@@ -1,0 +1,54 @@
+"""Shared fixtures: ShmCheck sanitizer wiring for the test suite.
+
+Two modes:
+
+* ``REPRO_SANITIZE=1 pytest ...`` — an ambient ShmCheck session is
+  already attached to every heap (``repro.analysis.runtime``); at the
+  end of the run this plugin writes ``SHMCHECK_report.json`` and prints
+  the finding summary. Findings are REPORTED, not failed — the global
+  run includes chaos/failure-injection suites that deliberately break
+  the protocol.
+* the ``shmcheck`` fixture — tests that opt in get a dedicated session
+  scoped to the test and FAIL if it ends with findings. Used by the
+  interleaving/zero-false-positive suite.
+"""
+
+import json
+import os
+
+import pytest
+
+
+def _sanitize_on() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") not in (
+        "", "0", "false", "False", "off")
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _shmcheck_global_report():
+    """Under REPRO_SANITIZE=1, dump the ambient session's findings at the
+    end of the run (report-only — see module docstring)."""
+    yield
+    if not _sanitize_on():
+        return
+    from repro.analysis.runtime import ambient
+    tr = ambient()
+    out = os.environ.get("SHMCHECK_REPORT", "SHMCHECK_report.json")
+    with open(out, "w", encoding="utf-8") as f:
+        json.dump(tr.report(), f, indent=2)
+    print(f"\n{tr.summary()}  (report: {out})")
+
+
+@pytest.fixture
+def shmcheck():
+    """A per-test ShmCheck session that fails the test on any finding.
+
+    Heaps created inside the ``with``-scope of this fixture (i.e. during
+    the test body) attach to this session even without REPRO_SANITIZE.
+    """
+    from repro.analysis.runtime import session
+    with session() as tr:
+        yield tr
+    if tr.findings:
+        lines = "\n".join(str(f) for f in tr.findings)
+        pytest.fail(f"ShmCheck findings:\n{lines}", pytrace=False)

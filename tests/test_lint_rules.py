@@ -1,0 +1,132 @@
+"""tools/lint_rules.py — per-rule positives/negatives + tree-is-clean.
+
+The tool is stdlib-only and lives outside the package (it lints the
+package), so it is loaded by file path here.
+"""
+
+import importlib.util
+import pathlib
+
+_TOOL = pathlib.Path(__file__).resolve().parent.parent / "tools" \
+    / "lint_rules.py"
+_spec = importlib.util.spec_from_file_location("lint_rules", _TOOL)
+lint_rules = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(lint_rules)
+
+CORE = "src/repro/core/somefile.py"
+
+
+def _codes(src, path=CORE):
+    return [f[3] for f in lint_rules.lint_source(src, path)]
+
+
+class TestRPR001BareAssert:
+    def test_assert_in_core_flagged(self):
+        assert _codes("assert x == 1\n") == ["RPR001"]
+
+    def test_assert_in_serving_flagged(self):
+        assert _codes("assert ok\n",
+                      "src/repro/serving/engine.py") == ["RPR001"]
+
+    def test_assert_outside_scope_ok(self):
+        assert _codes("assert x\n", "src/repro/analysis/tracer.py") == []
+
+    def test_assert_in_tests_exempt(self):
+        assert _codes("assert x\n", "tests/test_foo.py") == []
+
+
+class TestRPR002RawStores:
+    def test_raw_store_outside_allowlist_flagged(self):
+        assert _codes("heap.write_fast(a, b)\n",
+                      "src/repro/serving/engine.py") == ["RPR002"]
+        assert _codes("ctx._daemon_write(a, b)\n",
+                      "src/repro/core/service.py") == ["RPR002"]
+
+    def test_raw_store_in_marshal_ok(self):
+        assert _codes("heap.write_fast(a, b)\n",
+                      "src/repro/core/marshal.py") == []
+
+    def test_plain_write_ok(self):
+        assert _codes("heap.write(a, b)\n",
+                      "src/repro/serving/engine.py") == []
+
+
+class TestRPR003AllocInTry:
+    def test_unrolled_alloc_in_try_flagged(self):
+        src = ("try:\n"
+               "    s = conn.create_scope(64)\n"
+               "    use(s)\n"
+               "except ValueError:\n"
+               "    pass\n")
+        assert _codes(src) == ["RPR003"]
+
+    def test_alloc_with_finally_rollback_ok(self):
+        src = ("try:\n"
+               "    s = conn.create_scope(64)\n"
+               "finally:\n"
+               "    s.destroy()\n")
+        assert _codes(src) == []
+
+    def test_alloc_with_except_rollback_ok(self):
+        src = ("try:\n"
+               "    p = heap.alloc_pages(4)\n"
+               "    use(p)\n"
+               "except Exception:\n"
+               "    heap.free_extent(p, 4)\n"
+               "    raise\n")
+        assert _codes(src) == []
+
+    def test_alloc_outside_try_ok(self):
+        src = ("s = conn.create_scope(64)\n"
+               "try:\n"
+               "    use(s)\n"
+               "except ValueError:\n"
+               "    pass\n")
+        assert _codes(src) == []
+
+
+class TestRPR004Clocks:
+    def test_wall_clock_in_core_flagged(self):
+        assert _codes("t = time.time()\n") == ["RPR004"]
+
+    def test_module_random_in_core_flagged(self):
+        assert _codes("x = random.choice(y)\n") == ["RPR004"]
+
+    def test_monotonic_and_seeded_random_ok(self):
+        assert _codes("t = time.monotonic()\n") == []
+        assert _codes("r = random.Random(7)\n") == []
+
+    def test_wall_clock_outside_core_ok(self):
+        assert _codes("t = time.time()\n",
+                      "src/repro/serving/engine.py") == []
+
+
+class TestRPR005SwallowedChannelError:
+    def test_bare_pass_flagged(self):
+        src = "try:\n    f()\nexcept ChannelError:\n    pass\n"
+        assert _codes(src) == ["RPR005"]
+
+    def test_tuple_form_flagged(self):
+        src = ("try:\n    f()\n"
+               "except (ValueError, ChannelError):\n    ...\n")
+        assert _codes(src) == ["RPR005"]
+
+    def test_handled_channel_error_ok(self):
+        src = "try:\n    f()\nexcept ChannelError:\n    log(1)\n"
+        assert _codes(src) == []
+
+    def test_swallowed_waittimeout_ok(self):
+        src = "try:\n    f()\nexcept WaitTimeout:\n    pass\n"
+        assert _codes(src) == []
+
+
+class TestTreeIsClean:
+    def test_src_has_zero_findings(self):
+        root = _TOOL.parent.parent
+        findings = lint_rules.lint_paths([str(root / "src")], root=root)
+        assert findings == [], "\n".join(
+            f"{p}:{ln}:{col}: {code} {msg}"
+            for p, ln, col, code, msg in findings)
+
+    def test_syntax_error_reported_not_raised(self):
+        assert _codes("def f(:\n") == ["RPR000"]

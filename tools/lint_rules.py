@@ -1,0 +1,229 @@
+#!/usr/bin/env python3
+"""ShmCheck static pass — project lint rules for the RPCool tree.
+
+Five rules, each born from a bug class this repo has actually shipped
+(see EXPERIMENTS.md "Correctness tooling"):
+
+* RPR001  bare ``assert`` in dispatch/serve paths (``src/repro/core``,
+          ``src/repro/serving``): asserts vanish under ``python -O`` and
+          turn protocol violations into silent corruption. Raise a typed
+          error from ``repro.core.errors`` instead.
+* RPR002  raw-store call (``write_fast`` / ``_daemon_write``) outside the
+          marshal/daemon modules: these bypass seal write-protection, so
+          every call site must live where the seal discipline is audited.
+* RPR003  allocation (``create_scope`` / ``alloc_pages``) inside a
+          ``try`` body whose handlers/finally never reference the result:
+          a raise after the alloc leaks the pages (the partial-alloc leak
+          the sanitizer's SHM104 catches at runtime).
+* RPR004  wall-clock / unseeded randomness in ``src/repro/core``:
+          ``time.time()`` breaks deadline math across hosts (use
+          ``time.monotonic()``), and module-level ``random.*`` makes
+          failures unreproducible (use a seeded ``random.Random``).
+* RPR005  silently-swallowed ``ChannelError``: the base class covers
+          closed connections and protocol misuse — swallow the retryable
+          ``WaitTimeout`` subclass and nothing else.
+
+Stdlib-only (``ast``); runnable as ``python tools/lint_rules.py src tests``.
+Output is ruff-style ``file:line:col: RPR00X message``; exit 1 on findings.
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+Finding = Tuple[str, int, int, str, str]  # path, line, col, code, message
+
+# modules allowed to call the raw stores (the audited seal-discipline set)
+RAW_STORE_ALLOW = (
+    "core/heap.py",
+    "core/channel.py",
+    "core/marshal.py",
+    "core/containers.py",
+    "core/fallback.py",
+    "core/serial.py",
+)
+RAW_STORE_NAMES = {"write_fast", "_daemon_write"}
+ALLOC_NAMES = {"create_scope", "alloc_pages"}
+ASSERT_SCOPE = ("repro/core/", "repro/serving/")
+CLOCK_SCOPE = "repro/core/"
+
+
+def _norm(relpath: str) -> str:
+    return relpath.replace("\\", "/")
+
+
+def _is_test_file(relpath: str) -> bool:
+    p = _norm(relpath)
+    name = p.rsplit("/", 1)[-1]
+    return ("/tests/" in p or p.startswith("tests/")
+            or name.startswith("test_") or name == "conftest.py")
+
+
+def _in_scope(relpath: str, prefixes) -> bool:
+    p = _norm(relpath)
+    if isinstance(prefixes, str):
+        prefixes = (prefixes,)
+    return any(pre in p for pre in prefixes)
+
+
+def _call_name(node: ast.Call) -> str:
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return ""
+
+
+def _mentions_channel_error(node) -> bool:
+    if node is None:
+        return False
+    if isinstance(node, ast.Name):
+        return node.id == "ChannelError"
+    if isinstance(node, ast.Attribute):
+        return node.attr == "ChannelError"
+    if isinstance(node, ast.Tuple):
+        return any(_mentions_channel_error(e) for e in node.elts)
+    return False
+
+
+def _only_pass(body) -> bool:
+    for stmt in body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(
+                stmt.value, ast.Constant) and stmt.value.value is Ellipsis:
+            continue
+        return False
+    return True
+
+
+def _names_loaded(nodes) -> set:
+    out = set()
+    for n in nodes:
+        for sub in ast.walk(n):
+            if isinstance(sub, ast.Name):
+                out.add(sub.id)
+    return out
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, relpath: str):
+        self.relpath = _norm(relpath)
+        self.findings: List[Finding] = []
+
+    def _add(self, node, code: str, msg: str) -> None:
+        self.findings.append(
+            (self.relpath, node.lineno, node.col_offset + 1, code, msg))
+
+    # RPR001 ------------------------------------------------------------
+    def visit_Assert(self, node: ast.Assert) -> None:
+        if _in_scope(self.relpath, ASSERT_SCOPE):
+            self._add(node, "RPR001",
+                      "bare assert in a dispatch/serve path — vanishes "
+                      "under python -O; raise a typed repro.core.errors "
+                      "exception instead")
+        self.generic_visit(node)
+
+    # RPR002 / RPR004 ----------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _call_name(node)
+        if name in RAW_STORE_NAMES and not any(
+                self.relpath.endswith(a) for a in RAW_STORE_ALLOW):
+            self._add(node, "RPR002",
+                      f"raw store {name}() outside the audited marshal/"
+                      "daemon modules bypasses seal write-protection")
+        if _in_scope(self.relpath, CLOCK_SCOPE):
+            fn = node.func
+            if (isinstance(fn, ast.Attribute)
+                    and isinstance(fn.value, ast.Name)):
+                if fn.value.id == "time" and fn.attr == "time":
+                    self._add(node, "RPR004",
+                              "time.time() in core/ — wall clocks skew "
+                              "across hosts; use time.monotonic()")
+                elif fn.value.id == "random" and fn.attr != "Random":
+                    self._add(node, "RPR004",
+                              f"module-level random.{fn.attr}() in core/ "
+                              "is unreproducible; use a seeded "
+                              "random.Random instance")
+        self.generic_visit(node)
+
+    # RPR003 ------------------------------------------------------------
+    def visit_Try(self, node: ast.Try) -> None:
+        cleanup = _names_loaded(
+            [*node.handlers, *node.finalbody, *node.orelse])
+        for stmt in node.body:
+            if not (isinstance(stmt, ast.Assign)
+                    and isinstance(stmt.value, ast.Call)):
+                continue
+            if _call_name(stmt.value) not in ALLOC_NAMES:
+                continue
+            targets = [t.id for t in stmt.targets
+                       if isinstance(t, ast.Name)]
+            if targets and not any(t in cleanup for t in targets):
+                self._add(stmt, "RPR003",
+                          f"{_call_name(stmt.value)}() inside try with no "
+                          f"rollback: {targets[0]} is never referenced in "
+                          "except/else/finally, so a raise leaks the pages")
+        self.generic_visit(node)
+
+    # RPR005 ------------------------------------------------------------
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        if _mentions_channel_error(node.type) and _only_pass(node.body):
+            self._add(node, "RPR005",
+                      "silently-swallowed ChannelError hides closed "
+                      "connections and protocol misuse — catch the "
+                      "retryable WaitTimeout subclass instead")
+        self.generic_visit(node)
+
+
+def lint_source(text: str, relpath: str) -> List[Finding]:
+    """Lint one file's source. Test files are exempt by design — they
+    exercise raw APIs and interleavings the rules exist to keep out of
+    the library itself."""
+    if _is_test_file(relpath):
+        return []
+    try:
+        tree = ast.parse(text, filename=relpath)
+    except SyntaxError as e:
+        return [(_norm(relpath), e.lineno or 0, (e.offset or 0),
+                 "RPR000", f"syntax error: {e.msg}")]
+    linter = _Linter(relpath)
+    linter.visit(tree)
+    return linter.findings
+
+
+def lint_paths(paths, root: Path = None) -> List[Finding]:
+    root = root or Path.cwd()
+    findings: List[Finding] = []
+    for raw in paths:
+        p = Path(raw)
+        files = [p] if p.is_file() else sorted(
+            f for f in p.rglob("*.py") if "__pycache__" not in f.parts)
+        for f in files:
+            try:
+                rel = f.resolve().relative_to(root.resolve())
+            except ValueError:
+                rel = f
+            findings.extend(
+                lint_source(f.read_text(encoding="utf-8"), str(rel)))
+    findings.sort(key=lambda x: (x[0], x[1], x[2], x[3]))
+    return findings
+
+
+def main(argv: List[str]) -> int:
+    paths = argv or ["src"]
+    findings = lint_paths(paths)
+    for path, line, col, code, msg in findings:
+        print(f"{path}:{line}:{col}: {code} {msg}")
+    n = len(findings)
+    print(f"lint_rules: {n} finding{'s' if n != 1 else ''} "
+          f"in {len(paths)} path(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
