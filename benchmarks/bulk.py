@@ -35,6 +35,7 @@ import statistics
 import time
 from typing import List, Tuple
 
+from repro.configs import global_config
 from repro.core import Orchestrator, RPC, service
 from repro.core.router import ClusterRouter
 from repro.core.service import service_def
@@ -99,13 +100,13 @@ def bench(windows: int = 12) -> List[Tuple[str, float, str]]:
     ch = RPC(orch, pid=1).open("/pod0/bulk", heap_pages=1 << 10)
     ch.serve(BulkService())
 
-    base_router = ClusterRouter(orch,
-                                fallback_link_latency_us=FALLBACK_LATENCY_US,
-                                fallback_pool_size=0,
-                                fallback_one_sided=False)
-    pool_router = ClusterRouter(orch,
-                                fallback_link_latency_us=FALLBACK_LATENCY_US,
-                                fallback_pool_size=POOL_SIZE)
+    base_router = ClusterRouter(orch, config=global_config.clone(
+        fallback_link_latency_us=FALLBACK_LATENCY_US,
+        fallback_pool_size=0,
+        fallback_one_sided=False))
+    pool_router = ClusterRouter(orch, config=global_config.clone(
+        fallback_link_latency_us=FALLBACK_LATENCY_US,
+        fallback_pool_size=POOL_SIZE))
     base_router.register("/pod0/bulk", ch, pod="pod0")
     pool_router.register("/pod0/bulk", ch, pod="pod0")
 

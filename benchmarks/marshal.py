@@ -33,6 +33,7 @@ import statistics
 import time
 from typing import List, Tuple
 
+from repro.configs import global_config
 from repro.core import Orchestrator, RPC, build_graph
 from repro.core.router import ClusterRouter
 
@@ -107,7 +108,8 @@ def bench(n: int = 4000) -> List[Tuple[str, float, str]]:
                  "seal + sandboxed reader per dereference"))
 
     # -- the same surface, cross-pod: transparent serialize-by-value ------
-    router = ClusterRouter(orch, fallback_link_latency_us=0.0)
+    router = ClusterRouter(orch, config=global_config.clone(
+        fallback_link_latency_us=0.0))
     router.register("/pod0/marshal", ch, pod="pod0")
     same = router.connect("/pod0/marshal", pid=3, pod="pod0")
     cross = router.connect("/pod0/marshal", pid=4, pod="pod9")

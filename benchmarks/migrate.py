@@ -1,0 +1,273 @@
+"""Migrate suite — live endpoint migration under open traffic.
+
+Topology: one ``MigKV`` service served from a lifecycle ``Endpoint``
+handle on pod0 and registered with the router; ``N_CLIENTS`` threads
+drive mixed traffic (puts/gets/streaming scans/futures) through routed
+stubs. When the run crosses ``MIGRATE_AT`` progress, the main thread
+calls ``router.migrate`` — snapshot → warm restore → quiesce/drain
+(typed ``Overloaded`` sheds) → stop-and-copy state sync → single lease
+handoff epoch — while the clients keep going. RoutedConnections re-wire
+on the generation bump; in-flight futures settle exactly once.
+
+Sentinel keys written before the migration are read back after it
+through the (re-wired) stubs, proving the restored replica serves the
+source's state, not a cold instance.
+
+Gates (all ratios must be ≥ 1.0 in BENCH_migrate.json):
+
+  reply_integrity       1.0 iff zero lost replies and zero bad echoes —
+                        every started request settles exactly once, no
+                        reply duplicated or dropped across the handoff
+  state_intact          1.0 iff every sentinel key reads back its
+                        pre-migration value from the restored replica
+  handoff_single_epoch  1.0 iff the migration bumped the endpoint
+                        generation exactly once (no double failover)
+  p99_blip_headroom     MIGRATE_P99_GATE_MS / p99 completion latency of
+                        OK ops across the whole run (migration window
+                        included) — the blip must stay bounded
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Dict, List, Tuple
+
+from repro.configs import global_config
+from repro.core import (
+    Channel,
+    ChannelError,
+    ClusterRouter,
+    DeadlineExceeded,
+    Endpoint,
+    Orchestrator,
+    Overloaded,
+    method,
+    service,
+)
+
+MIGRATE_P99_GATE_MS = 200.0   # generous: the drain blip, not steady state
+N_CLIENTS = 4
+N_SENTINELS = 64
+SCAN_TOKENS = 8
+MIGRATE_AT = 0.4              # progress fraction that triggers migrate
+ENDPOINT = "/pod0/migkv"
+RETRY_AFTER_S = 0.002
+
+
+@service(name="migkv")
+class MigKV:
+    """A tiny KV: byval + retry keeps every method failover-retry-safe
+    across the handoff; scan streams its reply so a mid-stream migrate
+    exercises the documented stream-failover contract."""
+
+    def __init__(self):
+        self.data: Dict[int, int] = {}
+        self.n_puts = 0
+
+    @method(byval=True, deadline=2.0, retry=3)
+    def put(self, ctx, k, v):
+        self.data[int(k)] = int(v)
+        self.n_puts += 1
+        return int(v)
+
+    @method(byval=True, deadline=2.0, retry=3)
+    def get(self, ctx, k):
+        return self.data.get(int(k), -1)
+
+    @method(byval=True, deadline=2.0, streaming=True)
+    def scan(self, ctx, n):
+        for i in range(int(n)):
+            yield i
+
+
+class _Buckets:
+    """Per-client outcome accounting — every started op lands in exactly
+    ONE bucket, so `lost = started - sum(buckets)` catches a reply that
+    vanished or settled twice across the handoff."""
+
+    __slots__ = ("started", "ok", "shed", "deadline", "chaos",
+                 "unexpected", "mism", "lat_ms")
+
+    def __init__(self):
+        self.started = 0
+        self.ok = 0
+        self.shed = 0        # typed Overloaded (drain-window sheds)
+        self.deadline = 0    # typed DeadlineExceeded
+        self.chaos = 0       # typed ChannelError (mid-stream failover)
+        self.unexpected = 0  # anything else — fails reply_integrity
+        self.mism = 0        # wrong echo/chunk — fails reply_integrity
+        self.lat_ms: List[float] = []
+
+
+def _client(idx: int, stub, ops: int, rec: _Buckets,
+            done: List[int], seed: int) -> None:
+    rng = random.Random(seed)
+    attempted: Dict[int, set] = {}   # key -> every value ever dispatched
+    for j in range(ops):
+        r = rng.random()
+        rec.started += 1
+        t0 = time.perf_counter()
+        try:
+            if r < 0.40:
+                k = 1000 + idx * 100_000 + (j % 40)
+                v = idx * 1_000_000 + j
+                attempted.setdefault(k, set()).add(v)
+                got = stub.put(k, v)
+                valid = got == v
+            elif r < 0.80:
+                k = 1000 + idx * 100_000 + rng.randrange(40)
+                got = stub.get(k)
+                vals = attempted.get(k, ())
+                # -1 is legal after dispatched puts: those puts may have
+                # been shed in the drain window
+                valid = got == -1 or got in vals
+            elif r < 0.90:
+                got = stub.scan(SCAN_TOKENS)   # sync = buffered chunks
+                valid = got == list(range(SCAN_TOKENS))
+            else:
+                k = 1000 + idx * 100_000 + rng.randrange(40)
+                fut = stub.get.future(k)
+                got = fut.result(timeout=4.0)
+                vals = attempted.get(k, ())
+                valid = got == -1 or got in vals
+            lat = (time.perf_counter() - t0) * 1e3
+            if valid:
+                rec.ok += 1
+                rec.lat_ms.append(lat)
+            else:
+                rec.mism += 1
+        except Overloaded:
+            rec.shed += 1
+        except DeadlineExceeded:
+            rec.deadline += 1
+        except ChannelError:
+            rec.chaos += 1
+        except Exception:
+            rec.unexpected += 1
+        finally:
+            done[idx] = j + 1
+
+
+def _percentile(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[i]
+
+
+def bench(ops_per_client: int = 160, seed: int = 0
+          ) -> List[Tuple[str, float, str]]:
+    # tuning comes from the central config, not per-call kwargs
+    cfg = global_config.clone(migrate_retry_after_s=RETRY_AFTER_S)
+    orch = Orchestrator()
+    router = ClusterRouter(orch, config=cfg)
+    kv = MigKV()
+
+    src = Channel(orch, ENDPOINT, server_pid=1,
+                  heap_pages=1 << 11, config=cfg)
+    endpoint = Endpoint.serve(src, kv)
+    router.register(ENDPOINT, src, pod="pod0")
+
+    client_pids = [100 + i for i in range(N_CLIENTS)]
+    stubs = [router.stub(ENDPOINT, MigKV, pid=p, pod="pod0")
+             for p in client_pids]
+
+    # sentinel state the restored replica must still serve
+    sentinels = {k: k * 31 + 7 for k in range(N_SENTINELS)}
+    for k, v in sentinels.items():
+        stubs[0].put(k, v)
+
+    total = N_CLIENTS * ops_per_client
+    done = [0] * N_CLIENTS
+    recs = [_Buckets() for _ in range(N_CLIENTS)]
+    threads = [
+        threading.Thread(target=_client, daemon=True,
+                         args=(i, stubs[i], ops_per_client, recs[i],
+                               done, seed * 1000 + i))
+        for i in range(N_CLIENTS)
+    ]
+    for t in threads:
+        t.start()
+
+    # trigger the migration mid-run, then let the traffic finish
+    while sum(done) < total * MIGRATE_AT:
+        time.sleep(0.001)
+    t0 = time.perf_counter()
+    report = router.migrate(ENDPOINT, dst_pod="pod0")
+    migrate_ms = (time.perf_counter() - t0) * 1e3
+    for t in threads:
+        t.join()
+
+    # post-handoff: the SAME stubs (re-wired by the generation bump)
+    # must read back every sentinel from the restored replica
+    intact = sum(1 for k, v in sentinels.items()
+                 if stubs[0].get(k) == v)
+    dst_instance = report.restored.instance if report.restored else None
+    for st in stubs:
+        st.close()
+    if report.restored is not None:
+        report.restored.close()
+
+    started = sum(r.started for r in recs)
+    ok = sum(r.ok for r in recs)
+    shed = sum(r.shed for r in recs)
+    deadline = sum(r.deadline for r in recs)
+    chaos = sum(r.chaos for r in recs)
+    unexpected = sum(r.unexpected for r in recs)
+    mism = sum(r.mism for r in recs)
+    accounted = ok + shed + deadline + chaos + unexpected + mism
+    lost = started - accounted
+
+    lats = sorted(v for r in recs for v in r.lat_ms)
+    p50 = _percentile(lats, 0.50)
+    p99 = _percentile(lats, 0.99)
+
+    reply_integrity = 1.0 if (lost == 0 and mism == 0
+                              and unexpected == 0 and ok > 0) else 0.0
+    state_intact = 1.0 if intact == N_SENTINELS else 0.0
+    handoff_single_epoch = 1.0 if report.handoff_epochs == 1 else 0.0
+    p99_blip_headroom = MIGRATE_P99_GATE_MS / p99 if p99 > 0 else 0.0
+
+    return [
+        ("migrate_ops_ok", float(ok), f"of {started} started"),
+        ("migrate_p50_ms", p50, "OK-op completion latency"),
+        ("migrate_p99_ms", p99,
+         f"gate {MIGRATE_P99_GATE_MS}ms, migration window included"),
+        ("migrate_shed", float(shed),
+         "typed Overloaded in the drain window"),
+        ("migrate_deadline", float(deadline), "typed DeadlineExceeded"),
+        ("migrate_chaos_errors", float(chaos),
+         "typed ChannelError (mid-stream failover)"),
+        ("migrate_unexpected", float(unexpected), "MUST be 0"),
+        ("migrate_lost", float(lost), "started - accounted, MUST be 0"),
+        ("migrate_mismatched", float(mism),
+         "bad echoes/chunks, MUST be 0"),
+        ("migrate_duration_ms", migrate_ms,
+         "snapshot -> restore -> drain -> handoff wall time"),
+        ("migrate_drain_shed", float(report.shed_during_drain),
+         "requests the quiesce gate turned away"),
+        ("migrate_synced_attrs", float(report.synced_attrs),
+         "stop-and-copy attributes applied after drain"),
+        ("migrate_drained", 1.0 if report.drained else 0.0,
+         "source idle before handoff"),
+        ("migrate_sentinels_intact", float(intact),
+         f"of {N_SENTINELS} pre-migration keys "
+         f"(dst puts={getattr(dst_instance, 'n_puts', -1)})"),
+        ("migrate_handoff_epochs", float(report.handoff_epochs),
+         "generation bumps, MUST be exactly 1"),
+        ("migrate_reply_integrity", reply_integrity,
+         "1.0 iff zero lost + zero mismatched + zero untyped"),
+        ("migrate_state_intact", state_intact,
+         "1.0 iff every sentinel survived the handoff"),
+        ("migrate_handoff_single_epoch", handoff_single_epoch,
+         "1.0 iff exactly one generation bump"),
+        ("migrate_p99_blip_headroom", p99_blip_headroom,
+         "gate_ms/p99_ms >= 1.0"),
+    ]
+
+
+if __name__ == "__main__":
+    for name, val, derived in bench():
+        print(f"{name},{val:.3f},{derived}")

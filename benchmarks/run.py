@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV. Roofline terms come from the
 dry-run artifacts (see repro.roofline.analysis / EXPERIMENTS.md) — this
 harness measures the host-side RPCool control plane for real.
 
-Eight suites additionally write JSON trajectory artifacts, all carrying
+Nine suites additionally write JSON trajectory artifacts, all carrying
 the shared schema fields ``suite`` / ``gate`` / ``measured`` (validated
 by ``--check-schema`` and tests/test_bench_schema.py):
 
@@ -16,6 +16,7 @@ by ``--check-schema`` and tests/test_bench_schema.py):
   soak     → BENCH_soak.json      chaos-injected mixed traffic, p99-gated
   serve    → BENCH_serve.json     continuous-batching decode, 8 clients
   bulk     → BENCH_bulk.json      pooled one-sided links vs single-link
+  migrate  → BENCH_migrate.json   live endpoint migration under traffic
 
 Usage:
     python -m benchmarks.run                     # all suites
@@ -42,6 +43,7 @@ STREAM_JSON_DEFAULT = "BENCH_stream.json"
 SOAK_JSON_DEFAULT = "BENCH_soak.json"
 SERVE_JSON_DEFAULT = "BENCH_serve.json"
 BULK_JSON_DEFAULT = "BENCH_bulk.json"
+MIGRATE_JSON_DEFAULT = "BENCH_migrate.json"
 
 # The suite registry — the single source of truth for suite names
 # (--suite validation, --list-suites, CI smoke steps). Keys are the CLI
@@ -55,6 +57,7 @@ SUITES = [
     ("soak", "soak (chaos-injected mixed traffic, p99 + integrity gates)"),
     ("serve", "serve (continuous-batching multi-tenant decode)"),
     ("bulk", "bulk (pooled one-sided fallback links vs single-link)"),
+    ("migrate", "migrate (live endpoint migration under open traffic)"),
     ("cooldb", "cooldb (Fig. 11)"),
     ("ycsb", "ycsb_kv (Figs. 9/10)"),
     ("micro", "microservices (Figs. 12/13)"),
@@ -335,6 +338,43 @@ def _write_serve_json(rows, path: str, iters: int) -> None:
           f"peak_batch={int(peak)}", file=sys.stderr)
 
 
+def _write_migrate_json(rows, path: str, iters: int) -> None:
+    by_name = {name: us for name, us, _ in rows}
+    derived = {name: d for name, us, d in rows}
+    from .migrate import MIGRATE_P99_GATE_MS
+    measured = {
+        "reply_integrity": by_name.get("migrate_reply_integrity", 0.0),
+        "state_intact": by_name.get("migrate_state_intact", 0.0),
+        "handoff_single_epoch": by_name.get(
+            "migrate_handoff_single_epoch", 0.0),
+        "p99_blip_headroom": by_name.get("migrate_p99_blip_headroom", 0.0),
+    }
+    doc = {
+        "suite": "migrate (live endpoint migration under open traffic)",
+        "iters": iters,
+        "unit": "mixed (ms rows for latency, counts elsewhere)",
+        "rows": by_name,
+        "derived": derived,
+        "p99_gate_ms": MIGRATE_P99_GATE_MS,
+        "migration_ms": by_name.get("migrate_duration_ms", 0.0),
+        "handoff_epochs": int(by_name.get("migrate_handoff_epochs", -1)),
+        "target_ratio": 1.0,
+        "meets_target": all(v >= 1.0 for v in measured.values()),
+        "gate": {"metric": "min(reply_integrity, state_intact, "
+                           "handoff_single_epoch, p99_blip_headroom)",
+                 "op": ">=", "target": 1.0},
+        "measured": measured,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}: "
+          f"lost={int(by_name.get('migrate_lost', -1))} "
+          f"mismatched={int(by_name.get('migrate_mismatched', -1))} "
+          f"epochs={doc['handoff_epochs']} "
+          f"p99={by_name.get('migrate_p99_ms', 0.0):.1f}ms "
+          f"migration={doc['migration_ms']:.1f}ms", file=sys.stderr)
+
+
 def check_schema(pattern: str = "BENCH_*.json") -> int:
     """Validate that every benchmark artifact carries the shared schema
     fields. Returns the number of files checked; raises SystemExit on a
@@ -387,8 +427,8 @@ def main(argv=None) -> None:
         return
 
     from . import bulk, cluster, cooldb, kv_handoff, marshal, \
-        microservices, noop_rtt, op_latency, pipeline, serve, soak, \
-        stream, ycsb_kv
+        microservices, migrate, noop_rtt, op_latency, pipeline, serve, \
+        soak, stream, ycsb_kv
 
     def noop_bench():
         return noop_rtt.bench(n=args.iters, thr_iters=args.thr_iters)
@@ -429,6 +469,13 @@ def main(argv=None) -> None:
         # arm by design; 8 interleaved windows give a stable median
         return bulk.bench(windows=max(4, min(args.iters, 8)))
 
+    def migrate_bench():
+        # per-client op count: the migration fires on a progress
+        # fraction, so a tiny CI run still crosses the handoff with
+        # traffic on both sides; the integrity gates (zero lost replies,
+        # one handoff epoch, sentinels intact) are iteration-independent
+        return migrate.bench(ops_per_client=max(40, min(args.iters, 160)))
+
     benches = {
         "noop": noop_bench,
         "op": op_latency.bench,
@@ -438,6 +485,7 @@ def main(argv=None) -> None:
         "soak": soak_bench,
         "serve": serve_bench,
         "bulk": bulk_bench,
+        "migrate": migrate_bench,
         "cooldb": cooldb.bench,
         "ycsb": ycsb_kv.bench,
         "micro": microservices.bench,
@@ -503,6 +551,11 @@ def main(argv=None) -> None:
                                  and args.json != NOOP_JSON_DEFAULT) \
                 else BULK_JSON_DEFAULT
             _write_bulk_json(rows, path, max(4, min(args.iters, 8)))
+        elif key == "migrate":
+            path = args.json if (args.suite == "migrate"
+                                 and args.json != NOOP_JSON_DEFAULT) \
+                else MIGRATE_JSON_DEFAULT
+            _write_migrate_json(rows, path, max(40, min(args.iters, 160)))
     if failures:
         sys.exit(1)
 

@@ -1,16 +1,30 @@
-"""Assigned architecture configs (``--arch <id>``) + smoke variants.
+"""Central runtime config + assigned architecture configs.
 
-Each module defines ``CONFIG`` (the exact published config) and
-``smoke()`` (a reduced same-family variant for CPU tests). The registry
-maps arch ids to modules.
+``ReproConfig``/``global_config`` consolidate the runtime tuning knobs
+(admission, streaming, fallback transport, quotas, migration) that
+subsystem constructors read their defaults from.
+
+Each architecture module defines ``CONFIG`` (the exact published
+config) and ``smoke()`` (a reduced same-family variant for CPU tests).
+The registry maps arch ids to modules; the model machinery is imported
+lazily so ``repro.core`` can load ``repro.configs`` without dragging in
+the accelerator stack.
 """
 
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import TYPE_CHECKING, Dict, List
 
-from ..models.config import ModelConfig
+from .global_config import ReproConfig, global_config
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..models.config import ModelConfig
+
+__all__ = [
+    "ReproConfig", "global_config", "ARCH_IDS", "ALIASES",
+    "get_config", "get_smoke_config", "all_configs",
+]
 
 ARCH_IDS: List[str] = [
     "mamba2_1p3b",

@@ -12,7 +12,12 @@ Layers (bottom-up):
   orchestrator leases, quotas, registry, pods, failure GC
   fallback    two-node software-coherent DSM (RDMA/DCN analogue)
   router      ClusterRouter: hierarchical endpoint names → CXL or
-              fallback transport, lease heartbeats, replica failover
+              fallback transport, lease heartbeats, replica failover,
+              wildcard prefix stubs, live migration (migrate)
+  lifecycle   Endpoint handle: serve/quiesce/drain/close states over
+              Channel.serve + ServerLoop
+  snapshot    snapshot/restore: portable service checkpoints → warm
+              replicas (the migrate primitive)
   serial      serializing wire format (gRPC analogue: the fallback
               route's by-value payload + the Fig. 11 baseline)
   marshal     typed zero-copy data plane: conn.invoke(fn, *values),
@@ -60,8 +65,13 @@ from .channel import (
     F_TYPED,
 )
 from .fallback import DSMLink, DSMNode, FallbackConnection
-from .router import BalancedConnection, ClusterRouter, Endpoint, \
-    RoutedConnection, RoutedRpcFuture, RoutedRpcStream
+from .router import BalancedConnection, ClusterRouter, EndpointRecord, \
+    MigrationReport, RoutedConnection, RoutedRpcFuture, RoutedRpcStream, \
+    WildcardConnection
+from .lifecycle import CLOSED, DRAINED, Endpoint, QUIESCED, QuiesceGate, \
+    SERVING
+from .snapshot import RestoredEndpoint, Snapshot, restore, snapshot, \
+    sync_state
 from .chaos import ChaosInjector, Fault, FaultPlan, KINDS
 from . import containers, serial
 from . import marshal
@@ -99,8 +109,11 @@ __all__ = [
     "ServerCtx", "ServerLoop", "E_DEADLINE", "E_OVERLOAD", "F_BYVAL",
     "F_DEADLINE", "F_SANDBOXED", "F_SEALED", "F_STREAM", "F_TYPED",
     "DSMLink", "DSMNode", "FallbackConnection",
-    "BalancedConnection", "ClusterRouter", "Endpoint", "RoutedConnection",
-    "RoutedRpcFuture", "RoutedRpcStream",
+    "BalancedConnection", "ClusterRouter", "EndpointRecord",
+    "MigrationReport", "RoutedConnection",
+    "RoutedRpcFuture", "RoutedRpcStream", "WildcardConnection",
+    "CLOSED", "DRAINED", "Endpoint", "QUIESCED", "QuiesceGate", "SERVING",
+    "RestoredEndpoint", "Snapshot", "restore", "snapshot", "sync_state",
     "ChaosInjector", "Fault", "FaultPlan", "KINDS",
     "containers", "serial", "marshal",
     "ArgView", "FallbackRpcFuture", "FallbackRpcStream", "GraphRef",

@@ -42,6 +42,7 @@ from .orchestrator import Orchestrator
 from .sandbox import SandboxManager
 from .scope import Scope, ScopePool, create_scope, implicit_scope
 from .seal import SealManager
+from ..configs.global_config import ReproConfig, global_config
 
 # Lazily-bound marshalling module (core/marshal.py imports this module for
 # the flag constants, so the import direction must stay marshal → channel;
@@ -399,14 +400,18 @@ class Connection:
         # connection's in-flight futures — one poll duty cycle). Public:
         # assign a BusyWaitPolicy(fixed_sleep_us=...) to pin the client
         # poll cadence, exactly like passing a policy to listen().
-        self.wait_policy = BusyWaitPolicy()
+        # Defaults come from the channel's ReproConfig; assigning the
+        # attributes afterwards still overrides per connection.
+        cfg = getattr(channel, "config", None) or global_config
+        self.wait_policy = BusyWaitPolicy(
+            fixed_sleep_us=cfg.wait_fixed_sleep_us, window=cfg.wait_window)
         # bounded admission queue for a full ring (§5.4 backpressure):
         # a post that wraps onto an in-flight slot parks up to
         # ``admission_wait_s`` (or the remaining descriptor deadline,
         # whichever is shorter) for at most ``admission_max_waiters``
         # concurrent parkers, then surfaces typed ``Overloaded``.
-        self.admission_wait_s = 0.05
-        self.admission_max_waiters = 8
+        self.admission_wait_s = cfg.admission_wait_s
+        self.admission_max_waiters = cfg.admission_max_waiters
         self._admission_waiters = 0
         # round-trip stats
         self.n_calls = 0
@@ -811,9 +816,13 @@ class Channel:
 
     def __init__(self, orch: Orchestrator, name: str, server_pid: int,
                  heap_pages: int = 4096, page_size: int = 4096,
-                 shared_heap: bool = False):
+                 shared_heap: bool = False,
+                 config: Optional[ReproConfig] = None):
         self.orch = orch
         self.name = name
+        # tuning defaults for this channel and its connections; explicit
+        # kwargs / attribute assignment still override per instance
+        self.config = config or global_config
         self.server_pid = server_pid
         self.heap_pages = heap_pages
         self.page_size = page_size
@@ -841,7 +850,13 @@ class Channel:
         # transport whose stream generators share one scheduler (e.g.
         # continuous batching) sets 1 so all live streams advance in
         # lockstep, one batched step per sweep.
-        self.stream_pump_burst: Optional[int] = None
+        self.stream_pump_burst: Optional[int] = self.config.stream_pump_burst
+        # the served instance (recorded by serve()) — what snapshot()
+        # checkpoints and the lifecycle Endpoint handle manages
+        self.served_instance = None
+        self.served_def = None
+        self.serve_interceptors: Tuple = ()
+        self.lifecycle = None  # back-ref set by lifecycle.Endpoint
         orch.register_channel(name, self)
 
     # -- server API (Fig. 6 left) -------------------------------------------
@@ -866,6 +881,9 @@ class Channel:
         from .service import service_def
         sdef = service_def(instance)
         sdef.serve(self, instance, interceptors)
+        self.served_instance = instance
+        self.served_def = sdef
+        self.serve_interceptors = tuple(interceptors)
         return sdef
 
     def accept(self, client_pid: int, ring_capacity: int = 256) -> Connection:

@@ -291,7 +291,10 @@ class FallbackConnection:
                  functions: Optional[Dict[int, Callable]] = None,
                  heap_id: int = 1, link: Optional[DSMLink] = None,
                  one_sided: bool = True,
-                 window_seal_batching: bool = True):
+                 window_seal_batching: bool = True,
+                 config=None):
+        from ..configs.global_config import global_config
+        cfg = config or global_config
         # ``link`` shares an existing DSMLink (heap replicas + ownership
         # table) with other connections — the LinkPool multiplexing that
         # lifts the paper's one-client-per-link limitation. Without it
@@ -347,10 +350,11 @@ class FallbackConnection:
         # bounded admission queue for a full ring (§5.4 backpressure) —
         # same contract as Connection: park up to admission_wait_s (or
         # the remaining descriptor deadline) before typed Overloaded
-        self.admission_wait_s = 0.05
-        self.admission_max_waiters = 8
+        self.admission_wait_s = cfg.admission_wait_s
+        self.admission_max_waiters = cfg.admission_max_waiters
         self._admission_waiters = 0
-        self.wait_policy = BusyWaitPolicy()
+        self.wait_policy = BusyWaitPolicy(
+            fixed_sleep_us=cfg.wait_fixed_sleep_us, window=cfg.wait_window)
         # server-side pre-dispatch admission gate (§5.4); wired by
         # ServiceDef.serve when an AdmissionInterceptor is registered
         self.admission = None

@@ -298,6 +298,29 @@ def _marshal_pool(conn: Connection) -> ScopePool:
     return pool
 
 
+def _pool_recycle(conn: Connection, scope: Scope, pooled: bool,
+                  seal_idx: Optional[int] = None) -> None:
+    """Return a marshal scope to its pool, tolerating a connection that
+    closed mid-call (live migration / replica failover tears the wires
+    down while a straggler op is still in flight). With the pool already
+    gone the scope is destroyed instead, so its page range never leaks
+    into the dying heap."""
+    if pooled:
+        pool = conn._marshal_pool
+        if pool is not None:
+            if seal_idx is not None:
+                pool.push_sealed(scope, seal_idx)
+            else:
+                pool.push(scope)
+        elif scope.live:
+            try:
+                scope.destroy()
+            except Exception:
+                pass  # already-torn-down heap; nothing left to leak into
+    elif scope.live:
+        scope.destroy()
+
+
 def _fill_pooled(conn: Connection, pid: int, fill) -> Tuple[Any, Scope, bool]:
     """Run ``fill(scope)`` in a pooled marshal scope, retrying in a
     geometrically larger dedicated scope on overflow. Returns
@@ -552,10 +575,7 @@ class RpcFuture:
             return
         self._scope_released = True
         scope = self._scope
-        if self._pooled:
-            self.conn._marshal_pool.push(scope)
-        elif scope.live:
-            scope.destroy()
+        _pool_recycle(self.conn, scope, self._pooled)
 
     def _fail(self, exc: BaseException) -> None:
         self._state = _FAILED
@@ -670,10 +690,7 @@ def invoke_async_cxl(conn: Connection, fn_id: int, args: Tuple,
                                 sandboxed=sandboxed, flags_extra=F_TYPED,
                                 deadline_us=deadline_us)
     except BaseException:
-        if pooled:
-            conn._marshal_pool.push(scope)
-        else:
-            scope.destroy()
+        _pool_recycle(conn, scope, pooled)
         raise
     conn.n_invokes += 1
     conn.marshal_bytes += scope.used_bytes()
@@ -1373,10 +1390,7 @@ class RpcStream:
             return
         self._scope_released = True
         scope = self._scope
-        if self._pooled:
-            self.conn._marshal_pool.push(scope)
-        elif scope.live:
-            scope.destroy()
+        _pool_recycle(self.conn, scope, self._pooled)
 
 
 def _marshal_stream(conn: Connection, args: Tuple, gen_tag: int,
@@ -1445,10 +1459,7 @@ def _post_stream(conn, fn_id, anchor, scope, pooled, sealed, sandboxed,
                                 flags_extra=F_TYPED | F_STREAM,
                                 deadline_us=deadline_us)
     except BaseException:
-        if pooled:
-            conn._marshal_pool.push(scope)
-        else:
-            scope.destroy()
+        _pool_recycle(conn, scope, pooled)
         raise
     conn.n_invokes += 1
     conn.marshal_bytes += scope.used_bytes()
@@ -1751,13 +1762,11 @@ def invoke_cxl(conn: Connection, fn_id: int, args: Tuple,
                      sandboxed=sandboxed, batch_release=batch_release,
                      flags_extra=F_TYPED, **kw)
     finally:
-        if not pooled:
-            scope.destroy()
-        elif sealed and batch_release:
+        if pooled and sealed and batch_release:
             # pages stay write-protected until the batch flush (§5.3)
-            conn._marshal_pool.push_sealed(scope, conn.last_seal_idx)
+            _pool_recycle(conn, scope, True, seal_idx=conn.last_seal_idx)
         else:
-            conn._marshal_pool.push(scope)
+            _pool_recycle(conn, scope, pooled)
     return _read_reply_graph(conn, ret)
 
 
@@ -1957,10 +1966,7 @@ def invoke_serialized(conn: Connection, fn_id: int, args: Tuple,
                      sandboxed=sandboxed, flags_extra=F_TYPED | F_BYVAL,
                      **kw)
     finally:
-        if pooled:
-            conn._marshal_pool.push(scope)
-        else:
-            scope.destroy()
+        _pool_recycle(conn, scope, pooled)
     raw = _read_blob(conn.heap, ret, conn.heap.page_size)
     _recycle_reply(conn, ret)
     return serial.decode(raw)

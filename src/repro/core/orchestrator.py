@@ -50,6 +50,10 @@ class Orchestrator:
         self.lease_ttl = lease_ttl
 
         self._next_heap_id = 1
+        # pid mint for processes the orchestrator itself brings up (e.g.
+        # warm replicas restored from a snapshot) — high base so it never
+        # collides with caller-chosen pids
+        self._next_pid = 1_000_000
         self.heaps: Dict[int, SharedHeap] = {}
         self.channels: Dict[str, object] = {}  # name -> Channel
         self._leases: Dict[Tuple[int, int], Lease] = {}  # (pid, heap) -> lease
@@ -94,6 +98,13 @@ class Orchestrator:
         deployments never register pods and always get the CXL path)."""
         pa, pb = self._pod_of.get(pid_a), self._pod_of.get(pid_b)
         return pa is None or pb is None or pa == pb
+
+    def alloc_pid(self) -> int:
+        """A fresh process id for an orchestrator-spawned worker (a
+        restored snapshot replica); monotonically unique per instance."""
+        pid = self._next_pid
+        self._next_pid += 1
+        return pid
 
     def alloc_heap_id(self) -> int:
         """Reserve a cluster-unique heap id without creating a heap here

@@ -37,20 +37,33 @@ from __future__ import annotations
 
 import random
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
 from . import addr as gaddr
 from .channel import Channel, Connection
-from .errors import ChannelError, DeadlineExceeded, Overloaded
+from .errors import ChannelError, DeadlineExceeded, InvalidPointer, \
+    Overloaded
 from .fallback import FallbackConnection, LinkPool
 from .orchestrator import Orchestrator
 from .scope import Scope
+from ..configs.global_config import ReproConfig, global_config
+
+# What the failover-retry guards treat as "the old wire died under this
+# call". A bare InvalidPointer normally surfaces (it is a caller bug),
+# but when the endpoint's generation moved mid-call it means the reply
+# or argument pages were reclaimed with the migrated-away/dead server —
+# the same condition the lease machinery signals with ChannelError.
+_FAILOVER_ERRORS = (ChannelError, InvalidPointer)
 
 
 @dataclass
-class Endpoint:
-    """A hierarchical name bound to a primary channel + replica chain."""
+class EndpointRecord:
+    """A hierarchical name bound to a primary channel + replica chain.
+
+    (The router's *registry record*; the serve-side lifecycle handle is
+    ``repro.core.lifecycle.Endpoint``.)"""
 
     name: str
     chain: List[Channel] = field(default_factory=list)
@@ -67,31 +80,66 @@ class Endpoint:
         return self.chain[1:]
 
 
+@dataclass
+class MigrationReport:
+    """What ``ClusterRouter.migrate`` did, for gates and ops logs."""
+
+    name: str
+    src_channel: str
+    dst_channel: str
+    src_pid: int
+    dst_pid: int
+    dst_pod: Optional[str]
+    generation_before: int
+    generation_after: int
+    drained: bool            # source went idle within the drain budget
+    shed_during_drain: int   # typed Overloaded sheds while quiesced
+    synced_attrs: int        # stop-and-copy attributes re-synced
+    duration_s: float
+    restored: object = None  # the RestoredEndpoint now serving
+
+    @property
+    def handoff_epochs(self) -> int:
+        """Generation bumps this migration cost (the gate: exactly 1)."""
+        return self.generation_after - self.generation_before
+
+
 class ClusterRouter:
     """Names → transports: the layer every client connects through."""
 
     def __init__(self, orch: Orchestrator,
-                 fallback_pages: int = 4096,
-                 fallback_link_latency_us: float = 3.0,
-                 fallback_ring_capacity: int = 64,
-                 fallback_pool_size: int = 2,
-                 fallback_stripe: str = "rr",
-                 fallback_one_sided: bool = True):
+                 fallback_pages: Optional[int] = None,
+                 fallback_link_latency_us: Optional[float] = None,
+                 fallback_ring_capacity: Optional[int] = None,
+                 fallback_pool_size: Optional[int] = None,
+                 fallback_stripe: Optional[str] = None,
+                 fallback_one_sided: Optional[bool] = None,
+                 config: Optional[ReproConfig] = None):
+        # knob defaults come from the central ReproConfig; an explicit
+        # kwarg (anything not None) still overrides per router
+        cfg = config or global_config
+        self.config = cfg
         self.orch = orch
-        self.fallback_pages = fallback_pages
-        self.fallback_link_latency_us = fallback_link_latency_us
-        self.fallback_ring_capacity = fallback_ring_capacity
+        self.fallback_pages = cfg.fallback_pages \
+            if fallback_pages is None else fallback_pages
+        self.fallback_link_latency_us = cfg.fallback_link_latency_us \
+            if fallback_link_latency_us is None else fallback_link_latency_us
+        self.fallback_ring_capacity = cfg.fallback_ring_capacity \
+            if fallback_ring_capacity is None else fallback_ring_capacity
         # cross-pod transport shape: ``fallback_pool_size >= 1`` shares a
         # per-pod-pair LinkPool across every client the router routes to
         # that pod (striped by ``fallback_stripe``); 0 restores the
         # legacy one-private-link-per-connect plane. ``fallback_one_sided``
         # selects cMPI put/get bulk framing vs legacy send/ack flights.
-        self.fallback_pool_size = fallback_pool_size
-        self.fallback_stripe = fallback_stripe
-        self.fallback_one_sided = fallback_one_sided
+        self.fallback_pool_size = cfg.fallback_pool_size \
+            if fallback_pool_size is None else fallback_pool_size
+        self.fallback_stripe = cfg.fallback_stripe \
+            if fallback_stripe is None else fallback_stripe
+        self.fallback_one_sided = cfg.fallback_one_sided \
+            if fallback_one_sided is None else fallback_one_sided
         # (client pod, server pod, page_size) -> shared LinkPool
         self._link_pools: Dict[Tuple, LinkPool] = {}
-        self.endpoints: Dict[str, Endpoint] = {}
+        self.endpoints: Dict[str, EndpointRecord] = {}
         self._conns: List["RoutedConnection"] = []
         # serving pids whose lease lapsed (Fig. 5a): the replica
         # balancer drops these from its live set; re-registering a
@@ -106,6 +154,7 @@ class ClusterRouter:
         self.n_cxl_connects = 0
         self.n_fallback_connects = 0
         self.n_failovers = 0
+        self.n_migrations = 0
         orch.on_failure(self._on_lease_lapse)
 
     # -- cross-pod link pooling (one shared plane per pod pair) --------------
@@ -134,7 +183,7 @@ class ClusterRouter:
 
     # -- registration --------------------------------------------------------
     def register(self, name: str, channel: Channel,
-                 pod: Optional[str] = None) -> Endpoint:
+                 pod: Optional[str] = None) -> EndpointRecord:
         """Publish ``channel`` under hierarchical endpoint ``name``.
 
         ``pod`` optionally assigns the serving pid's coherence domain at
@@ -150,7 +199,7 @@ class ClusterRouter:
         with self._lock:
             ep = self.endpoints.get(name)
             if ep is None:
-                ep = Endpoint(name, [channel])
+                ep = EndpointRecord(name, [channel])
                 self.endpoints[name] = ep
             elif channel not in ep.chain:
                 ep.chain.append(channel)
@@ -162,7 +211,7 @@ class ClusterRouter:
             self._track(channel.server_pid)
         return ep
 
-    def resolve(self, name: str) -> Endpoint:
+    def resolve(self, name: str) -> EndpointRecord:
         try:
             return self.endpoints[name]
         except KeyError:
@@ -174,12 +223,23 @@ class ClusterRouter:
 
     # -- connection ---------------------------------------------------------
     def connect(self, name: str, pid: int, ring_capacity: int = 256,
-                pod: Optional[str] = None) -> "RoutedConnection":
+                pod: Optional[str] = None):
         """Connect ``pid`` to endpoint ``name``; the transport (CXL ring
         vs RDMA-style fallback) is chosen purely from the orchestrator's
-        pod metadata for (client pid, endpoint's serving pid)."""
+        pod metadata for (client pid, endpoint's serving pid).
+
+        A trailing-``*`` name (``"/pod0/kv/*"``) returns a
+        ``WildcardConnection`` over every endpoint under the prefix —
+        resolved per dispatch via ``list_endpoints``, so siblings that
+        appear, drain, or migrate after the connect are picked up without
+        hardcoding names or pids."""
         if pod is not None:
             self.orch.assign_pod(pid, pod)
+        if name.endswith("*"):
+            wc = WildcardConnection(self, name, pid, ring_capacity)
+            with self._lock:
+                self._track(pid)
+            return wc
         ep = self.resolve(name)
         rc = RoutedConnection(self, ep, pid, ring_capacity)
         with self._lock:
@@ -207,6 +267,10 @@ class ClusterRouter:
         to one replica. ``balance_seed`` makes replica picks
         reproducible."""
         from .service import ServiceStub, service_def
+        if balance is not None and name.endswith("*"):
+            raise ChannelError(
+                "wildcard stubs pick an endpoint per dispatch already — "
+                "combine balance= with a concrete endpoint name")
         if balance is None:
             conn = self.connect(name, pid, ring_capacity, pod)
         else:
@@ -296,7 +360,7 @@ class ClusterRouter:
                 if not ep.dead and ep.channel.server_pid == pid:
                     self._fail_over(ep, pid)
 
-    def _fail_over(self, ep: Endpoint, dead_pid: int) -> None:
+    def _fail_over(self, ep: EndpointRecord, dead_pid: int) -> None:
         # skip over every replica known dead, not just the pid that
         # lapsed now — a standby that died earlier must not become the
         # active target
@@ -314,6 +378,114 @@ class ClusterRouter:
             if rc in self._conns:
                 self._conns.remove(rc)
 
+    # -- live migration (snapshot → warm replica → drain → handoff) ----------
+    def migrate(self, name: str, dst_pod: Optional[str] = None, *,
+                server_pid: Optional[int] = None,
+                drain_timeout_s: Optional[float] = None,
+                interceptors=None,
+                close_source: bool = True) -> "MigrationReport":
+        """Move a live endpoint to ``dst_pod`` without dropping traffic.
+
+        The sequence is pre-copy live migration over the §5.4 machinery:
+
+        1. **snapshot** the active channel (source keeps serving);
+        2. **restore** it as a warm replica on ``dst_pod`` — registered
+           on the endpoint's chain, served by its own lifecycle handle;
+        3. **quiesce** the source: new admissions shed typed
+           ``Overloaded`` (with a retry-after hint), in-flight work keeps
+           running; the quiesce gate is also pushed onto live fallback
+           targets, whose admission hook is captured at attach time;
+        4. **drain**: wait (bounded by ``drain_timeout_s``, default
+           ``config.migrate_drain_timeout_s``) for posted slots to be
+           served and stream chunk-chains to end;
+        5. **stop-and-copy**: re-sync service state mutated since the
+           snapshot onto the warm replica;
+        6. **handoff**: swap the replica in as the active channel and
+           bump the endpoint generation exactly once — every
+           ``RoutedConnection`` re-wires on its next call, unsettled
+           ``RoutedRpcFuture``s re-invoke against the replica, and
+           still-open streams surface the documented mid-stream
+           ``ChannelError``.
+
+        ``close_source=True`` then retires the source: through its
+        lifecycle ``Endpoint`` handle when it has one, else via
+        ``Channel.destroy()`` (if a caller-owned ``ServerLoop`` is still
+        sweeping the source, detach it first or pass
+        ``close_source=False``).
+        """
+        from .lifecycle import QuiesceGate, _channel_busy
+        from .snapshot import restore, snapshot, sync_state
+        cfg = self.config
+        t0 = time.monotonic()
+        with self._lock:
+            ep = self.resolve(name)
+            if ep.dead:
+                raise ChannelError(
+                    f"cannot migrate {name!r}: endpoint is dead "
+                    "(register a replica to revive it)")
+            src = ep.channel
+            gen_before = ep.generation
+        # 1–2. pre-copy: checkpoint + warm replica while source serves
+        snap = snapshot(src)
+        restored = restore(snap, pod=dst_pod, router=self, name=name,
+                           server_pid=server_pid,
+                           interceptors=interceptors, start=True)
+        dst = restored.channel
+        # 3. quiesce the source (new requests shed typed Overloaded)
+        gate = QuiesceGate(src.admission,
+                           retry_after_s=cfg.migrate_retry_after_s)
+        src.admission = gate
+        with self._lock:
+            for rc in self._conns:
+                # fallback targets capture the gate at attach time —
+                # push the quiesce gate onto every live one bridged to
+                # the source's handler table
+                if rc.transport == "fallback" and rc.target is not None \
+                        and rc.target.functions is src.functions:
+                    rc.target.admission = gate
+        # 4. drain: the source's serve loop settles what is in flight
+        timeout = cfg.migrate_drain_timeout_s \
+            if drain_timeout_s is None else drain_timeout_s
+        deadline = time.monotonic() + timeout
+        drained = False
+        while time.monotonic() < deadline:
+            if not _channel_busy(src):
+                drained = True
+                break
+            time.sleep(200e-6)
+        # 5. stop-and-copy: writes since the snapshot land on the replica
+        synced = sync_state(src.served_instance, restored.instance)
+        # 6. handoff: retire the source from the chain, ONE epoch bump
+        with self._lock:
+            if src in ep.chain:
+                ep.chain.remove(src)
+            if dst not in ep.chain:
+                ep.chain.append(dst)
+            ep.active_idx = ep.chain.index(dst)
+            ep.dead = False
+            ep.generation += 1
+            self.n_migrations += 1
+            src_pid = src.server_pid
+            if not any(ch.server_pid == src_pid
+                       for e2 in self.endpoints.values()
+                       for ch in e2.chain):
+                # nothing serves from the old pid anymore: the balancer
+                # must stop considering it (re-registering revives it)
+                self._dead_pids.add(src_pid)
+            gen_after = ep.generation
+        if close_source:
+            if src.lifecycle is not None:
+                src.lifecycle.close(timeout_s=timeout)
+            else:
+                src.destroy()
+        return MigrationReport(
+            name=name, src_channel=src.name, dst_channel=dst.name,
+            src_pid=src_pid, dst_pid=dst.server_pid, dst_pod=dst_pod,
+            generation_before=gen_before, generation_after=gen_after,
+            drained=drained, shed_during_drain=gate.n_shed,
+            synced_attrs=synced,
+            duration_s=time.monotonic() - t0, restored=restored)
+
 
 class RoutedConnection:
     """A client handle bound to an endpoint *name*, not a server.
@@ -326,7 +498,7 @@ class RoutedConnection:
     replica in another pod correctly comes up on the fallback transport.
     """
 
-    def __init__(self, router: ClusterRouter, endpoint: Endpoint, pid: int,
+    def __init__(self, router: ClusterRouter, endpoint: EndpointRecord, pid: int,
                  ring_capacity: int = 256, pin_idx: Optional[int] = None):
         self.router = router
         self.endpoint = endpoint
@@ -445,7 +617,7 @@ class RoutedConnection:
         target = self._ensure()
         try:
             return target.call(fn_id, arg_addr, **kw)
-        except ChannelError:
+        except _FAILOVER_ERRORS:
             if self._can_retry(arg_addr, kw):
                 # the endpoint failed over mid-call: retry once, re-wired
                 return self._ensure().call(fn_id, arg_addr, **kw)
@@ -456,7 +628,7 @@ class RoutedConnection:
         target = self._ensure()
         try:
             return target.call_inline(fn_id, arg_addr, **kw)
-        except ChannelError:
+        except _FAILOVER_ERRORS:
             if self._can_retry(arg_addr, kw):
                 return self._ensure().call_inline(fn_id, arg_addr, **kw)
             raise
@@ -474,7 +646,7 @@ class RoutedConnection:
         self._check_graph_args(target, args)
         try:
             return target.invoke(fn_id, *args, **kw)
-        except ChannelError:
+        except _FAILOVER_ERRORS:
             from .marshal import GraphRef
             if self.pin_idx is None and \
                     self.generation != self.endpoint.generation and \
@@ -494,7 +666,7 @@ class RoutedConnection:
             return target.invoke(fn_id, *args, **kw)
         except DeadlineExceeded:
             raise
-        except ChannelError:
+        except _FAILOVER_ERRORS:
             if self.pin_idx is None and \
                     self.generation != self.endpoint.generation:
                 return self.invoke_serialized(fn_id, *args, **kw)
@@ -515,9 +687,22 @@ class RoutedConnection:
             return target.invoke_async(fn_id, *args, **kw)
         from .marshal import GraphRef
         retryable = not any(isinstance(a, GraphRef) for a in args)
-        return RoutedRpcFuture(self, fn_id, args, kw,
-                               target.invoke_async(fn_id, *args, **kw),
-                               retryable)
+        try:
+            inner = target.invoke_async(fn_id, *args, **kw)
+        except _FAILOVER_ERRORS:
+            # the POST itself raced a failover/migration handoff: the old
+            # wire closed under us. Re-ensure rather than compare
+            # generations — a sibling thread that lost the same race may
+            # have re-wired (and synced the generation) already, so
+            # "target went stale" is the reliable signal. Plain-value
+            # args simply re-post against the live wire, like invoke().
+            if not retryable:
+                raise
+            fresh = self._ensure()
+            if fresh is target:
+                raise   # nothing failed over: a real caller-side error
+            inner = fresh.invoke_async(fn_id, *args, **kw)
+        return RoutedRpcFuture(self, fn_id, args, kw, inner, retryable)
 
     def invoke_stream(self, fn_id: int, *args, **kw):
         """Streaming typed invoke bound to the endpoint *name*: the same
@@ -664,13 +849,25 @@ class RoutedRpcFuture:
             self.retryable = False
         return cancelled
 
+    def _wire_stale(self) -> bool:
+        """Did this future's wire die with a failover/migration handoff?
+        A moved endpoint generation is the obvious signal; comparing the
+        inner future's connection against the handle's current target
+        additionally catches the shared-handle race where a sibling
+        thread already re-wired (and re-synced the generation) before
+        this thread observed its own call failing."""
+        rc = self.rc
+        if rc.generation != rc.endpoint.generation:
+            return True
+        inner_conn = getattr(self.inner, "conn", None)
+        return inner_conn is not None and inner_conn is not rc.target
+
     def result(self, timeout: Optional[float] = None):
         if self._settled:
             return self._value
         rc = self.rc
         try:
-            if self.retryable and not rc.closed and \
-                    rc.generation != rc.endpoint.generation:
+            if self.retryable and not rc.closed and self._wire_stale():
                 # the endpoint already failed over: give the dead ring
                 # one brief drain chance (the reply may have landed
                 # pre-crash), then fall through to the replica retry
@@ -680,9 +877,8 @@ class RoutedRpcFuture:
                 self._value = self.inner.result(timeout)
         except DeadlineExceeded:
             raise
-        except ChannelError:
-            if not self.retryable or rc.closed or \
-                    rc.generation == rc.endpoint.generation:
+        except _FAILOVER_ERRORS:
+            if not self.retryable or rc.closed or not self._wire_stale():
                 raise
             # mid-flight failover: the token names the dead server's
             # ring — re-marshal against the replica (sync; the pipeline
@@ -723,7 +919,7 @@ class RoutedRpcStream:
             return self.inner.next(timeout)
         except (DeadlineExceeded, StopIteration):
             raise
-        except ChannelError:
+        except _FAILOVER_ERRORS:
             if rc.generation != rc.endpoint.generation:
                 raise ChannelError(
                     "endpoint failed over mid-stream: the reply chain "
@@ -738,7 +934,7 @@ class BalancedConnection:
     """Replica load-balancing client handle (the overload-robust mode of
     an endpoint's replica chain).
 
-    Where ``RoutedConnection`` treats ``Endpoint.chain`` as a *failover*
+    Where ``RoutedConnection`` treats ``EndpointRecord.chain`` as a *failover*
     chain — one active channel, standbys idle until a lease lapse —
     ``BalancedConnection`` treats it as a *load-spread set*: every
     dispatch picks a live replica (``"power2"``: two random candidates,
@@ -756,7 +952,7 @@ class BalancedConnection:
     never retried here (the retry interceptor owns backoff policy).
     """
 
-    def __init__(self, router: ClusterRouter, endpoint: Endpoint, pid: int,
+    def __init__(self, router: ClusterRouter, endpoint: EndpointRecord, pid: int,
                  ring_capacity: int = 256, balance: str = "power2",
                  seed: int = 0):
         if balance not in ("power2", "rr"):
@@ -850,7 +1046,7 @@ class BalancedConnection:
                 return getattr(rc, method)(fn_id, *args, **kw)
             except (DeadlineExceeded, Overloaded):
                 raise   # backoff is the retry interceptor's job
-            except ChannelError:
+            except _FAILOVER_ERRORS:
                 # only a DEAD replica degrades to the next one, and only
                 # when the arguments pin nothing in its heap; anything
                 # else (bad fn_id, sealed-page violation, ...) surfaces
@@ -965,6 +1161,148 @@ class BalancedConnection:
                 rc.close()   # drops itself from router._conns
             except Exception:
                 pass
+
+
+class WildcardConnection:
+    """A client handle over an endpoint *prefix* (``"/pod0/kv/*"``).
+
+    Where ``RoutedConnection`` binds one endpoint name, a wildcard handle
+    re-resolves ``router.list_endpoints(prefix)`` on every dispatch and
+    round-robins across the live matches, lazily keeping one routed
+    sub-connection per matched endpoint. Siblings registered, drained,
+    migrated, or revived *after* the connect are discovered naturally —
+    no hardcoded names or pids — which is exactly what a client of a
+    sharded/migrating service family wants.
+
+    An endpoint that dies between listing and dispatch degrades to the
+    next match (plain routed-connection failover semantics otherwise
+    apply per endpoint); ``Overloaded``/``DeadlineExceeded`` surface for
+    the retry interceptor to handle, like every other handle."""
+
+    def __init__(self, router: ClusterRouter, pattern: str, pid: int,
+                 ring_capacity: int = 256):
+        if not pattern.endswith("*"):
+            raise ChannelError(
+                f"wildcard patterns end with '*', got {pattern!r}")
+        self.prefix = pattern[:-1]
+        if not self.prefix.startswith("/"):
+            raise ChannelError(
+                f"endpoint names are hierarchical paths, got {pattern!r}")
+        self.router = router
+        self.client_pid = pid
+        self.ring_capacity = ring_capacity
+        self.transport = "wildcard"
+        self.closed = False
+        self._rr = 0
+        self._subs: Dict[str, RoutedConnection] = {}
+        self.dispatched: Dict[str, int] = {}
+
+    # -- resolution ----------------------------------------------------------
+    def endpoints(self) -> List[str]:
+        """The live endpoint names under the prefix, right now."""
+        router = self.router
+        return [n for n in router.list_endpoints(self.prefix)
+                if not router.endpoints[n].dead]
+
+    def _sub(self, name: str) -> RoutedConnection:
+        rc = self._subs.get(name)
+        if rc is None:
+            rc = self.router.connect(name, self.client_pid,
+                                     self.ring_capacity)
+            self._subs[name] = rc
+        return rc
+
+    def _drop_sub(self, name: str) -> None:
+        rc = self._subs.pop(name, None)
+        if rc is not None:
+            try:
+                rc.close()
+            except Exception:
+                pass  # the dead server's heap may already be reclaimed
+
+    # -- dispatch ------------------------------------------------------------
+    def _dispatch(self, method: str, fn_id: int, args, kw):
+        if self.closed:
+            raise ChannelError("call on closed WildcardConnection")
+        tried: Set[str] = set()
+        while True:
+            live = [n for n in self.endpoints() if n not in tried]
+            if not live:
+                raise ChannelError(
+                    f"no live endpoint matches {self.prefix + '*'!r}")
+            name = live[self._rr % len(live)]
+            self._rr += 1
+            tried.add(name)
+            self.dispatched[name] = self.dispatched.get(name, 0) + 1
+            try:
+                return getattr(self._sub(name), method)(fn_id, *args, **kw)
+            except (DeadlineExceeded, Overloaded):
+                raise   # backoff is the retry interceptor's job
+            except _FAILOVER_ERRORS:
+                # only an endpoint that died under us degrades to the
+                # next match; anything else surfaces
+                ep = self.router.endpoints.get(name)
+                if ep is not None and not ep.dead:
+                    raise
+                self._drop_sub(name)
+
+    # -- the identical call surface (§5.6) ------------------------------------
+    def call(self, fn_id: int, arg_addr: int = gaddr.NULL, **kw) -> int:
+        return self._dispatch("call", fn_id, (arg_addr,), kw)
+
+    def call_inline(self, fn_id: int, arg_addr: int = gaddr.NULL,
+                    **kw) -> int:
+        return self._dispatch("call_inline", fn_id, (arg_addr,), kw)
+
+    def invoke(self, fn_id: int, *args, **kw):
+        return self._dispatch("invoke", fn_id, args, kw)
+
+    def invoke_serialized(self, fn_id: int, *args, **kw):
+        return self._dispatch("invoke_serialized", fn_id, args, kw)
+
+    def invoke_async(self, fn_id: int, *args, **kw):
+        return self._dispatch("invoke_async", fn_id, args, kw)
+
+    def invoke_stream(self, fn_id: int, *args, **kw):
+        return self._dispatch("invoke_stream", fn_id, args, kw)
+
+    # -- object construction -------------------------------------------------
+    def create_scope(self, size_bytes: int):
+        raise ChannelError(
+            "a wildcard handle has no single target heap — use "
+            "plain-value (byval) methods, or connect() to one of "
+            ".endpoints() for scope-based calls")
+
+    def new_bytes(self, data: bytes, scope=None) -> int:
+        raise ChannelError(
+            "a wildcard handle has no single target heap — pass bytes "
+            "as plain values and let each dispatch marshal them")
+
+    def build_graph(self, *values):
+        raise ChannelError(
+            "a wildcard handle has no single target heap — pass plain "
+            "values; each dispatch marshals against the endpoint it picks")
+
+    # -- stats ---------------------------------------------------------------
+    @property
+    def n_calls(self) -> int:
+        return sum(rc.n_calls for rc in self._subs.values())
+
+    @property
+    def n_invokes(self) -> int:
+        return sum(rc.n_invokes for rc in self._subs.values())
+
+    @property
+    def marshal_bytes(self) -> int:
+        return sum(rc.marshal_bytes for rc in self._subs.values())
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        if self.closed:
+            return
+        self.closed = True
+        for name in list(self._subs):
+            self._drop_sub(name)
 
 
 class _BalancedFuture:

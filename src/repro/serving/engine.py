@@ -344,6 +344,10 @@ class ServeEngine:
         self.orch = Orchestrator()
         self.client_pid, self.server_pid = 11, 12
         self.conn_id = self.client_pid  # pool pages owned by the client
+        if quota_pages is None:
+            # default from the central config (None there = unlimited)
+            from ..configs.global_config import global_config
+            quota_pages = global_config.quota_pages
         if quota_pages is not None:
             # §5.4 page quota: an admit that would push this connection
             # past ``quota_pages`` owned pool pages sheds with a typed

@@ -83,6 +83,25 @@ def test_bulk_artifact_contract():
     assert doc["rows"]["bulk_shared_flushes"] >= 1
 
 
+def test_migrate_artifact_contract():
+    """The live-migration committed proof: zero lost/mismatched replies
+    across the handoff, the restored replica served every pre-migration
+    sentinel, and the whole migration cost exactly ONE lease-handoff
+    (generation) epoch."""
+    doc = json.loads((REPO_ROOT / "BENCH_migrate.json").read_text())
+    assert doc["gate"] == {
+        "metric": "min(reply_integrity, state_intact, "
+                  "handoff_single_epoch, p99_blip_headroom)",
+        "op": ">=", "target": 1.0}
+    rows = doc["rows"]
+    assert rows["migrate_lost"] == 0
+    assert rows["migrate_mismatched"] == 0
+    assert rows["migrate_unexpected"] == 0
+    assert doc["handoff_epochs"] == 1
+    assert doc["measured"]["state_intact"] == 1.0
+    assert rows["migrate_drained"] == 1.0
+
+
 def test_marshal_cold_path_is_ungated():
     """The rebuild-per-call diagnostic (<1x by design) must live under
     the explicit cold_path object — never in the gated keys where its

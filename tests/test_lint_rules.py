@@ -120,10 +120,41 @@ class TestRPR005SwallowedChannelError:
         assert _codes(src) == []
 
 
+class TestRPR006BenchKnobs:
+    def test_knob_kwarg_in_benchmarks_flagged(self):
+        src = "r = ClusterRouter(orch, fallback_pool_size=4)\n"
+        assert _codes(src, "benchmarks/bulk.py") == ["RPR006"]
+
+    def test_channel_knob_in_benchmarks_flagged(self):
+        src = "ch = Channel(orch, name, 1, admission_wait_s=0.1)\n"
+        assert _codes(src, "benchmarks/soak.py") == ["RPR006"]
+
+    def test_config_route_ok(self):
+        src = ("cfg = global_config.clone(fallback_pool_size=4)\n"
+               "r = ClusterRouter(orch, config=cfg)\n")
+        assert _codes(src, "benchmarks/bulk.py") == []
+
+    def test_non_knob_kwargs_ok(self):
+        src = "ch = Channel(orch, name, 1, heap_pages=512)\n"
+        assert _codes(src, "benchmarks/migrate.py") == []
+
+    def test_knob_kwarg_outside_benchmarks_ok(self):
+        src = "r = ClusterRouter(orch, fallback_pool_size=4)\n"
+        assert _codes(src, "src/repro/serving/engine.py") == []
+
+
 class TestTreeIsClean:
     def test_src_has_zero_findings(self):
         root = _TOOL.parent.parent
         findings = lint_rules.lint_paths([str(root / "src")], root=root)
+        assert findings == [], "\n".join(
+            f"{p}:{ln}:{col}: {code} {msg}"
+            for p, ln, col, code, msg in findings)
+
+    def test_benchmarks_have_zero_findings(self):
+        root = _TOOL.parent.parent
+        findings = lint_rules.lint_paths(
+            [str(root / "benchmarks")], root=root)
         assert findings == [], "\n".join(
             f"{p}:{ln}:{col}: {code} {msg}"
             for p, ln, col, code, msg in findings)

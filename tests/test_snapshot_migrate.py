@@ -1,0 +1,578 @@
+"""Endpoint lifecycle, central config, snapshot/restore, live migration.
+
+The PR-10 API surface end to end:
+
+* ``repro.configs.ReproConfig`` — one config object for every tuning
+  knob, ``clone(**overrides)`` per-arm, env-var seeding.
+* ``lifecycle.Endpoint`` — serve/quiesce/drain/close states over
+  ``Channel.serve`` + ``ServerLoop`` (old entry points stay supported).
+* ``snapshot``/``restore`` — portable checkpoints of served channels;
+  state round-trips *exactly* (int dict keys, tuples, sets, bools —
+  everything ``core.serial`` alone would normalize away).
+* ``ClusterRouter.migrate`` — snapshot → warm replica → drain → single
+  lease-handoff epoch, with in-flight futures settled exactly once and
+  mid-stream calls surfacing the documented failover ``ChannelError``.
+
+Property drivers follow tests/test_marshal_roundtrip.py: a derandomized
+``hypothesis`` strategy when the [test] extra is installed, plus a
+fixed + seeded-random corpus that ALWAYS runs (the pinned container
+image has no hypothesis).
+"""
+
+import random
+import threading
+import time
+
+import pytest
+
+from repro.configs import ReproConfig, global_config
+from repro.core import (
+    CLOSED,
+    Channel,
+    ChannelError,
+    ClusterRouter,
+    DRAINED,
+    Endpoint,
+    Orchestrator,
+    Overloaded,
+    QUIESCED,
+    RPC,
+    SERVING,
+    Snapshot,
+    method,
+    restore,
+    serial,
+    service,
+    service_def,
+    snapshot,
+    sync_state,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pinned container image: corpus drivers only
+    HAVE_HYPOTHESIS = False
+
+
+@service(name="kv")
+class KV:
+    def __init__(self):
+        self.data = {}
+        self.meta = {"epoch": (1, 2), "tags": {7: "x"}, "flags": {True}}
+
+    @method(byval=True, retry=3)
+    def put(self, ctx, k, v):
+        self.data[k] = v
+        return v
+
+    @method(byval=True, retry=3)
+    def get(self, ctx, k):
+        return self.data.get(k, -1)
+
+    @method(byval=True, streaming=True)
+    def scan(self, ctx, n):
+        for i in range(int(n)):
+            yield i
+
+
+@service(name="hooked")
+class Hooked:
+    """Snapshot/restore hooks override the attribute walk (module level:
+    a portable blob names the class by import path)."""
+
+    def __init__(self):
+        self.big = object()   # never captured
+        self.n = 3
+
+    @method
+    def bump(self, ctx):
+        self.n += 1
+        return self.n
+
+    def __snapshot__(self):
+        return {"n": self.n}
+
+    def __restore__(self, state):
+        self.n = state["n"]
+        self.big = None
+
+
+def _serve(orch, name="/pod0/kv", pid=1, pod="pod0", router=None,
+           config=None):
+    ch = Channel(orch, name, server_pid=pid, heap_pages=512,
+                 config=config)
+    kv = KV()
+    ep = Endpoint.serve(ch, kv)
+    if router is not None:
+        router.register(name, ch, pod=pod)
+    return ch, kv, ep
+
+
+# ---------------------------------------------------------------------------
+# ReproConfig
+# ---------------------------------------------------------------------------
+class TestReproConfig:
+    def test_defaults_cover_the_tuning_surface(self):
+        cfg = ReproConfig()
+        assert cfg.admission_wait_s == 0.05
+        assert cfg.admission_max_waiters == 8
+        assert cfg.fallback_pool_size >= 1
+        assert cfg.migrate_drain_timeout_s > 0
+        assert cfg.migrate_retry_after_s > 0
+
+    def test_clone_overrides_without_mutating_base(self):
+        cfg = ReproConfig()
+        c2 = cfg.clone(admission_wait_s=0.5, fallback_pool_size=7)
+        assert c2.admission_wait_s == 0.5
+        assert c2.fallback_pool_size == 7
+        assert cfg.admission_wait_s == 0.05
+
+    def test_clone_rejects_unknown_knob(self):
+        with pytest.raises(AttributeError):
+            ReproConfig().clone(no_such_knob=1)
+
+    def test_channel_reads_global_config_by_default(self):
+        orch = Orchestrator()
+        ch = Channel(orch, "/t/cfg", server_pid=1, heap_pages=64)
+        assert ch.config is global_config
+        ch.destroy()
+
+    def test_channel_honors_cloned_config(self):
+        orch = Orchestrator()
+        cfg = global_config.clone(admission_wait_s=0.125,
+                                  admission_max_waiters=3)
+        ch = Channel(orch, "/t/cfg2", server_pid=1, heap_pages=64,
+                     config=cfg)
+        conn = RPC(orch, pid=2).connect("/t/cfg2")
+        assert conn.admission_wait_s == 0.125
+        assert conn.admission_max_waiters == 3
+        ch.destroy()
+
+    def test_router_knobs_come_from_config(self):
+        orch = Orchestrator()
+        cfg = global_config.clone(fallback_pool_size=5,
+                                  fallback_one_sided=False)
+        router = ClusterRouter(orch, config=cfg)
+        assert router.fallback_pool_size == 5
+        assert router.fallback_one_sided is False
+        # explicit kwarg still overrides the config
+        router2 = ClusterRouter(orch, fallback_pool_size=9, config=cfg)
+        assert router2.fallback_pool_size == 9
+
+    def test_env_seeding(self, monkeypatch):
+        monkeypatch.setenv("REPRO_ADMISSION_WAIT_S", "0.25")
+        monkeypatch.setenv("REPRO_FALLBACK_POOL_SIZE", "6")
+        cfg = ReproConfig()
+        assert cfg.admission_wait_s == 0.25
+        assert cfg.fallback_pool_size == 6
+
+
+# ---------------------------------------------------------------------------
+# Endpoint lifecycle
+# ---------------------------------------------------------------------------
+class TestEndpointLifecycle:
+    def test_serve_quiesce_resume_drain_close(self):
+        orch = Orchestrator()
+        ch, kv, ep = _serve(orch)
+        conn = RPC(orch, pid=2).connect("/pod0/kv")
+        stub = service_def(KV).stub(conn)
+        assert ep.state == SERVING
+        assert stub.put(1, 7) == 7
+
+        ep.quiesce()
+        assert ep.state == QUIESCED
+        with pytest.raises(Overloaded):
+            stub.get(1)
+
+        ep.resume()
+        assert ep.state == SERVING
+        assert stub.get(1) == 7
+        assert ep.n_shed >= 1   # the quiesce window's shed was counted
+
+        assert ep.drain(timeout_s=1.0) is True
+        assert ep.state == DRAINED
+        ep.close()
+        assert ep.state == CLOSED
+        assert "/pod0/kv" not in orch.channels
+        ep.close()   # idempotent
+
+    def test_closed_endpoint_rejects_transitions(self):
+        orch = Orchestrator()
+        _, _, ep = _serve(orch, name="/t/lc2")
+        ep.close()
+        for fn in (ep.start, ep.quiesce, ep.resume, ep.drain):
+            with pytest.raises(ChannelError):
+                fn()
+
+    def test_context_manager_closes(self):
+        orch = Orchestrator()
+        with Endpoint.serve(Channel(orch, "/t/lc3", server_pid=1,
+                                    heap_pages=64), KV()) as ep:
+            assert ep.state == SERVING
+        assert ep.state == CLOSED
+
+    def test_old_entry_points_still_work(self):
+        """Channel.serve + serve_all stay supported verbatim."""
+        orch = Orchestrator()
+        ch = Channel(orch, "/t/legacy", server_pid=1, heap_pages=64)
+        ch.serve(KV())
+        loop = Channel.serve_all([ch])
+        try:
+            conn = RPC(orch, pid=2).connect("/t/legacy")
+            assert service_def(KV).stub(conn).put(5, 25) == 25
+        finally:
+            loop.stop()
+            ch.destroy()
+
+
+# ---------------------------------------------------------------------------
+# snapshot / restore
+# ---------------------------------------------------------------------------
+class TestSnapshotRestore:
+    def _served(self, orch):
+        ch, kv, ep = _serve(orch, name="/t/snap", pid=10)
+        conn = RPC(orch, pid=11).connect("/t/snap")
+        stub = service_def(KV).stub(conn)
+        for k in range(8):
+            stub.put(k, k * 31)
+        kv.data[(-5)] = 99          # int keys must survive exactly
+        return ch, kv, ep, stub
+
+    def test_state_roundtrip_is_exact(self):
+        orch = Orchestrator()
+        ch, kv, ep, _ = self._served(orch)
+        snap = snapshot(ch)
+        r = restore(Snapshot.from_bytes(snap.to_bytes()), orch=orch,
+                    start=False)
+        # not just equal: key/value TYPES survive (serial alone would
+        # stringify the int keys and intify the bools)
+        assert r.instance.data == kv.data
+        assert all(type(k) is int for k in r.instance.data)
+        assert r.instance.meta == kv.meta
+        assert type(r.instance.meta["epoch"]) is tuple
+        assert r.instance.meta["flags"] == {True}
+        r.channel.destroy()
+        ep.close()
+
+    def test_unserved_channel_rejected(self):
+        orch = Orchestrator()
+        ch = Channel(orch, "/t/bare", server_pid=1, heap_pages=64)
+        with pytest.raises(ChannelError):
+            snapshot(ch)
+        ch.destroy()
+
+    def test_meta_describes_the_channel(self):
+        orch = Orchestrator()
+        ch, kv, ep, _ = self._served(orch)
+        snap = snapshot(ch)
+        assert snap.service == "kv"
+        assert snap.meta["channel"] == "/t/snap"
+        assert snap.meta["heap_pages"] == 512
+        assert snap.meta["connections"] == 1
+        assert snap.meta["pages_used"] > 0
+        assert snap.meta["fn_ids"]
+        ep.close()
+
+    def test_version_mismatch_rejected(self):
+        bad = serial.encode([99, "m:C", b"", {}, []])
+        with pytest.raises(ChannelError):
+            Snapshot.from_bytes(bad)
+
+    def test_unencodable_attrs_are_recorded_not_silent(self):
+        orch = Orchestrator()
+        ch, kv, ep, _ = self._served(orch)
+        kv.hook = lambda: None      # not snapshot-able
+        snap = snapshot(ch)
+        assert snap.skipped == ["hook"]
+        r = restore(snap, orch=orch, start=False)
+        assert not hasattr(r.instance, "hook")
+        r.channel.destroy()
+        ep.close()
+
+    def test_snapshot_restore_hooks_override_walk(self):
+        orch = Orchestrator()
+        ch = Channel(orch, "/t/hooked", server_pid=1, heap_pages=64)
+        ep = Endpoint.serve(ch, Hooked())
+        snap = snapshot(ch)
+        assert snap.skipped == []
+        r = restore(Snapshot.from_bytes(snap.to_bytes()), orch=orch,
+                    start=False)
+        assert r.instance.n == 3 and r.instance.big is None
+        r.channel.destroy()
+        ep.close()
+
+    def test_restored_replica_serves_identical_replies(self):
+        """The round-trip gate: for a corpus of calls the restored
+        replica's serialized replies are bitwise-identical to the
+        source's."""
+        orch = Orchestrator()
+        ch, kv, ep, stub = self._served(orch)
+        r = restore(snapshot(ch), orch=orch, start=True)
+        conn2 = RPC(orch, pid=12).connect(r.channel.name)
+        stub2 = service_def(KV).stub(conn2)
+        for k in list(range(8)) + [12345]:
+            a, b = stub.get(k), stub2.get(k)
+            assert a == b
+            assert serial.encode(a) == serial.encode(b)
+        r.close()
+        ep.close()
+
+    def test_restore_mints_fresh_channel_name_and_pid(self):
+        orch = Orchestrator()
+        ch, kv, ep, _ = self._served(orch)
+        r1 = restore(snapshot(ch), orch=orch, start=False)
+        r2 = restore(snapshot(ch), orch=orch, start=False)
+        assert r1.channel.name == "/t/snap~r1"
+        assert r2.channel.name == "/t/snap~r2"
+        assert len({ch.server_pid, r1.server_pid, r2.server_pid}) == 3
+        r1.channel.destroy()
+        r2.channel.destroy()
+        ep.close()
+
+    def test_sync_state_stop_and_copy(self):
+        a, b = KV(), KV()
+        a.data = {1: 2, 3: 4}
+        n = sync_state(a, b)
+        assert n >= 2 and b.data == a.data
+
+
+# ---------------------------------------------------------------------------
+# exact-state property: fixed + seeded corpus (always) and hypothesis
+# ---------------------------------------------------------------------------
+def _roundtrip_state(value):
+    """snapshot → portable bytes → restore preserves the value exactly."""
+    from repro.core.snapshot import _pack, _unpack
+    got = _unpack(serial.decode(serial.encode(_pack(value))))
+    assert got == value
+    assert type(got) is type(value)
+
+
+FIXED_CORPUS = [
+    {},
+    {1: 2, -3: 4},
+    {True: "t", False: "f"},
+    {(1, 2): [3, 4], "s": {5, 6}},
+    {None: b"bytes", 2.5: (1, (2, (3,)))},
+    [{"nested": {7: {8: {9: ()}}}}],
+    ({"a": 1}, [2.0, -0.0], {b"k": None}),
+]
+
+
+@pytest.mark.parametrize("value", FIXED_CORPUS,
+                         ids=[f"fixed{i}" for i in range(len(FIXED_CORPUS))])
+def test_state_roundtrip_fixed_corpus(value):
+    _roundtrip_state(value)
+
+
+def _rand_value(rng, depth=0):
+    leaf = (lambda: None, lambda: rng.choice([True, False]),
+            lambda: rng.randint(-2**40, 2**40),
+            lambda: rng.random() * 1e6,
+            lambda: "s" * rng.randrange(4),
+            lambda: bytes(rng.randrange(256) for _ in range(3)))
+    if depth >= 3 or rng.random() < 0.4:
+        return rng.choice(leaf)()
+    kind = rng.randrange(4)
+    n = rng.randrange(4)
+    if kind == 0:
+        return [_rand_value(rng, depth + 1) for _ in range(n)]
+    if kind == 1:
+        return tuple(_rand_value(rng, depth + 1) for _ in range(n))
+    if kind == 2:
+        return {rng.randint(-999, 999): _rand_value(rng, depth + 1)
+                for _ in range(n)}
+    return {str(i): _rand_value(rng, depth + 1) for i in range(n)}
+
+
+def test_state_roundtrip_seeded_corpus():
+    rng = random.Random(1234)
+    for _ in range(200):
+        _roundtrip_state(_rand_value(rng))
+
+
+if HAVE_HYPOTHESIS:
+    _keys = (st.none() | st.booleans() |
+             st.integers(-2**40, 2**40) | st.text(max_size=6) |
+             st.binary(max_size=6))
+    _values = st.recursive(
+        _keys | st.floats(allow_nan=False, allow_infinity=False),
+        lambda inner: st.lists(inner, max_size=4)
+        | st.dictionaries(_keys, inner, max_size=4)
+        | st.tuples(inner, inner),
+        max_leaves=16)
+
+    @settings(max_examples=150, derandomize=True, deadline=None)
+    @given(_values)
+    def test_state_roundtrip_hypothesis(value):
+        _roundtrip_state(value)
+
+
+# ---------------------------------------------------------------------------
+# live migration
+# ---------------------------------------------------------------------------
+class TestMigrate:
+    def _cluster(self):
+        orch = Orchestrator()
+        router = ClusterRouter(orch)
+        ch, kv, ep = _serve(orch, router=router)
+        orch.assign_pod(1, "pod0")
+        stub = router.stub("/pod0/kv", KV, pid=200, pod="pod0")
+        return orch, router, ch, kv, ep, stub
+
+    def test_migrate_hands_off_in_one_epoch(self):
+        orch, router, ch, kv, ep, stub = self._cluster()
+        for k in range(16):
+            stub.put(k, k * 31)
+        rep = router.migrate("/pod0/kv", dst_pod="pod0")
+        assert rep.handoff_epochs == 1
+        assert rep.drained is True
+        assert rep.dst_channel == "/pod0/kv~r1"
+        assert router.n_migrations == 1
+        # the SAME stub transparently re-wires and reads migrated state
+        for k in range(16):
+            assert stub.get(k) == k * 31
+        assert stub.put(99, 1) == 1
+        # source channel is unregistered; replica serves under the name
+        assert "/pod0/kv" not in orch.channels
+        assert "/pod0/kv~r1" in orch.channels
+        stub.close()
+        rep.restored.close()
+
+    def test_in_flight_futures_settle_exactly_once(self):
+        orch, router, ch, kv, ep, stub = self._cluster()
+        results, lock = [], threading.Lock()
+        n = 24
+
+        def worker(i):
+            # the drain window sheds with typed Overloaded + retry-after:
+            # a shed op is *settled*, not lost — the client retries it
+            while True:
+                fut = stub.put.future(i, i * 7)
+                try:
+                    got = fut.result(timeout=4.0)
+                    break
+                except Overloaded as e:
+                    time.sleep(e.retry_after_s or 0.002)
+            with lock:
+                results.append((i, got))
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n)]
+        for t in threads:
+            t.start()
+        rep = router.migrate("/pod0/kv", dst_pod="pod0")
+        for t in threads:
+            t.join()
+        assert rep.handoff_epochs == 1
+        # exactly one settlement per future, each with the right value
+        assert sorted(i for i, _ in results) == list(range(n))
+        assert all(got == i * 7 for i, got in results)
+        # and the writes landed exactly once on the surviving replica
+        for i in range(n):
+            assert stub.get(i) == i * 7
+        stub.close()
+        rep.restored.close()
+
+    def test_mid_stream_migrate_surfaces_documented_error(self):
+        orch, router, ch, kv, ep, stub = self._cluster()
+        stream = stub.scan.stream(1000)
+        assert next(stream) == 0     # chunk delivered pre-migration
+        rep = router.migrate("/pod0/kv", dst_pod="pod0",
+                             drain_timeout_s=0.2)
+        assert rep.drained is False  # the live stream kept the source busy
+        with pytest.raises(ChannelError, match="failed over mid-stream"):
+            while True:
+                stream.next(timeout=0.5)
+        # a NEW stream against the migrated endpoint works
+        assert list(stub.scan.stream(4)) == [0, 1, 2, 3]
+        stub.close()
+        rep.restored.close()
+
+    def test_drain_window_sheds_typed_overloaded(self):
+        orch, router, ch, kv, ep, stub = self._cluster()
+        rep = router.migrate("/pod0/kv", dst_pod="pod0")
+        assert rep.shed_during_drain >= 0   # no traffic -> usually 0
+        # post-migrate the endpoint admits again
+        assert stub.put(5, 6) == 6
+        stub.close()
+        rep.restored.close()
+
+    def test_migrate_unknown_endpoint_raises(self):
+        orch = Orchestrator()
+        router = ClusterRouter(orch)
+        with pytest.raises(ChannelError):
+            router.migrate("/no/such", dst_pod="pod0")
+
+
+# ---------------------------------------------------------------------------
+# wildcard prefix stubs
+# ---------------------------------------------------------------------------
+class TestWildcard:
+    def _cluster(self):
+        orch = Orchestrator()
+        router = ClusterRouter(orch)
+        for i in range(3):
+            ch = Channel(orch, f"/pod0/kv/s{i}", server_pid=1 + i,
+                         heap_pages=256)
+            Endpoint.serve(ch, KV())
+            router.register(f"/pod0/kv/s{i}", ch, pod="pod0")
+            orch.assign_pod(1 + i, "pod0")
+        return orch, router
+
+    def test_wildcard_spreads_over_prefix(self):
+        orch, router = self._cluster()
+        stub = router.stub("/pod0/kv/*", KV, pid=300, pod="pod0")
+        for i in range(9):
+            assert stub.put(i, i + 1) == i + 1
+        wc = stub.connection
+        assert wc.transport == "wildcard"
+        assert len(wc.dispatched) == 3        # round-robined all three
+        assert sorted(wc.endpoints()) == [f"/pod0/kv/s{i}"
+                                          for i in range(3)]
+        stub.close()
+
+    def test_wildcard_sees_migrated_sibling(self):
+        orch, router = self._cluster()
+        stub = router.stub("/pod0/kv/*", KV, pid=300, pod="pod0")
+        assert stub.put(1, 2) == 2
+        rep = router.migrate("/pod0/kv/s1", dst_pod="pod0")
+        for i in range(6):
+            assert stub.put(10 + i, i) == i
+        assert sorted(stub.connection.endpoints()) == \
+            [f"/pod0/kv/s{i}" for i in range(3)]
+        stub.close()
+        rep.restored.close()
+
+    def test_wildcard_rejects_balance_and_scopes(self):
+        orch, router = self._cluster()
+        with pytest.raises(ChannelError):
+            router.stub("/pod0/kv/*", KV, pid=301, balance="power2")
+        wc = router.connect("/pod0/kv/*", pid=302)
+        with pytest.raises(ChannelError):
+            wc.create_scope(64)
+        wc.close()
+
+
+# ---------------------------------------------------------------------------
+# sanitizer: a full migrate leaves no stale-scope/leak findings
+# ---------------------------------------------------------------------------
+class TestShmCheckMigrate:
+    def test_migrate_is_shmcheck_clean(self):
+        from repro.analysis import session
+        with session() as tr:
+            orch = Orchestrator()
+            router = ClusterRouter(orch)
+            ch, kv, ep = _serve(orch, router=router)
+            orch.assign_pod(1, "pod0")
+            stub = router.stub("/pod0/kv", KV, pid=200, pod="pod0")
+            for k in range(12):
+                stub.put(k, k)
+            rep = router.migrate("/pod0/kv", dst_pod="pod0")
+            for k in range(12):
+                assert stub.get(k) == k
+            stub.close()
+            rep.restored.close()
+        rules = {f.rule for f in tr.findings}
+        assert "SHM103" not in rules, [str(f) for f in tr.findings]
+        assert "SHM104" not in rules, [str(f) for f in tr.findings]

@@ -22,6 +22,11 @@ Five rules, each born from a bug class this repo has actually shipped
 * RPR005  silently-swallowed ``ChannelError``: the base class covers
           closed connections and protocol misuse — swallow the retryable
           ``WaitTimeout`` subclass and nothing else.
+* RPR006  tuning knobs passed as raw constructor kwargs in
+          ``benchmarks/``: benchmark arms must read their tuning from the
+          central ``repro.configs.ReproConfig`` (``global_config.clone``
+          → ``config=``), or two arms silently diverge on defaults the
+          artifact never records.
 
 Stdlib-only (``ast``); runnable as ``python tools/lint_rules.py src tests``.
 Output is ruff-style ``file:line:col: RPR00X message``; exit 1 on findings.
@@ -49,6 +54,18 @@ RAW_STORE_NAMES = {"write_fast", "_daemon_write"}
 ALLOC_NAMES = {"create_scope", "alloc_pages"}
 ASSERT_SCOPE = ("repro/core/", "repro/serving/")
 CLOCK_SCOPE = "repro/core/"
+# RPR006: constructors that accept ReproConfig-owned knobs, and the
+# knob kwargs that must flow through config= in benchmarks/
+CONFIG_CTORS = {"Channel", "Connection", "ClusterRouter", "RPC"}
+CONFIG_KNOBS = {
+    "admission_wait_s", "admission_max_waiters", "stream_pump_burst",
+    "wait_fixed_sleep_us", "wait_window",
+    "fallback_pages", "fallback_link_latency_us", "fallback_ring_capacity",
+    "fallback_pool_size", "fallback_stripe", "fallback_one_sided",
+    "quota_pages", "lease_ttl_s",
+    "migrate_drain_timeout_s", "migrate_retry_after_s",
+}
+BENCH_SCOPE = "benchmarks/"
 
 
 def _norm(relpath: str) -> str:
@@ -149,6 +166,15 @@ class _Linter(ast.NodeVisitor):
                               f"module-level random.{fn.attr}() in core/ "
                               "is unreproducible; use a seeded "
                               "random.Random instance")
+        if _in_scope(self.relpath, BENCH_SCOPE) and name in CONFIG_CTORS:
+            for kw in node.keywords:
+                if kw.arg in CONFIG_KNOBS:
+                    self._add(node, "RPR006",
+                              f"{name}({kw.arg}=...) in benchmarks/ — "
+                              "route tuning through repro.configs "
+                              "ReproConfig (global_config.clone(...) -> "
+                              "config=) so both arms and the artifact "
+                              "agree on the knobs")
         self.generic_visit(node)
 
     # RPR003 ------------------------------------------------------------
